@@ -1,0 +1,64 @@
+"""Kernel micro-benchmarks (portable-path wall time on CPU + derived rates).
+
+The TPU Pallas kernels cannot be timed in this container; these numbers track
+the portable path's throughput for regression purposes, and the derived column
+reports achieved GFLOP/s so changes to the blockwise implementations are
+visible in CI.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_matmul():
+    m = n = k = 1024
+    a = jnp.ones((m, k), jnp.float32)
+    b = jnp.ones((k, n), jnp.float32)
+    f = jax.jit(lambda a, b: ops.matmul(a, b, backend="xla"))
+    dt = _time(f, a, b)
+    return dt, 2 * m * n * k / dt / 1e9
+
+
+def bench_attention():
+    B, Hq, Hkv, S, D = 1, 8, 4, 1024, 64
+    q = jnp.ones((B, Hq, S, D), jnp.float32)
+    k = jnp.ones((B, Hkv, S, D), jnp.float32)
+    v = jnp.ones((B, Hkv, S, D), jnp.float32)
+    f = jax.jit(lambda q, k, v: ops.attention(q, k, v, backend="xla", block_kv=256))
+    dt = _time(f, q, k, v)
+    flops = 4 * B * Hq * S * S * D / 2  # causal
+    return dt, flops / dt / 1e9
+
+
+def bench_ssd():
+    B, H, G, S, P, N = 1, 8, 1, 2048, 32, 64
+    x = jnp.ones((B, H, S, P), jnp.float32)
+    la = -jnp.ones((B, H, S), jnp.float32) * 0.1
+    b = jnp.ones((B, G, S, N), jnp.float32)
+    c = jnp.ones((B, G, S, N), jnp.float32)
+    f = jax.jit(lambda x, la, b, c: ops.ssd(x, la, b, c, chunk=128, backend="xla"))
+    dt = _time(f, x, la, b, c)
+    q = 128
+    flops = B * H * S * (2 * q * (P + N) + 4 * P * N)
+    return dt, flops / dt / 1e9
+
+
+ALL = {"kern_matmul_1k": bench_matmul, "kern_attn_1k": bench_attention,
+       "kern_ssd_2k": bench_ssd}

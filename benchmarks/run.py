@@ -1,0 +1,73 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entrypoint: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One benchmark per paper table/figure (Tables 1/2/4/5, Figs 8/14/15+16) plus
+the kernel micro-benchmarks and the roofline reader over the dry-run
+artifacts. Output: ``name,us_per_call,derived`` CSV lines, followed by the
+detail blocks.
+"""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+
+def _run(name, fn, details):
+    t0 = time.perf_counter()
+    rows, summary = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    derived = ";".join(
+        f"{k}={v:.4g}" if isinstance(v, (int, float)) else f"{k}={v}"
+        for k, v in summary.items()
+        if not isinstance(v, dict)
+    )
+    print(f"{name},{us:.0f},{derived}")
+    details.append((name, rows, summary))
+
+
+def main() -> None:
+    from benchmarks import kernels_bench, roofline, tables
+
+    details: list = []
+    _run("table1_precision", tables.table1_precision, details)
+    _run("table2_offloads", tables.table2_offloads, details)
+    _run("table4_ns_vs_ntx", tables.table4_ns_vs_ntx, details)
+    _run("table5_efficiency", tables.table5_efficiency, details)
+    _run("fig8_vfs", tables.fig8_vfs, details)
+    _run("fig14_mesh_scaling", tables.fig14_mesh_scaling, details)
+    _run("fig15_16_datacenter", tables.fig15_16_datacenter, details)
+
+    for name, fn in kernels_bench.ALL.items():
+        t0 = time.perf_counter()
+        dt, gflops = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"{name},{dt * 1e6:.0f},gflops={gflops:.2f}")
+
+    # roofline summary over dry-run artifacts (if present)
+    if Path("artifacts/dryrun").exists():
+        t0 = time.perf_counter()
+        cells = roofline.load_cells()
+        rows = roofline.table(cells, "single")
+        us = (time.perf_counter() - t0) * 1e6
+        if rows:
+            worst = min(rows, key=lambda r: r["roofline_fraction"])
+            best = max(rows, key=lambda r: r["roofline_fraction"])
+            print(
+                f"roofline_single_pod,{us:.0f},cells={len(rows)};"
+                f"worst={worst['arch']}/{worst['shape']}({worst['roofline_fraction']:.2f});"
+                f"best={best['arch']}/{best['shape']}({best['roofline_fraction']:.2f})"
+            )
+            roofline.main()
+
+    print()
+    for name, rows, summary in details:
+        print(f"== {name} ==")
+        for r in rows:
+            print("  ", *(f"{x:.4g}" if isinstance(x, float) else x for x in r))
+        for k, v in summary.items():
+            print(f"   -> {k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""The paper's evaluation workloads (Tables 3-5): op counts + memory footprints.
+
+Flop counts are the standard published per-image inference numbers (2 flops
+per MAC); training = 3x inference (fwd + dL/dx + dL/dw). Param/activation
+footprints are the paper's own Table 3. DMA traffic per image follows the
+tile-streaming model of §3.1: weights + activations streamed once per pass,
+with a re-read factor kappa for halo overlap and weight re-streaming across
+output tiles, calibrated once on the paper's GoogLeNet numbers (Table 4) and
+applied to all CNNs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Workload:
+    name: str
+    inference_gflop: float  # per image
+    param_mb: float  # Table 3
+    act_mb: float  # Table 3
+
+    @property
+    def train_gflop(self) -> float:
+        return 3.0 * self.inference_gflop
+
+    def dma_bytes(self, training: bool, kappa: float = 1.56) -> float:
+        """Bytes moved per image (fp32). Forward: acts in+out once + weights;
+        training adds activation re-reads and gradient writes."""
+        p = self.param_mb * 1e6
+        a = self.act_mb * 1e6
+        if training:
+            # fwd store acts, bwd read acts + write act-grads, weights fwd+bwd,
+            # weight grads written + optimizer read/write
+            return kappa * (6.0 * a + 5.0 * p)
+        return kappa * (2.0 * a + 1.0 * p)
+
+
+# Table 3 footprints; flops from the networks' papers (2 x MACs).
+WORKLOADS = {
+    "alexnet": Workload("alexnet", 1.45, 232.5, 6.0),
+    "googlenet": Workload("googlenet", 3.17, 26.7, 46.5),
+    "inception_v3": Workload("inception_v3", 11.4, 90.8, 99.2),
+    "resnet34": Workload("resnet34", 7.3, 176.2, 28.3),
+    "resnet50": Workload("resnet50", 8.2, 174.6, 67.1),
+    "resnet152": Workload("resnet152", 22.6, 306.4, 154.4),
+    # LSTM 512x512: pure GEMM, tiny activations (efficiency-bound by compute)
+    "lstm512": Workload("lstm512", 0.0042 * 512, 8.4, 2.0),
+}
+
+CNNS = ["alexnet", "googlenet", "inception_v3", "resnet34", "resnet50", "resnet152"]
+
+# Paper Table 5 energy-efficiency values [Gflop/s/W] for comparison.
+PAPER_TABLE5 = {
+    ("ntx16", "28nm"): 22.3,
+    ("ntx32", "28nm"): 29.9,
+    ("ntx64", "28nm"): 38.6,
+    ("ntx16", "14nm"): 32.8,
+    ("ntx32", "14nm"): 43.2,
+    ("ntx64", "14nm"): 54.9,
+    ("ntx128", "14nm"): 65.8,
+    ("ntx256", "14nm"): 74.4,
+    ("ntx512", "14nm"): 78.5,
+}
+PAPER_GPU_GEOMEAN = {"28nm": 11.8, "14nm_16nm": 20.4}  # Titan X / P100
+PAPER_TABLE4 = {
+    # (config): (train_ms, train_eff, infer_ms, infer_eff)
+    "ns16": (56.8, 15.0, 14.0, 20.3),
+    "ntx16": (34.8, 21.0, 11.3, 21.4),
+    "ntx64": (8.69, 38.3, 2.83, 39.1),
+}

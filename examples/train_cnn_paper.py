@@ -1,0 +1,89 @@
+"""The paper's own workload: train a small GoogLeNet-style CNN with the
+NTX machinery — conv layers run through the strided-conv-decomposition VJP
+(C4), the forward through the reference conv, the optimizer is plain SGD
+(the paper's algorithm).
+
+    PYTHONPATH=src python examples/train_cnn_paper.py --steps 40
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.conv_decomp import conv2d_with_decomposed_vjp
+from repro.optim.optimizers import apply_updates, sgd
+
+
+def init_cnn(rng, n_classes=10):
+    ks = jax.random.split(rng, 5)
+    # stem (stride 2, the paper's 7x7/2 shrunk) + two conv blocks + classifier
+    return {
+        "c1": jax.random.normal(ks[0], (5, 5, 3, 16)) * 0.1,
+        "c2": jax.random.normal(ks[1], (3, 3, 16, 32)) * 0.1,
+        "c3": jax.random.normal(ks[2], (3, 3, 32, 32)) * 0.1,
+        "fc": jax.random.normal(ks[3], (32, n_classes)) * 0.1,
+    }
+
+
+def forward(params, x):
+    h = conv2d_with_decomposed_vjp(x, params["c1"], stride=2, padding=2)
+    h = jax.nn.relu(h)
+    h = conv2d_with_decomposed_vjp(h, params["c2"], stride=2, padding=1)
+    h = jax.nn.relu(h)
+    h = conv2d_with_decomposed_vjp(h, params["c3"], stride=1, padding=1)
+    h = jax.nn.relu(h)
+    h = h.mean(axis=(1, 2))  # GAP
+    return h @ params["fc"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--img", type=int, default=32)
+    args = ap.parse_args()
+
+    rng = np.random.RandomState(0)
+    n_classes = 10
+    params = init_cnn(jax.random.PRNGKey(0), n_classes)
+    opt = sgd(lr=0.05, momentum=0.9)
+    opt_state = opt.init(params)
+
+    # synthetic separable image classes (class = dominant frequency band)
+    def make_batch():
+        y = rng.randint(0, n_classes, args.batch)
+        base = np.linspace(0, 3.14 * 4, args.img)
+        imgs = np.stack([
+            np.sin(base[None, :] * (1 + c)) * np.cos(base[:, None] * (1 + c))
+            for c in y
+        ])[..., None].repeat(3, axis=-1)
+        imgs += rng.randn(*imgs.shape) * 0.1
+        return jnp.asarray(imgs, jnp.float32), jnp.asarray(y)
+
+    @jax.jit
+    def step(params, opt_state, x, y):
+        def loss_fn(p):
+            logits = forward(p, x)
+            return -jnp.mean(
+                jnp.take_along_axis(jax.nn.log_softmax(logits), y[:, None], 1)
+            )
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    t0 = time.time()
+    for i in range(args.steps):
+        x, y = make_batch()
+        params, opt_state, loss = step(params, opt_state, x, y)
+        if i % 5 == 0:
+            print(f"step {i:3d}  loss={float(loss):.4f}")
+    print(f"final loss={float(loss):.4f}  ({time.time() - t0:.1f}s) — "
+          "backward pass ran through the paper's C4 decomposition")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""End-to-end training driver: data pipeline -> decoder LM -> SGD/AdamW ->
+async checkpoints -> fault-tolerant supervisor. The e2e deliverable: train a
+~100M-parameter model for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+    PYTHONPATH=src python examples/train_lm.py --preset 20m  --steps 200   # faster
+
+A crash can be injected to demonstrate recovery:
+
+    PYTHONPATH=src python examples/train_lm.py --preset 20m --steps 60 --crash-at 30
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import DataIterator, InMemoryDataset
+from repro.launch.train import init_train_state, make_train_step
+from repro.models import flops as flops_mod
+from repro.models.config import ModelConfig, ParallelCtx
+from repro.optim.optimizers import adamw
+from repro.runtime.supervisor import FailureInjector, Supervisor
+
+PRESETS = {
+    # ~107M params: a qwen-style dense decoder
+    "100m": dict(n_layers=8, d_model=640, n_heads=10, n_kv_heads=5, head_dim=64,
+                 d_ff=1792, vocab_size=32_000, seq=128, batch=6),
+    # ~21M params: quick CPU runs
+    "20m": dict(n_layers=6, d_model=320, n_heads=5, n_kv_heads=5, head_dim=64,
+                d_ff=896, vocab_size=16_000, seq=128, batch=8),
+}
+
+
+def build_config(preset: str) -> tuple[ModelConfig, int, int]:
+    p = dict(PRESETS[preset])
+    seq, batch = p.pop("seq"), p.pop("batch")
+    cfg = ModelConfig(name=f"lm-{preset}", family="dense", qk_norm=True,
+                      rope_theta=1e4, dtype=jnp.float32, **p)
+    return cfg, seq, batch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="20m", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="artifacts/train_lm_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--crash-at", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg, seq, batch = build_config(args.preset)
+    n = flops_mod.count(cfg).params_total
+    print(f"model: {cfg.name}  params={n/1e6:.1f}M  seq={seq} batch={batch}")
+
+    ctx = ParallelCtx(attn_backend="xla")
+    dataset = InMemoryDataset.synthetic(4_000_000, cfg.vocab_size, seq, seed=0)
+    iterator = DataIterator(dataset, batch_size=batch, seed=0)
+    opt = adamw(lr=args.lr, weight_decay=0.01)
+
+    def init_state(mesh):
+        return init_train_state(jax.random.PRNGKey(0), cfg, opt)
+
+    def make_step(mesh):
+        return jax.jit(make_train_step(cfg, ctx, opt), donate_argnums=(0,))
+
+    injector = FailureInjector({args.crash_at: "crash"} if args.crash_at else {})
+    t0 = time.time()
+    losses = []
+
+    def on_metrics(step, metrics):
+        ce = float(metrics["ce"])
+        losses.append(ce)
+        if step % 10 == 0:
+            dt = time.time() - t0
+            tok_s = step * batch * seq / dt
+            print(f"step {step:5d}  ce={ce:.4f}  ({tok_s:,.0f} tok/s)")
+
+    sup = Supervisor(make_step, init_state, iterator, args.ckpt_dir,
+                     ckpt_every=args.ckpt_every, injector=injector)
+    report = sup.run(args.steps, metrics_cb=on_metrics)
+    print(f"done: {report.steps_run} steps, {report.restarts} restarts, "
+          f"ce {losses[0]:.3f} -> {losses[-1]:.3f}")
+    for line in report.log:
+        print("  ", line)
+
+
+if __name__ == "__main__":
+    main()

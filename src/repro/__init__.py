@@ -1,0 +1,22 @@
+"""repro — NTX near-memory DNN training, rebuilt as a multi-pod JAX/TPU framework.
+
+The paper's contributions are exposed as composable subsystems:
+
+- :mod:`repro.core`      — wide accumulation, NTX offload descriptors, tiling,
+                            strided-conv decomposition, systolic mesh collectives.
+- :mod:`repro.kernels`   — Pallas TPU kernels (ntx_matmul, flash_attention, ssd_scan,
+                            conv2d) with jnp oracles.
+- :mod:`repro.models`    — the model zoo (dense/MoE/hybrid/SSM decoders) and
+                            train/serve steps.
+- :mod:`repro.parallel`  — sharding rules and collective helpers (DP/TP/EP/SP).
+- :mod:`repro.data`      — in-memory sharded dataset (the paper's "large in-memory
+                            dataset" tier).
+- :mod:`repro.optim`     — optimizers + gradient compression.
+- :mod:`repro.checkpoint`— sharded, atomic, elastic checkpoints.
+- :mod:`repro.runtime`   — fault-tolerant supervisor (restart, elastic re-mesh,
+                            straggler policy).
+- :mod:`repro.configs`   — assigned architecture configs (+ paper workloads).
+- :mod:`repro.launch`    — production mesh, dry-run, train/serve drivers.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,69 @@
+"""Assigned architecture configs (public-literature exact numbers) + registry.
+
+Every module exports ``CONFIG`` (the exact assigned configuration) and the
+registry offers :func:`reduce_config` — a family-preserving shrink used by the
+per-arch smoke tests (tiny widths/depths, same block structure, same code
+paths). The FULL configs are exercised only through the dry-run
+(ShapeDtypeStructs — no allocation).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "recurrentgemma_2b",
+    "llava_next_mistral_7b",
+    "llama3_2_3b",
+    "qwen2_5_32b",
+    "qwen1_5_0_5b",
+    "qwen3_8b",
+    "musicgen_medium",
+    "llama4_maverick_400b_a17b",
+    "qwen3_moe_235b_a22b",
+    "mamba2_780m",
+)
+
+# Paper workloads (the CNNs/LSTM NTX was evaluated on) are modelled
+# analytically in benchmarks/ntx_model.py and exercised by examples/, not here.
+PAPER_WORKLOADS: tuple[str, ...] = ()
+
+
+def get_config(name: str) -> ModelConfig:
+    name = name.replace("-", "_").replace(".", "_")
+    if name not in ARCHS + PAPER_WORKLOADS:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCHS + PAPER_WORKLOADS}")
+    return importlib.import_module(f"repro.configs.{name}").CONFIG
+
+
+def reduce_config(cfg: ModelConfig) -> ModelConfig:
+    """Family-preserving smoke-scale shrink (same pattern, tiny dims)."""
+    plen = len(cfg.pattern)
+    n_layers = plen * 2 + (1 if cfg.n_layers % plen else 0)
+    kv_ratio = max(1, cfg.n_heads // cfg.n_kv_heads)
+    n_heads = 4
+    n_kv = max(1, n_heads // kv_ratio)
+    kw = dict(
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=128,
+        window=min(cfg.window, 8) if cfg.window else None,
+        dtype=jnp.float32,
+    )
+    if cfg.n_experts:
+        kw.update(n_experts=8, top_k=min(cfg.top_k, 4), moe_d_ff=32)
+        if cfg.shared_expert_d_ff:
+            kw.update(shared_expert_d_ff=32)
+    if cfg.lru_width:
+        kw.update(lru_width=64)
+    if cfg.ssm_state:
+        kw.update(n_heads=8, ssm_headdim=16, ssm_state=16, ssm_groups=min(2, cfg.ssm_groups))
+    return cfg.with_(**kw)

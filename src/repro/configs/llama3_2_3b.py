@@ -1,0 +1,23 @@
+"""llama3.2-3b [dense] — small llama3.
+
+[hf:meta-llama/Llama-3.2-1B pattern; unverified] 28L d_model=3072 24H
+(GQA kv=8, head_dim 128) d_ff=8192 vocab=128256, rope_theta=500000, tied
+embeddings. Pure full attention -> long_500k skipped (DESIGN.md §Arch).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=128_256,
+    rope_theta=5e5,
+    tie_embeddings=True,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+)

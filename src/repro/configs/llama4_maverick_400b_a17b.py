@@ -1,0 +1,30 @@
+"""llama4-maverick-400b-a17b [moe] — 128-expert top-1 MoE, early fusion.
+
+[hf:meta-llama/Llama-4 family; unverified] 48L d_model=5120 40H (GQA kv=8,
+head_dim 128) vocab=202048, MoE 128 experts top-1 with a shared expert
+(d_ff=8192 per the assignment), MoE interleaved 1:1 with dense layers
+(pattern (attn,mlp),(attn,moe)) as in the released Maverick config — this is
+what makes total params ~= 400B with ~17B active. Early-fusion multimodality
+is a stub (text path only). Full attention -> long_500k skipped.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202_048,
+    pattern=(("attn", "mlp"), ("attn", "moe")),
+    n_experts=128,
+    top_k=1,
+    moe_d_ff=8192,
+    shared_expert_d_ff=8192,
+    rope_theta=5e5,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+)

@@ -1,0 +1,27 @@
+"""llava-next-mistral-7b [vlm] — Mistral-7B backbone, anyres vision frontend.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified] 32L d_model=4096 32H
+(GQA kv=8, head_dim 128) d_ff=14336 vocab=32000. The anyres patch frontend is
+a STUB per the task spec: input_specs() provides precomputed patch+text
+embeddings (B, S, D). Mistral's sliding-window attention (4096) keeps the
+backbone sub-quadratic -> long_500k runs.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32_000,
+    pattern=(("swa", "mlp"),),
+    window=4096,
+    input_mode="embeddings",
+    rope_theta=1e4,
+    shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+)

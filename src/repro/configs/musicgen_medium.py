@@ -1,0 +1,27 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens.
+
+[arXiv:2306.05284; hf] 48L d_model=1536 24H (MHA kv=24, head_dim 64)
+d_ff=6144 (GELU, LayerNorm) vocab=2048, 4 parallel codebooks (delay pattern
+handled by the data side). The EnCodec frontend is a STUB per the task spec:
+input_specs() provides precomputed frame embeddings. Full attention ->
+long_500k skipped.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    n_codebooks=4,
+    input_mode="embeddings",
+    mlp_act="gelu",
+    norm_type="layer",
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+)

@@ -1,0 +1,23 @@
+"""qwen2.5-32b [dense] — GQA with QKV bias.
+
+[hf:Qwen/Qwen2.5 family; hf] 64L d_model=5120 40H (GQA kv=8, head_dim 128)
+d_ff=27648 vocab=152064, QKV bias, rope_theta=1e6. Pure full attention ->
+long_500k skipped.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=27648,
+    vocab_size=152_064,
+    qkv_bias=True,
+    rope_theta=1e6,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+)

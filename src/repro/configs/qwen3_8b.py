@@ -1,0 +1,22 @@
+"""qwen3-8b [dense] — GQA with qk_norm, no QKV bias.
+
+[hf:Qwen/Qwen3-8B; hf] 36L d_model=4096 32H (GQA kv=8, head_dim 128)
+d_ff=12288 vocab=151936, qk_norm. Pure full attention -> long_500k skipped.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b",
+    family="dense",
+    n_layers=36,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=12288,
+    vocab_size=151_936,
+    qk_norm=True,
+    rope_theta=1e6,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+)

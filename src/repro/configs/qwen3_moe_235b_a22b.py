@@ -1,0 +1,27 @@
+"""qwen3-moe-235b-a22b [moe] — 128 experts, top-8.
+
+[hf:Qwen/Qwen3 MoE family; hf] 94L d_model=4096 64H (GQA kv=4, head_dim 128)
+vocab=151936, every layer MoE: 128 experts top-8, expert d_ff=1536, qk_norm.
+Full attention -> long_500k skipped.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=151_936,
+    pattern=(("attn", "moe"),),
+    n_experts=128,
+    top_k=8,
+    moe_d_ff=1536,
+    qk_norm=True,
+    rope_theta=1e6,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+)

@@ -1,0 +1,28 @@
+"""recurrentgemma-2b [hybrid] — RG-LRU + local attention, 1:2 ratio.
+
+[arXiv:2402.19427; hf] 26L d_model=2560 10H (MQA kv=1, head_dim 256)
+d_ff=7680 (GeGLU) vocab=256000, local-attention window 2048, pattern
+(rec, rec, swa). Sub-quadratic -> runs long_500k.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256_000,
+    pattern=(("rec", "mlp"), ("rec", "mlp"), ("swa", "mlp")),
+    window=2048,
+    lru_width=2560,
+    mlp_act="geglu",
+    embed_scale=True,
+    tie_embeddings=True,
+    rope_theta=1e4,
+    shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+)

@@ -1,0 +1,161 @@
+"""Strided-conv backward decomposition (paper §3.2, Fig. 6).
+
+The input-gradient of a stride-s convolution is a *sparse* convolution: each
+input pixel receives contributions from a varying number of output pixels.
+NTX's FMAC cannot vary the summand count within one command, so the paper
+decomposes the sparse convolution into s*s *dense* convolutions — one per
+input-pixel phase class — each using the subset of filter taps congruent to
+that phase, and interleaves the partial results.
+
+The same decomposition is TPU-idiomatic (dense regular matmuls instead of
+input-dilated scatter), so we implement it exactly and validate it against
+``jax.vjp`` of ``lax.conv_general_dilated`` in the test-suite.
+
+Layout conventions: NHWC activations, HWIO weights (the framework's defaults).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, padding: int = 0) -> jnp.ndarray:
+    """Reference forward: stride-s 2-D convolution, NHWC x HWIO -> NHWC."""
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _phase_slices(k: int, stride: int, phase: int) -> jnp.ndarray:
+    """Indices of filter taps congruent to ``phase`` (may be empty)."""
+    return jnp.arange(phase, k, stride)
+
+
+def conv2d_input_grad_decomposed(
+    dy: jnp.ndarray,
+    w: jnp.ndarray,
+    stride: int,
+    x_hw: tuple[int, int],
+    padding: int = 0,
+) -> jnp.ndarray:
+    """d(loss)/d(x) of :func:`conv2d`, as s*s interleaved *dense* convolutions.
+
+    For input pixel (i, j), only the filter taps u === (i + pad) (mod s) (resp.
+    v for j) ever touch it. Grouping pixels by phase (a, b) = ((i+pad)%s,
+    (j+pad)%s) gives, per phase, a dense stride-1 correlation of ``dy`` with
+    the *flipped* tap subset w[a::s, b::s] — a constant number of MACs per
+    pixel, which is the property NTX needs (one command per phase).
+    """
+    n, yh, yw, cout = dy.shape
+    kh, kw, cin, _ = w.shape
+    xh, xw = x_hw
+    s = stride
+    dx = jnp.zeros((n, xh, xw, cin), dy.dtype)
+
+    for a in range(s):
+        ta = len(range(a, kh, s))  # taps in this row-phase
+        if ta == 0:
+            continue
+        for b in range(s):
+            tb = len(range(b, kw, s))
+            if tb == 0:
+                continue
+            # Tap subset for this phase, spatially flipped, channels swapped
+            # (cout becomes the contraction dim of the backward conv).
+            w_ab = w[a::s, b::s]  # (ta, tb, cin, cout)
+            w_ab = jnp.flip(w_ab, axis=(0, 1)).transpose(0, 1, 3, 2)  # (ta,tb,cout,cin)
+
+            # Dense stride-1 "full" correlation: out[m] = sum_t dy[m-t]*w_sub[t].
+            out_full = lax.conv_general_dilated(
+                dy,
+                w_ab,
+                window_strides=(1, 1),
+                padding=[(ta - 1, ta - 1), (tb - 1, tb - 1)],
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )  # (n, yh+ta-1, yw+tb-1, cin)
+
+            # Input pixels of this phase: i = i0_a + s*q, q = 0..na-1.
+            i0 = (a - padding) % s
+            j0 = (b - padding) % s
+            na = len(range(i0, xh, s))
+            nb = len(range(j0, xw, s))
+            if na == 0 or nb == 0:
+                continue
+            # Phase-local coordinates map to out_full at offset ii0 = (i0+pad-a)/s.
+            ii0 = (i0 + padding - a) // s
+            jj0 = (j0 + padding - b) // s
+
+            # Clip against the valid range of out_full; contributions outside
+            # are zero (dy index out of range).
+            fh, fw = out_full.shape[1], out_full.shape[2]
+            lo_i, lo_j = max(ii0, 0), max(jj0, 0)
+            hi_i, hi_j = min(ii0 + na, fh), min(jj0 + nb, fw)
+            if hi_i <= lo_i or hi_j <= lo_j:
+                continue
+            piece = out_full[:, lo_i:hi_i, lo_j:hi_j, :]
+
+            # Destination rows/cols for the clipped piece.
+            qi0 = lo_i - ii0  # first phase-q row actually produced
+            qj0 = lo_j - jj0
+            di0 = i0 + s * qi0
+            dj0 = j0 + s * qj0
+            dx = dx.at[
+                :,
+                di0 : di0 + s * piece.shape[1] : s,
+                dj0 : dj0 + s * piece.shape[2] : s,
+                :,
+            ].add(piece)
+    return dx
+
+
+def conv2d_weight_grad(
+    x: jnp.ndarray,
+    dy: jnp.ndarray,
+    stride: int,
+    k_hw: tuple[int, int],
+    padding: int = 0,
+) -> jnp.ndarray:
+    """d(loss)/d(w): a dense correlation of x with dy (regular on NTX).
+
+    The weight gradient of a strided conv is itself a *dilated* correlation but
+    with a constant summand count per tap, so it maps onto a plain command: we
+    express it via ``lax`` with dy as an (yh, yw)-shaped rhs dilated by s.
+    """
+    kh, kw = k_hw
+    # conv(x^T, dy^T) trick: batch becomes contraction.
+    dw = lax.conv_general_dilated(
+        x.transpose(3, 1, 2, 0),  # C,H,W,N : feature dim is batch now
+        dy.transpose(1, 2, 0, 3),  # yh,yw,N,cout
+        window_strides=(1, 1),
+        padding=[(padding, padding), (padding, padding)],
+        rhs_dilation=(stride, stride),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (cin, kh', kw', cout)
+    return dw[:, :kh, :kw, :].transpose(1, 2, 0, 3)
+
+
+def conv2d_with_decomposed_vjp(x, w, stride: int = 1, padding: int = 0):
+    """conv2d whose custom VJP uses the paper's decomposition (used by the CNN
+    example so the backward pass exercises C4 end-to-end)."""
+
+    @jax.custom_vjp
+    def f(x, w):
+        return conv2d(x, w, stride, padding)
+
+    def fwd(x, w):
+        return f(x, w), (x, w)
+
+    def bwd(res, dy):
+        x, w = res
+        dx = conv2d_input_grad_decomposed(dy, w, stride, (x.shape[1], x.shape[2]), padding)
+        dw = conv2d_weight_grad(x, dy, stride, (w.shape[0], w.shape[1]), padding)
+        return dx, dw
+
+    f.defvjp(fwd, bwd)
+    return f(x, w)

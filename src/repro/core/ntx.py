@@ -1,0 +1,291 @@
+"""The NTX offload programming model (paper §2.2–2.5, Fig. 5, Table 2).
+
+An NTX command is five nested hardware loops (L0 innermost … L4 outermost),
+three address-generator units (AGUs) evaluating the affine address equation
+
+    A = A_base + i0*s0 + i1*s1 + i2*s2 + i3*s3 + i4*s4            (eq. 1)
+
+with one add per cycle, plus an opcode executed in the innermost loop body.
+The accumulator is (re-)initialized when loops at ``init_level`` and above
+wrap, and stored through the write AGU at ``store_level``.
+
+This module keeps that descriptor as a first-class object:
+
+  * :class:`Agu`, :class:`NtxCommand` — the paper's staging-area contents.
+  * :func:`ntx_execute` — a cycle-faithful *reference interpreter* over a flat
+    memory (numpy). This is the behavioural model the Pallas kernels are tested
+    against, and it uses the wide accumulator from :mod:`repro.core.precision`.
+  * :func:`strides_to_steps` — eq. (2)/(3): the stride→step conversion the
+    RISC-V driver performs when programming a command.
+  * :func:`offload_count` / :func:`conv_offloads` — the Table 2 arithmetic:
+    how many commands a driver core must issue given the number of hardware
+    loops available (NS has 3 loops + 2 AGUs, NTX has 5 loops + 3 AGUs).
+
+On TPU, a command's loop nest maps onto a ``pallas_call`` grid + BlockSpec
+index maps (the AGUs), so "one offload" == "one pallas_call over many output
+pixels" — that is exactly the paper's C2 contribution transplanted.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+MAX_LOOPS = 5
+_OPS = ("mac", "vadd", "vmul", "vmax", "vmin", "relu", "copy", "memset", "argmax")
+
+
+@dataclass(frozen=True)
+class Agu:
+    """One address-generator unit: base address + per-loop element strides."""
+
+    base: int
+    strides: tuple[int, ...]  # length MAX_LOOPS, strides[i] applies to loop i
+
+    def __post_init__(self):
+        if len(self.strides) != MAX_LOOPS:
+            raise ValueError(f"AGU needs {MAX_LOOPS} strides, got {len(self.strides)}")
+
+    def address(self, idx: Sequence[int]) -> int:
+        return self.base + sum(i * s for i, s in zip(idx, self.strides))
+
+
+@dataclass(frozen=True)
+class NtxCommand:
+    """A complete NTX staging-area image (one offload)."""
+
+    loops: tuple[int, ...]  # N0..N4, innermost first; unused loops = 1
+    opcode: str
+    agu_rd0: Agu
+    agu_rd1: Agu | None = None
+    agu_wr: Agu | None = None
+    init_level: int = MAX_LOOPS  # accumulator init when loops >= level wrap
+    store_level: int = 1  # write-back once loops < level complete
+    init_value: float = 0.0
+
+    def __post_init__(self):
+        if len(self.loops) != MAX_LOOPS:
+            raise ValueError(f"need {MAX_LOOPS} loop bounds, got {len(self.loops)}")
+        if self.opcode not in _OPS:
+            raise ValueError(f"unknown opcode {self.opcode!r}; supported: {_OPS}")
+        if any(n < 1 for n in self.loops):
+            raise ValueError("loop bounds must be >= 1")
+
+    @property
+    def total_iterations(self) -> int:
+        return math.prod(self.loops)
+
+    @property
+    def busy_cycles(self) -> int:
+        """Single-cycle-throughput FMAC => one iteration per cycle (paper §2.3)."""
+        return self.total_iterations
+
+
+def strides_to_steps(strides: Sequence[int], loops: Sequence[int]) -> list[int]:
+    """Paper eq. (2)/(3): convert absolute strides s_i to incremental steps p_i.
+
+    The AGU adds exactly one step per cycle; the step for loop i must undo the
+    accumulated steps of the inner loops that just wrapped.
+    """
+    steps = [0] * len(strides)
+    steps[0] = strides[0]
+    for i in range(1, len(strides)):
+        steps[i] = strides[i] - (loops[i - 1] - 1) * steps[i - 1]
+    return steps
+
+
+def steps_to_strides(steps: Sequence[int], loops: Sequence[int]) -> list[int]:
+    """Inverse of :func:`strides_to_steps` (used in tests)."""
+    strides = [0] * len(steps)
+    strides[0] = steps[0]
+    for i in range(1, len(steps)):
+        strides[i] = steps[i] + (loops[i - 1] - 1) * steps[i - 1]
+    return strides
+
+
+def ntx_execute(cmd: NtxCommand, memory: np.ndarray, wide: bool = True) -> np.ndarray:
+    """Reference interpreter: execute one offloaded command against ``memory``.
+
+    ``memory`` is the TCDM: a flat fp32 numpy array; a copy with results written
+    through the write AGU is returned. ``wide=True`` models the PCS accumulator
+    (fp64 carried internally, rounded at store — bit-accurate to two-float for
+    the sizes we test); ``wide=False`` models a conventional fp32 FPU that
+    rounds after every FMA.
+    """
+    mem = np.array(memory, dtype=np.float32, copy=True)
+    acc_dtype = np.float64 if wide else np.float32
+    acc = acc_dtype(cmd.init_value)
+    arg_idx = 0
+    counter = 0
+
+    n0, n1, n2, n3, n4 = cmd.loops
+    for i4 in range(n4):
+        for i3 in range(n3):
+            for i2 in range(n2):
+                for i1 in range(n1):
+                    for i0 in range(n0):
+                        idx = (i0, i1, i2, i3, i4)
+                        # Accumulator init: when all loops below init_level are
+                        # at zero, a fresh accumulation region starts.
+                        if all(idx[j] == 0 for j in range(min(cmd.init_level, MAX_LOOPS))):
+                            acc = acc_dtype(cmd.init_value)
+                            counter = 0
+                            arg_idx = 0
+
+                        rd0 = np.float32(mem[cmd.agu_rd0.address(idx)])
+                        rd1 = (
+                            np.float32(mem[cmd.agu_rd1.address(idx)])
+                            if cmd.agu_rd1 is not None
+                            else np.float32(0.0)
+                        )
+
+                        if cmd.opcode == "mac":
+                            if wide:
+                                acc = acc + np.float64(rd0) * np.float64(rd1)
+                            else:
+                                acc = np.float32(acc + rd0 * rd1)
+                        elif cmd.opcode == "vadd":
+                            acc = acc_dtype(np.float32(rd0 + rd1))
+                        elif cmd.opcode == "vmul":
+                            acc = acc_dtype(np.float32(rd0 * rd1))
+                        elif cmd.opcode == "vmax":
+                            acc = max(acc, acc_dtype(rd0)) if counter else acc_dtype(rd0)
+                        elif cmd.opcode == "vmin":
+                            acc = min(acc, acc_dtype(rd0)) if counter else acc_dtype(rd0)
+                        elif cmd.opcode == "relu":
+                            acc = acc_dtype(max(np.float32(0.0), rd0))
+                        elif cmd.opcode == "copy":
+                            acc = acc_dtype(rd0)
+                        elif cmd.opcode == "memset":
+                            acc = acc_dtype(cmd.init_value)
+                        elif cmd.opcode == "argmax":
+                            if counter == 0 or acc_dtype(rd0) > acc:
+                                acc = acc_dtype(rd0)
+                                arg_idx = counter
+                        counter += 1
+
+                        # Store: when all loops below store_level wrap, the
+                        # accumulator is rounded once and written back.
+                        wraps = all(
+                            idx[j] == cmd.loops[j] - 1
+                            for j in range(min(cmd.store_level, MAX_LOOPS))
+                        )
+                        if wraps and cmd.agu_wr is not None:
+                            out = np.float32(arg_idx) if cmd.opcode == "argmax" else np.float32(acc)
+                            mem[cmd.agu_wr.address(idx)] = out
+    return mem
+
+
+# ---------------------------------------------------------------------------
+# Offload-count analytics (paper Table 2).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ConvShape:
+    """A convolution as the paper counts it: 4D weights, 3D input/output."""
+
+    kw: int
+    kh: int
+    cin: int
+    out_w: int
+    out_h: int
+    cout: int
+
+    @property
+    def reduction_dims(self) -> tuple[int, int, int]:
+        return (self.kw, self.kh, self.cin)
+
+    @property
+    def output_dims(self) -> tuple[int, int, int]:
+        return (self.out_w, self.out_h, self.cout)
+
+
+def offload_count(conv: ConvShape, hw_loops: int, autonomous_writeback: bool) -> int:
+    """Number of commands a driver core must issue for one conv layer.
+
+    A convolution is a 6-deep nest (3 output dims x 3 reduction dims). With
+    ``hw_loops`` loops available, the innermost ``hw_loops`` dims run inside
+    one command; the rest are issued by the driver. Without an autonomous
+    write-back AGU (NS), at most the 3 reduction dims can be offloaded —
+    every output pixel is its own command (paper §2.5(iii)).
+    """
+    dims = list(conv.reduction_dims) + list(conv.output_dims)  # innermost first
+    usable = min(hw_loops, len(dims))
+    if not autonomous_writeback:
+        usable = min(usable, len(conv.reduction_dims))
+    host_dims = dims[usable:]
+    return math.prod(host_dims) if host_dims else 1
+
+
+def busy_cycles_per_offload(conv: ConvShape, hw_loops: int, autonomous_writeback: bool) -> int:
+    dims = list(conv.reduction_dims) + list(conv.output_dims)
+    usable = min(hw_loops, len(dims))
+    if not autonomous_writeback:
+        usable = min(usable, len(conv.reduction_dims))
+    return math.prod(dims[:usable])
+
+
+# The two design points the paper compares (Table 2).
+NS_LOOPS = dict(hw_loops=3, autonomous_writeback=False)
+NTX_LOOPS = dict(hw_loops=5, autonomous_writeback=True)
+
+
+def matmul_command(
+    m: int,
+    n: int,
+    k: int,
+    a_base: int,
+    b_base: int,
+    c_base: int,
+) -> NtxCommand:
+    """Build the NtxCommand for a row-major (m,k)x(k,n)->(m,n) matmul.
+
+    Loop mapping (innermost first): L0=k (reduction), L1=n, L2=m.
+    AGU strides follow eq. (1) with element units.
+    """
+    return NtxCommand(
+        loops=(k, n, m, 1, 1),
+        opcode="mac",
+        agu_rd0=Agu(a_base, (1, 0, k, 0, 0)),  # A[i2, i0]
+        agu_rd1=Agu(b_base, (n, 1, 0, 0, 0)),  # B[i0, i1]
+        agu_wr=Agu(c_base, (0, 1, n, 0, 0)),  # C[i2, i1]
+        init_level=1,  # new accumulation per (i1, i2) pixel
+        store_level=1,  # store once L0 completes
+    )
+
+
+def conv2d_command(
+    in_h: int,
+    in_w: int,
+    cin: int,
+    kh: int,
+    kw: int,
+    cout_tile: int,
+    x_base: int,
+    w_base: int,
+    y_base: int,
+) -> NtxCommand:
+    """NtxCommand for a VALID 2-D convolution tile, NHWC x HWIO -> NHWC.
+
+    Loop mapping (innermost first): L0=cin, L1=kw, L2=kh (reduction);
+    L3=out_w, L4=out_h. One command covers a full output plane for one
+    output channel — the paper's "many output pixels per offload".
+    """
+    out_h, out_w = in_h - kh + 1, in_w - kw + 1
+    return NtxCommand(
+        loops=(cin, kw, kh, out_w, out_h),
+        opcode="mac",
+        # x[i4 + i2, i3 + i1, i0] with row stride in_w*cin
+        agu_rd0=Agu(x_base, (1, cin, in_w * cin, cin, in_w * cin)),
+        # w[i2, i1, i0] for a fixed cout (HWI contiguous)
+        agu_rd1=Agu(w_base, (1, cin, kw * cin, 0, 0)),
+        # y[i4, i3] with row stride out_w (single channel plane)
+        agu_wr=Agu(y_base, (0, 0, 0, 1, out_w)),
+        init_level=3,  # fresh accumulator per output pixel (loops 0..2 reduce)
+        store_level=3,  # store when the 3 reduction loops complete
+        init_value=0.0,
+    )

@@ -1,0 +1,123 @@
+"""Wide-accumulation numerics — the NTX FMAC datapath (paper §2.3, Table 1).
+
+NTX's FMAC aggregates 48-bit products into a ~300-bit partial-carry-save
+accumulator and defers rounding to the final store, so *reductions* (convolution
+inner products in particular) come out more accurate than a conventional fp32
+FPU that rounds after every FMA.
+
+There is no 300-bit accumulator on a TPU. The MXU gives us one step of the same
+ladder for free — bf16 x bf16 products accumulate in fp32, and the product of two
+bf16 values is *exact* in fp32 (8+8 significand bits < 24). For fp32 inputs we
+emulate the wide accumulator with branch-free two-float (double-float) arithmetic:
+
+  * ``two_sum``      — Knuth's error-free addition (6 flops, no branches)
+  * ``two_prod``     — Dekker/Veltkamp error-free product (no FMA required,
+                       which matters because neither XLA:CPU nor the VPU expose
+                       a guaranteed fused FMA to jnp)
+  * ``wide_sum`` / ``wide_dot`` — compensated reductions whose error is
+                       O(eps) instead of O(n*eps), i.e. fp64-quality results
+                       carried in two fp32 words, rounded once at the end.
+
+These functions are pure jnp, differentiable-free utilities used by
+``kernels/ntx_matmul`` (fp32 path), the Table 1 benchmark, and the kernel ref
+oracles.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Veltkamp split constant for fp32: 2**ceil(24/2) + 1.
+_SPLIT_F32 = jnp.float32(4097.0)
+
+
+def two_sum(a: jnp.ndarray, b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Error-free transformation: a + b = s + e exactly (Knuth 2Sum).
+
+    Branch-free, so it vectorizes on the VPU and in interpret mode.
+    """
+    s = a + b
+    bp = s - a
+    ap = s - bp
+    e = (a - ap) + (b - bp)
+    return s, e
+
+
+def fast_two_sum(a: jnp.ndarray, b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """2Sum specialization valid when |a| >= |b| (Dekker). 3 flops."""
+    s = a + b
+    e = b - (s - a)
+    return s, e
+
+
+def _split(a: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Veltkamp split of an fp32 value into high/low halves (12+12 bits)."""
+    c = _SPLIT_F32 * a
+    hi = c - (c - a)
+    lo = a - hi
+    return hi, lo
+
+
+def two_prod(a: jnp.ndarray, b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Error-free transformation: a * b = p + e exactly (Dekker two-product).
+
+    Uses Veltkamp splitting so it does not require a hardware FMA. Classical
+    precondition: exactness requires the error term not to underflow, i.e.
+    |a*b| comfortably above the fp32 subnormal range — always true for the
+    activation/weight magnitudes these reductions see.
+    """
+    p = a * b
+    ah, al = _split(a)
+    bh, bl = _split(b)
+    e = ((ah * bh - p) + ah * bl + al * bh) + al * bl
+    return p, e
+
+
+def wide_sum(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Compensated (Kahan-Babuska/Neumaier) sum along ``axis``.
+
+    The NTX analogue of summing into the PCS accumulator and rounding once at
+    the end: the relative error is O(eps) + O(n * eps^2) instead of the naive
+    O(n * eps).
+    """
+    x = jnp.moveaxis(x, axis, 0)
+
+    def body(carry, xi):
+        s, c = carry
+        t, e = two_sum(s, xi)
+        return (t, c + e), None
+
+    import jax
+
+    (s, c), _ = jax.lax.scan(body, (jnp.zeros_like(x[0]), jnp.zeros_like(x[0])), x)
+    return s + c
+
+
+def wide_dot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Compensated inner product over the last axis: error ~ eps, not n*eps.
+
+    Every product is split error-free (two_prod) and both the product stream
+    and its error stream are accumulated with compensation — the two-float
+    rendering of "accumulate at full precision, round at the store".
+    """
+    import jax
+
+    a2 = jnp.moveaxis(a, -1, 0)
+    b2 = jnp.moveaxis(b, -1, 0)
+
+    def body(carry, ab):
+        s, c = carry
+        ai, bi = ab
+        p, ep = two_prod(ai, bi)
+        t, es = two_sum(s, p)
+        return (t, c + (ep + es)), None
+
+    zero = jnp.zeros(jnp.broadcast_shapes(a2.shape[1:], b2.shape[1:]), a.dtype)
+    (s, c), _ = jax.lax.scan(body, (zero, zero), (a2, b2))
+    return s + c
+
+
+def kahan_step(s: jnp.ndarray, c: jnp.ndarray, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One Neumaier update step — used inside Pallas kernel K-loops."""
+    t, e = two_sum(s, x)
+    return t, c + e

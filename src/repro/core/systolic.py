@@ -1,0 +1,259 @@
+"""Systolic mesh gradient exchange (paper §3.4, §4.9, Fig. 14).
+
+The paper scales data-parallel training across a 2-D mesh of HMCs: each cube
+computes a local weight update, then the global average is formed by **four
+streaming waves** — a horizontal pass followed by a vertical pass over the
+mesh, each implemented as a systolic pipeline over the serial links.
+
+TPU ICI *is* a 2-D(+) torus with ~the same per-link bandwidth the paper
+assumes (50-60 GB/s), so the algorithm transplants almost verbatim:
+
+  * per mesh axis, wave 1 = ring **reduce-scatter** (each chip ends up with a
+    fully-reduced 1/n-th shard), wave 2 = ring **all-gather** — built from
+    ``lax.ppermute`` neighbour hops exactly like the paper's neighbour links;
+  * the horizontal ("data") pass runs first, then the vertical ("pod") pass,
+    i.e. 4 waves for the production mesh — matching Fig. 14(b).
+
+``psum_mean`` is the let-XLA-do-it baseline (XLA lowers it to the same ring
+on a torus, but fuses/overlaps it with backward compute); the explicit
+systolic path is the paper-faithful artifact and the unit of account for the
+collective roofline term. Both are exposed so EXPERIMENTS.md §Perf can compare
+them.
+
+All functions run **inside shard_map** over the relevant axes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _ring_perm(n: int, reverse: bool = False):
+    if reverse:
+        return [((d + 1) % n, d) for d in range(n)]
+    return [(d, (d + 1) % n) for d in range(n)]
+
+
+def ring_reduce_scatter(chunks: jnp.ndarray, axis_name: str, axis_size: int) -> jnp.ndarray:
+    """Wave 1: ring reduce-scatter.
+
+    ``chunks``: (n, c) local array, n == axis_size. Returns the (c,)-shaped
+    fully-reduced chunk this device owns, which is chunk ``(i + 2) % n`` —
+    callers should pair this with :func:`ring_all_gather` which restores order.
+    n-1 neighbour hops, each moving c elements: the per-wave traffic the paper
+    counts in eq. (14).
+    """
+    n = axis_size
+    i = lax.axis_index(axis_name)
+    if n == 1:
+        return chunks[0]
+    acc = lax.dynamic_index_in_dim(chunks, (i + 1) % n, axis=0, keepdims=False)
+    perm = _ring_perm(n)
+
+    def body(t, acc):
+        acc = lax.ppermute(acc, axis_name, perm)
+        c = (i - t) % n
+        return acc + lax.dynamic_index_in_dim(chunks, c, axis=0, keepdims=False)
+
+    return lax.fori_loop(0, n - 1, body, acc)
+
+
+def ring_all_gather(chunk: jnp.ndarray, axis_name: str, axis_size: int) -> jnp.ndarray:
+    """Wave 2: ring all-gather of per-device chunks back into (n, c).
+
+    Chunk ownership follows :func:`ring_reduce_scatter`'s final placement
+    (device i holds chunk (i+2) % n), so after this wave every device holds
+    the identical, correctly-ordered (n, c) array.
+    """
+    n = axis_size
+    if n == 1:
+        return chunk[None]
+    i = lax.axis_index(axis_name)
+    out = jnp.zeros((n,) + chunk.shape, chunk.dtype)
+    ci = (i + 2) % n
+    out = lax.dynamic_update_slice_in_dim(out, chunk[None], ci, axis=0)
+    perm = _ring_perm(n)
+
+    def body(t, carry):
+        out, buf, ci = carry
+        buf = lax.ppermute(buf, axis_name, perm)
+        ci = (ci - 1) % n
+        out = lax.dynamic_update_slice_in_dim(out, buf[None], ci, axis=0)
+        return out, buf, ci
+
+    out, _, _ = lax.fori_loop(0, n - 1, body, (out, chunk, ci))
+    return out
+
+
+def systolic_all_reduce(x: jnp.ndarray, axis_name: str, axis_size: int) -> jnp.ndarray:
+    """All-reduce(sum) along one mesh axis as two systolic ring waves."""
+    if axis_size == 1:
+        return x
+    flat = x.reshape(-1)
+    pad = (-flat.size) % axis_size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(axis_size, -1)
+    reduced = ring_reduce_scatter(chunks, axis_name, axis_size)
+    gathered = ring_all_gather(reduced, axis_name, axis_size)
+    out = gathered.reshape(-1)
+    if pad:
+        out = out[: flat.size - pad]
+    return out.reshape(x.shape)
+
+
+def systolic_mean(x: jnp.ndarray, axis_names: tuple[str, ...], axis_sizes: tuple[int, ...]) -> jnp.ndarray:
+    """Paper Fig. 14: horizontal wave pair, then vertical wave pair, then scale.
+
+    ``axis_names``/``axis_sizes``: the mesh axes to average over, e.g.
+    (("data", "pod"), (16, 2)) — 4 waves total on the production mesh.
+    """
+    total = 1
+    for name, size in zip(axis_names, axis_sizes):
+        x = systolic_all_reduce(x, name, size)
+        total *= size
+    return x / total
+
+
+def systolic_mean_tree(tree, axis_names: tuple[str, ...], axis_sizes: tuple[int, ...]):
+    """Gradient-pytree version: flatten once, stream as a single dense buffer.
+
+    The paper streams the full 300 MB weight update as one systolic transfer;
+    flattening the gradient pytree into one fp32 buffer reproduces that (and
+    maximizes per-hop message size). Used by the paper-faithful train step.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    sizes = [leaf.size for leaf in leaves]
+    shapes = [leaf.shape for leaf in leaves]
+    dtypes = [leaf.dtype for leaf in leaves]
+    flat = jnp.concatenate([leaf.reshape(-1).astype(jnp.float32) for leaf in leaves])
+    flat = systolic_mean(flat, axis_names, axis_sizes)
+    out, off = [], 0
+    for size, shape, dtype in zip(sizes, shapes, dtypes):
+        out.append(flat[off : off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def psum_mean_tree(tree, axis_names: tuple[str, ...]):
+    """Baseline/beyond-paper path: let XLA schedule (and overlap) the reduction."""
+    n = 1
+    for name in axis_names:
+        n *= lax.psum(1, name)
+    return jax.tree_util.tree_map(lambda g: lax.psum(g, axis_names) / n, tree)
+
+
+def mesh_update_time_model(
+    weight_bytes: float,
+    mesh_side: int,
+    link_bw: float = 60e9,
+    hop_latency: float = 20e-6,
+) -> float:
+    """Paper eqs. (14)-(15): T_update = 4 * (T_tx + N * T_lat).
+
+    Kept here (not in benchmarks/) because launch/train uses it for straggler
+    deadlines and benchmarks/fig14 reproduces the paper's numbers with it.
+    """
+    t_tx = weight_bytes / link_bw
+    t_pass = t_tx + mesh_side * hop_latency
+    return 4.0 * t_pass
+
+
+# ---------------------------------------------------------------------------
+# Quantized systolic waves (beyond-paper, §Perf): every ring hop ships an int8
+# payload + fp32 scale instead of fp32 values — 4x fewer wire bytes, visible
+# in the compiled HLO (s8 collective-permutes). Per-hop quantization error is
+# zero-mean and bounded by scale/2; the train step's error-feedback state
+# (optim/compression.py) absorbs the step-level residual.
+# ---------------------------------------------------------------------------
+
+
+def _q8(x):
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ring_reduce_scatter_q8(chunks: jnp.ndarray, axis_name: str, axis_size: int):
+    """Reduce-scatter wave with int8 hop payloads. chunks: (n, c) fp32."""
+    n = axis_size
+    i = lax.axis_index(axis_name)
+    if n == 1:
+        return chunks[0]
+    acc = lax.dynamic_index_in_dim(chunks, (i + 1) % n, axis=0, keepdims=False)
+    perm = _ring_perm(n)
+
+    def body(t, acc):
+        q, scale = _q8(acc)
+        q = lax.ppermute(q, axis_name, perm)  # 1-byte wire payload
+        scale = lax.ppermute(scale, axis_name, perm)
+        acc = q.astype(jnp.float32) * scale
+        c = (i - t) % n
+        return acc + lax.dynamic_index_in_dim(chunks, c, axis=0, keepdims=False)
+
+    return lax.fori_loop(0, n - 1, body, acc)
+
+
+def ring_all_gather_q8(chunk: jnp.ndarray, axis_name: str, axis_size: int):
+    """All-gather wave with int8 hop payloads; mirrors ring_all_gather."""
+    n = axis_size
+    if n == 1:
+        return chunk[None]
+    i = lax.axis_index(axis_name)
+    out = jnp.zeros((n,) + chunk.shape, jnp.float32)
+    ci = (i + 2) % n
+    out = lax.dynamic_update_slice_in_dim(out, chunk[None], ci, axis=0)
+    perm = _ring_perm(n)
+    q, scale = _q8(chunk)
+
+    def body(t, carry):
+        out, q, scale, ci = carry
+        q = lax.ppermute(q, axis_name, perm)
+        scale = lax.ppermute(scale, axis_name, perm)
+        ci = (ci - 1) % n
+        val = (q.astype(jnp.float32) * scale)[None]
+        out = lax.dynamic_update_slice_in_dim(out, val, ci, axis=0)
+        return out, q, scale, ci
+
+    out, _, _, _ = lax.fori_loop(0, n - 1, body, (out, q, scale, ci))
+    return out
+
+
+def systolic_all_reduce_q8(x: jnp.ndarray, axis_name: str, axis_size: int):
+    if axis_size == 1:
+        return x
+    flat = x.reshape(-1)
+    pad = (-flat.size) % axis_size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(axis_size, -1)
+    reduced = ring_reduce_scatter_q8(chunks, axis_name, axis_size)
+    gathered = ring_all_gather_q8(reduced, axis_name, axis_size)
+    out = gathered.reshape(-1)
+    if pad:
+        out = out[: flat.size - pad]
+    return out.reshape(x.shape)
+
+
+def systolic_mean_tree_q8(tree, axis_names, axis_sizes):
+    """Quantized-wire version of :func:`systolic_mean_tree` (compressed mode)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    sizes = [leaf.size for leaf in leaves]
+    shapes = [leaf.shape for leaf in leaves]
+    dtypes = [leaf.dtype for leaf in leaves]
+    flat = jnp.concatenate([leaf.reshape(-1).astype(jnp.float32) for leaf in leaves])
+    total = 1
+    for name, size in zip(axis_names, axis_sizes):
+        flat = systolic_all_reduce_q8(flat, name, size)
+        total *= size
+    flat = flat / total
+    out, off = [], 0
+    for size, shape, dtype in zip(sizes, shapes, dtypes):
+        out.append(flat[off : off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)

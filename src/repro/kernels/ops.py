@@ -1,0 +1,338 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Backend policy (``backend=`` on every op):
+  * ``"tpu"``       — the Pallas kernel (the production path).
+  * ``"interpret"`` — the Pallas kernel body executed in Python on CPU
+                      (correctness validation; what the tests sweep).
+  * ``"xla"``       — a portable, *blockwise* jnp implementation with the same
+                      memory behaviour (never materializes the full score
+                      matrix / state history). This is what the CPU container
+                      runs for training, and what the multi-pod dry-run lowers
+                      (Pallas TPU kernels cannot lower on the CPU backend).
+  * ``"auto"``      — "tpu" on TPU devices, else "xla".
+
+The blockwise xla paths are differentiable (each KV/chunk step is rematerialized
+in the backward pass — flash-attention-style recompute via ``jax.checkpoint``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ntx_matmul as _mm
+from repro.kernels import ssd_scan as _ssd
+
+
+def _auto_backend() -> str:
+    return "tpu" if jax.default_backend() == "tpu" else "xla"
+
+
+def _resolve(backend: str) -> str:
+    return _auto_backend() if backend == "auto" else backend
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(x: jnp.ndarray, mult: tuple[int, int]) -> jnp.ndarray:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mult)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("compensated", "out_dtype", "backend"))
+def matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    compensated: bool = False,
+    out_dtype=jnp.float32,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """NTX wide-accumulation matmul. Pads to MXU tiles as needed."""
+    be = _resolve(backend)
+    m, k = a.shape
+    _, n = b.shape
+    if be == "xla":
+        return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+    bm = min(128, 1 << (m - 1).bit_length()) if m < 128 else 128
+    bn = min(128, 1 << (n - 1).bit_length()) if n < 128 else 128
+    bk = min(128, 1 << (k - 1).bit_length()) if k < 128 else 128
+    ap = _pad_to(a, (bm, bk))
+    bp = _pad_to(b, (bk, bn))
+    out = _mm.ntx_matmul(
+        ap,
+        bp,
+        out_dtype=out_dtype,
+        compensated=compensated,
+        block_m=bm,
+        block_n=bn,
+        block_k=bk,
+        interpret=(be == "interpret"),
+    )
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def _blockwise_attention_xla(
+    q: jnp.ndarray,  # (B, Hq, Sq, D)
+    k: jnp.ndarray,  # (B, Hkv, Skv, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    window: int | None,
+    sm_scale: float,
+    q_offset,
+    kv_valid_len,
+    block_kv: int,
+) -> jnp.ndarray:
+    """Online-softmax attention scanning KV blocks; GQA grouped (no KV repeat)."""
+    bsz, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    grp = hq // hkv
+    # Tensors stay in the input dtype (bf16 in production) — exactly like the
+    # Pallas kernel: only score/normalizer statistics are carried in fp32.
+    # This keeps every resharding collective on 2-byte payloads (§Perf).
+    qf = q.reshape(bsz, hkv, grp, sq, d)
+
+    block_kv = min(block_kv, skv)
+    pad = (-skv) % block_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nblk = k.shape[2] // block_kv
+    kb = k.reshape(bsz, hkv, nblk, block_kv, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(bsz, hkv, nblk, block_kv, d).transpose(2, 0, 1, 3, 4)
+
+    q_ids = q_offset + jnp.arange(sq)  # (Sq,) — q_offset may be traced
+    valid = skv if kv_valid_len is None else kv_valid_len
+
+    @jax.checkpoint
+    def step(carry, inputs):
+        m_p, l_p, acc = carry
+        kblk, vblk, kv0 = inputs  # (B,Hkv,bkv,D) x2, scalar block start
+        s = (
+            jnp.einsum(
+                "bkgqd,bkjd->bkgqj", qf, kblk, preferred_element_type=jnp.float32
+            )
+            * sm_scale
+        )
+        kv_ids = kv0 + jnp.arange(block_kv)  # (bkv,)
+        mask = (kv_ids[None, :] < valid) | jnp.zeros((sq, 1), bool)
+        if causal:
+            mask &= kv_ids[None, :] <= q_ids[:, None]
+        if window is not None:
+            mask &= kv_ids[None, :] > q_ids[:, None] - window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_c = jnp.max(s, axis=-1)
+        m_n = jnp.maximum(m_p, m_c)
+        # Avoid NaN from (-inf) - (-inf) on fully-masked prefixes.
+        safe_m = jnp.where(m_n <= -1e29, 0.0, m_n)
+        p = jnp.exp(s - safe_m[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(jnp.where(m_p <= -1e29, -jnp.inf, m_p - safe_m))
+        l_n = l_p * alpha + p.sum(-1)
+        # p rounded to the value dtype before the MXU matmul (as on TPU);
+        # the accumulator stays fp32.
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqj,bkjd->bkgqd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_n, l_n, acc), None
+
+    m0 = jnp.full((bsz, hkv, grp, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((bsz, hkv, grp, sq), jnp.float32)
+    a0 = jnp.zeros((bsz, hkv, grp, sq, d), jnp.float32)
+    kv_starts = jnp.arange(nblk) * block_kv
+    (m_f, l_f, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, kv_starts))
+    l_f = jnp.where(l_f == 0.0, 1.0, l_f)
+    out = (acc / l_f[..., None]).reshape(bsz, hq, sq, d)
+    return out.astype(q.dtype)
+
+
+def _windowed_attention_xla(q, k, v, *, window: int, sm_scale: float, block_q: int):
+    """Sliding-window attention that only visits in-window KV (H5, §Perf).
+
+    The generic blockwise path scans *all* KV blocks and masks, wasting
+    S/window-fold compute for local-attention layers at long S. Here each
+    q-block dynamic-slices just its (window + block_q)-sized KV span, making
+    prefill cost O(S * window) — matching what the Pallas kernel's block
+    skipping achieves on TPU.
+    """
+    b, hq, s, d = q.shape
+    _, hkv, skv, _ = k.shape
+    grp = hq // hkv
+    block_q = min(block_q, s)
+    assert s % block_q == 0, (s, block_q)
+    span = min(window + block_q, skv)
+    nq = s // block_q
+    qf = q.astype(jnp.float32).reshape(b, hkv, grp, s, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    @jax.checkpoint
+    def one(_, qi):
+        qstart = qi * block_q
+        s0 = jnp.clip(qstart + block_q - span, 0, skv - span)
+        qb = jax.lax.dynamic_slice_in_dim(qf, qstart, block_q, axis=3)
+        kb = jax.lax.dynamic_slice_in_dim(kf, s0, span, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(vf, s0, span, axis=2)
+        sc = jnp.einsum("bkgqd,bkjd->bkgqj", qb, kb) * sm_scale
+        q_ids = qstart + jnp.arange(block_q)
+        kv_ids = s0 + jnp.arange(span)
+        mask = (kv_ids[None, :] <= q_ids[:, None]) & (
+            kv_ids[None, :] > q_ids[:, None] - window
+        )
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+        p = jax.nn.softmax(sc, axis=-1)
+        ob = jnp.einsum("bkgqj,bkjd->bkgqd", p, vb)
+        return None, ob
+
+    _, blocks = jax.lax.scan(one, None, jnp.arange(nq))  # (nq,B,Hkv,G,bq,D)
+    out = blocks.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, s, d)
+    return out.astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "sm_scale", "block_q", "block_kv", "backend",
+                     "windowed"),
+)
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    q_offset=0,
+    kv_valid_len=None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    backend: str = "auto",
+    windowed: bool = False,
+) -> jnp.ndarray:
+    """Flash attention with GQA + causal/sliding-window masking.
+
+    ``q_offset``/``kv_valid_len`` may be traced scalars (decode path).
+    ``windowed=True`` uses the window-limited KV scan (H5) on the xla path.
+    """
+    d = q.shape[-1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d**0.5)
+    be = _resolve(backend)
+    if (
+        windowed and window is not None and be == "xla"
+        and isinstance(q_offset, int) and q_offset == 0 and kv_valid_len is None
+    ):
+        return _windowed_attention_xla(
+            q, k, v, window=window, sm_scale=sm_scale, block_q=max(block_q, 256)
+        )
+    if be in ("tpu", "interpret"):
+        assert isinstance(q_offset, int) and q_offset == 0 and kv_valid_len is None, (
+            "the Pallas kernel currently serves the q_offset=0 full-cache case; "
+            "decode uses the blockwise path"
+        )
+        return _fa.flash_attention(
+            q,
+            k,
+            v,
+            causal=causal,
+            window=window,
+            sm_scale=sm_scale,
+            block_q=block_q,
+            block_kv=block_kv,
+            interpret=(be == "interpret"),
+        )
+    return _blockwise_attention_xla(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        sm_scale=sm_scale,
+        q_offset=q_offset,
+        kv_valid_len=kv_valid_len,
+        block_kv=block_kv,
+    )
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+
+def _ssd_chunked_xla(x, la, b, c, *, chunk: int, h0=None):
+    """Chunked dual-form SSD in portable jnp (scan over chunks)."""
+    bb, h, s, p = x.shape
+    _, g, _, n = b.shape
+    grp = h // g
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    xf = x.astype(jnp.float32).reshape(bb, h, nc, chunk, p).transpose(2, 0, 1, 3, 4)
+    laf = la.astype(jnp.float32).reshape(bb, h, nc, chunk).transpose(2, 0, 1, 3)
+    bf = b.astype(jnp.float32).reshape(bb, g, nc, chunk, n).transpose(2, 0, 1, 3, 4)
+    cf = c.astype(jnp.float32).reshape(bb, g, nc, chunk, n).transpose(2, 0, 1, 3, 4)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    @jax.checkpoint
+    def step(hstate, inputs):
+        xc, lac, bc, cc = inputs  # (B,H,Q,P) (B,H,Q) (B,G,Q,N) (B,G,Q,N)
+        cum = jnp.cumsum(lac, axis=-1)  # (B,H,Q) inclusive
+        total = cum[..., -1]  # (B,H)
+        # intra (grouped to avoid repeating b/c across the head group)
+        cumg = cum.reshape(bb, g, grp, chunk)
+        scores = jnp.einsum("bgin,bgjn->bgij", cc, bc)  # (B,G,Q,Q)
+        decay = jnp.exp(cumg[..., :, None] - cumg[..., None, :])  # (B,G,grp,Q,Q)
+        decay = jnp.where(causal, decay, 0.0)
+        xg = xc.reshape(bb, g, grp, chunk, p)
+        y = jnp.einsum("bgij,bgkij,bgkjp->bgkip", scores, decay, xg)
+        # inter
+        hg = hstate.reshape(bb, g, grp, p, n)
+        y += jnp.exp(cumg)[..., None] * jnp.einsum("bgin,bgkpn->bgkip", cc, hg)
+        # state update
+        w = jnp.exp(total.reshape(bb, g, grp)[..., None] - cumg)[..., None] * bc[:, :, None]
+        hstate = jnp.exp(total)[..., None, None] * hstate + jnp.einsum(
+            "bgkip,bgkin->bgkpn", xg, w
+        ).reshape(bb, h, p, n)
+        return hstate, y.reshape(bb, h, chunk, p)
+
+    init = h0 if h0 is not None else jnp.zeros((bb, h, p, n), jnp.float32)
+    hfinal, ys = jax.lax.scan(step, init, (xf, laf, bf, cf))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(bb, h, s, p)
+    return y.astype(x.dtype), hfinal
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "backend", "return_state"))
+def ssd(
+    x: jnp.ndarray,
+    la: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    chunk: int = 128,
+    backend: str = "auto",
+    return_state: bool = False,
+):
+    """Mamba-2 SSD scan. Returns y (and the final state if requested)."""
+    be = _resolve(backend)
+    if be in ("tpu", "interpret") and not return_state:
+        y = _ssd.ssd_scan(x, la, b, c, chunk=chunk, interpret=(be == "interpret"))
+        return y
+    y, h = _ssd_chunked_xla(x, la, b, c, chunk=chunk)
+    return (y, h) if return_state else y

@@ -1,0 +1,108 @@
+"""Pure-jnp/numpy oracles for every Pallas kernel in this package.
+
+These are deliberately simple (dense, sequential) and serve as ground truth in
+``tests/kernels`` across shape/dtype sweeps. The fp64 variants model the
+paper's 64-bit-float baseline used in Table 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray, out_dtype=jnp.float32) -> jnp.ndarray:
+    """fp32 matmul with highest-precision accumulation XLA offers."""
+    return jnp.dot(
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32,
+    ).astype(out_dtype)
+
+
+def matmul_ref64(a, b) -> np.ndarray:
+    """The paper's common baseline: full fp64 accumulation (numpy, host)."""
+    return np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, Hq, Sq, D)
+    k: jnp.ndarray,  # (B, Hkv, Skv, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    q_offset: int = 0,
+    kv_valid_len: int | None = None,
+) -> jnp.ndarray:
+    """Dense softmax attention in fp32 — the oracle for flash_attention."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    grp = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d**0.5)
+    k = jnp.repeat(k, grp, axis=1)
+    v = jnp.repeat(v, grp, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s *= sm_scale
+    q_ids = q_offset + jnp.arange(sq)[:, None]
+    kv_ids = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if kv_valid_len is not None:
+        mask &= kv_ids < kv_valid_len
+    if causal:
+        mask &= kv_ids <= q_ids
+    if window is not None:
+        mask &= kv_ids > q_ids - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # Fully-masked rows give uniform p; zero them for parity with flash.
+    any_visible = mask.any(axis=-1)[None, None, :, None]
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return jnp.where(any_visible, out, 0.0).astype(q.dtype)
+
+
+def ssd_ref(
+    x: jnp.ndarray,  # (B, H, S, P)
+    la: jnp.ndarray,  # (B, H, S)
+    b: jnp.ndarray,  # (B, G, S, N)
+    c: jnp.ndarray,  # (B, G, S, N)
+    h0: jnp.ndarray | None = None,  # (B, H, P, N)
+) -> jnp.ndarray:
+    """Sequential SSD recurrence (the literal state-space model), fp32."""
+    bb, h, s, p = x.shape
+    _, g, _, n = b.shape
+    grp = h // g
+    b = jnp.repeat(b, grp, axis=1)  # (B, H, S, N)
+    c = jnp.repeat(c, grp, axis=1)
+
+    def step(hstate, inputs):
+        xt, lat, bt, ct = inputs  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        a = jnp.exp(lat)[..., None, None]  # (B,H,1,1)
+        hstate = a * hstate + xt[..., :, None] * bt[..., None, :]  # (B,H,P,N)
+        yt = jnp.einsum("bhpn,bhn->bhp", hstate, ct)
+        return hstate, yt
+
+    init = h0 if h0 is not None else jnp.zeros((bb, h, p, n), jnp.float32)
+    xs = (
+        x.astype(jnp.float32).transpose(2, 0, 1, 3),
+        la.astype(jnp.float32).transpose(2, 0, 1),
+        b.astype(jnp.float32).transpose(2, 0, 1, 3),
+        c.astype(jnp.float32).transpose(2, 0, 1, 3),
+    )
+    _, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 2, 0, 3).astype(x.dtype)  # (B,H,S,P)
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, padding: int = 0):
+    """NHWC x HWIO valid/same conv oracle (fp32)."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ).astype(x.dtype)

@@ -1,0 +1,235 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for the
+single-pod (16,16) and multi-pod (2,16,16) meshes, every supported cell must
+``.lower().compile()`` cleanly; the compiled artifact's memory/cost analysis
+and collective schedule feed EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3_8b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.launch import hlo_stats, hlo_walk, shapes as shp
+from repro.launch.mesh import dp_axes_of, make_production_mesh, n_chips
+from repro.launch.serve import make_serve_step, serve_shardings
+from repro.launch.train import (
+    batch_shardings,
+    init_train_state,
+    make_train_step,
+    state_shardings,
+)
+from repro.models import flops as flops_mod
+from repro.models import lm
+from repro.models.config import ParallelCtx
+from repro.optim.optimizers import get_optimizer
+from repro.parallel import sharding as shd
+
+
+OPT_FLAGS = {
+    "bf16_coll": dict(collective_dtype="bf16"),
+    "sp_model": dict(sp_model=True),
+    "windowed": dict(windowed_attn=True),
+    "shard_heads": dict(shard_heads=True),
+    "scan_params": dict(shard_scan_params=True),
+    "bigblk": dict(block_kv=2048),
+}
+
+
+def build_ctx(cfg, mesh, cell: shp.ShapeCell, grad_sync="auto", moe_impl=None, opts=()):
+    dp_axes = dp_axes_of(mesh)
+    import math
+
+    dp = math.prod(mesh.shape[a] for a in dp_axes)
+    seq_axis = None
+    dp_for_batch = dp_axes
+    if cell.kind in ("train", "prefill") and cell.batch % dp != 0:
+        # batch not divisible by DP -> shard the sequence instead (SP)
+        seq_axis = "data"
+        dp_for_batch = ()
+    if moe_impl is None:
+        moe_impl = "ep" if cfg.n_experts else "dense"
+    kw = dict(block_kv=512)
+    for o in opts:
+        kw.update(OPT_FLAGS[o])
+    return ParallelCtx(
+        mesh=mesh,
+        dp_axes=dp_for_batch,
+        tp_axis="model",
+        seq_axis=seq_axis,
+        moe_impl=moe_impl,
+        attn_backend="xla",
+        remat="full" if cell.kind == "train" else "none",
+        ssd_chunk=128,
+        grad_sync=grad_sync,
+        **kw,
+    )
+
+
+def lower_cell(arch: str, shape_name: str, mesh, grad_sync: str = "auto", opts=()):
+    """Returns (lowered, compiled, meta) for one cell."""
+    cfg = get_config(arch)
+    cell = shp.SHAPES[shape_name]
+    ctx = build_ctx(cfg, mesh, cell, grad_sync, opts=opts)
+    dp_axes = dp_axes_of(mesh)
+
+    if cell.kind == "train":
+        optimizer = get_optimizer("sgd", 1e-2)
+        state_struct = jax.eval_shape(
+            lambda: init_train_state(
+                jax.random.PRNGKey(0), cfg, optimizer, grad_sync, mesh, dp_axes
+            )
+        )
+        batch_struct = shp.batch_structs(cfg, cell)
+        step = make_train_step(cfg, ctx, optimizer, grad_sync=grad_sync)
+        st_sh = state_shardings(state_struct, mesh, dp_axes)
+        b_sh = batch_shardings(batch_struct, cfg, mesh, ctx.dp_axes, ctx.seq_axis)
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(st_sh, b_sh),
+                donate_argnums=(0,),
+            ).lower(state_struct, batch_struct)
+        model_flops = flops_mod.train_step_flops(cfg, cell.seq, cell.batch)
+    elif cell.kind == "prefill":
+        param_struct = shp.param_structs(cfg)
+        batch_struct = shp.batch_structs(cfg, cell)
+
+        def prefill_fn(params, batch):
+            return lm.prefill(params, batch["inputs"], cfg, ctx)
+
+        p_sh = shd.param_shardings(param_struct, mesh)
+        b_sh = batch_shardings(batch_struct, cfg, mesh, ctx.dp_axes, ctx.seq_axis)
+        with mesh:
+            lowered = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh)).lower(
+                param_struct, batch_struct
+            )
+        model_flops = flops_mod.prefill_flops(cfg, cell.seq, cell.batch)
+    else:  # decode
+        param_struct = shp.param_structs(cfg)
+        cache_struct, token_struct, pos_struct = shp.decode_structs(cfg, cell)
+        step = make_serve_step(cfg, ctx)
+        p_sh, c_sh, t_sh, pos_sh = serve_shardings(
+            cfg, param_struct, cache_struct, token_struct, mesh, dp_axes, cell.batch
+        )
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, c_sh, t_sh, pos_sh), donate_argnums=(1,)
+            ).lower(param_struct, cache_struct, token_struct, pos_struct)
+        model_flops = flops_mod.decode_step_flops(cfg, cell.seq, cell.batch)
+
+    compiled = lowered.compile()
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": cell.kind,
+        "mesh": dict(mesh.shape),
+        "chips": n_chips(mesh),
+        "grad_sync": grad_sync,
+        "model_flops": float(model_flops),
+        "params_total": flops_mod.count(cfg).params_total,
+        "params_active": flops_mod.count(cfg).params_active,
+    }
+    return lowered, compiled, meta
+
+
+def run_cell(arch, shape_name, mesh, grad_sync="auto", out_dir=None, tag="", opts=()):
+    t0 = time.time()
+    lowered, compiled, meta = lower_cell(arch, shape_name, mesh, grad_sync, opts=opts)
+    meta["opts"] = list(opts)
+    hlo = compiled.as_text()
+    stats = {
+        **meta,
+        "compile_seconds": time.time() - t0,
+        "memory": hlo_stats.memory_stats(compiled),
+        "cost": hlo_stats.cost_stats(compiled),
+        "collectives": hlo_stats.collect_collectives(hlo).as_dict(),
+        # trip-count-aware accounting (cost_analysis counts scan bodies once)
+        "walk": hlo_walk.walk(hlo).as_dict(),
+        "hlo_bytes": len(hlo),
+    }
+    if out_dir:
+        out_dir = Path(out_dir)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        mesh_tag = "multi" if "pod" in meta["mesh"] else "single"
+        name = f"{arch}--{shape_name}--{mesh_tag}{('--' + tag) if tag else ''}.json"
+        (out_dir / name).write_text(json.dumps(stats, indent=1))
+    return stats
+
+
+def supported_cells():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape_name in cfg.shapes:
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--grad-sync", default="auto",
+                    choices=["auto", "systolic", "compressed"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--opt", default="", help="comma list: bf16_coll,sp_model,windowed")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for arch, shape in supported_cells():
+            print(f"{arch} {shape}")
+        return
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(make_production_mesh(multi_pod=False))
+    if args.mesh in ("multi", "both"):
+        meshes.append(make_production_mesh(multi_pod=True))
+
+    cells = list(supported_cells()) if args.all else [(args.arch, args.shape)]
+    failures = 0
+    for mesh in meshes:
+        mesh_tag = "multi" if "pod" in mesh.axis_names else "single"
+        for arch, shape_name in cells:
+            label = f"{arch} x {shape_name} x {mesh_tag} [{args.grad_sync}]"
+            try:
+                opts = tuple(o for o in args.opt.split(",") if o)
+                stats = run_cell(arch, shape_name, mesh, args.grad_sync, args.out,
+                                 args.tag, opts=opts)
+                mem = stats["memory"].get("argument_size_in_bytes", 0) / stats["chips"]
+                print(
+                    f"OK   {label}: compile={stats['compile_seconds']:.1f}s "
+                    f"flops/dev={stats['cost'].get('flops', 0):.3e} "
+                    f"coll_wire={stats['collectives']['total_wire_bytes']:.3e}B"
+                )
+            except Exception as e:  # noqa: BLE001 - report and continue
+                failures += 1
+                print(f"FAIL {label}: {type(e).__name__}: {e}")
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

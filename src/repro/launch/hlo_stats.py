@@ -1,0 +1,142 @@
+"""Parse compiled (post-SPMD) HLO for roofline inputs.
+
+``cost_analysis()`` gives FLOPs and bytes-accessed of the *per-device* module,
+but not collective traffic — we recover that by walking the optimized HLO text
+and summing operand bytes of every collective op, scaled to per-chip
+wire-bytes by the standard ring algorithm factors:
+
+    all-reduce        2 (n-1)/n * bytes
+    all-gather          (n-1)/n * bytes   (bytes = full output)
+    reduce-scatter      (n-1)/n * bytes   (bytes = full input)
+    all-to-all          (n-1)/n * bytes
+    collective-permute        1 * bytes
+
+n = participant-group size parsed from replica_groups.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\(?[\w\[\],\s{}:#*]+?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=lambda: defaultdict(int))
+    raw_bytes: dict = field(default_factory=lambda: defaultdict(float))
+    wire_bytes: dict = field(default_factory=lambda: defaultdict(float))
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    @property
+    def total_raw_bytes(self) -> float:
+        return sum(self.raw_bytes.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "counts": dict(self.counts),
+            "raw_bytes": {k: float(v) for k, v in self.raw_bytes.items()},
+            "wire_bytes": {k: float(v) for k, v in self.wire_bytes.items()},
+            "total_wire_bytes": float(self.total_wire_bytes),
+        }
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [num_groups, group_size]
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # conservative default
+
+
+def _ring_factor(op: str, n: int) -> float:
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op in ("all-gather", "reduce-scatter", "all-to-all"):
+        return (n - 1) / n
+    return 1.0  # collective-permute
+
+
+def collect_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        n = _group_size(line)
+        if n <= 1 and op != "collective-permute":
+            continue
+        b = _shape_bytes(type_str)
+        stats.counts[op] += 1
+        stats.raw_bytes[op] += b
+        stats.wire_bytes[op] += b * _ring_factor(op, max(n, 2))
+    return stats
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        ma = None
+    out = {}
+    if ma is None:
+        return out
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def cost_stats(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    keys = ("flops", "bytes accessed", "transcendentals", "optimal_seconds")
+    return {k: float(ca[k]) for k in keys if k in ca}

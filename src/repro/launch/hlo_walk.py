@@ -1,0 +1,277 @@
+"""Trip-count-aware HLO accounting.
+
+``compiled.cost_analysis()`` visits each computation **once** — a
+``lax.scan`` over N layer-units contributes its body flops/bytes/collectives
+a single time, undercounting by ~N. This walker parses the optimized HLO
+text, builds the computation call graph, multiplies through
+``known_trip_count`` of every while loop, and accounts per-computation:
+
+  * dot/convolution flops (operand shapes resolved via per-computation
+    symbol tables),
+  * collective wire-bytes (ring-algorithm factors, as in hlo_stats),
+  * an HBM-traffic proxy: 2 x sum of instruction result bytes (writes +
+    first-reads), excluding parameter/constant/tuple plumbing.
+
+The result is the per-device roofline input. Validated against analytic
+6*N*D counts in tests (ratio reported per cell in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s+->")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(.+?)\s+([\w\-]+)\(")
+_CALLEE_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)")
+
+_COLL_FACTOR = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / n,
+    "all-gather": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _parse_shapes(type_str: str):
+    """All (dtype, dims) in a type string (handles tuples)."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(
+        _DTYPE_BYTES[dt] * (math.prod(shape) if shape else 1)
+        for dt, shape in _parse_shapes(type_str)
+    )
+
+
+@dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclass
+class _Computation:
+    name: str
+    params: dict = field(default_factory=dict)  # name -> type_str
+    instrs: list = field(default_factory=list)
+
+
+def _split_computations(text: str) -> tuple[dict, str]:
+    comps: dict[str, _Computation] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" "):
+            m = _HEADER_RE.match(line)
+            if m:
+                is_entry, name, args = m.group(1), m.group(2), m.group(3)
+                cur = _Computation(name)
+                # header params: "a: f32[64,64], b: (s32[], f32[2])"
+                for pm in re.finditer(r"%?([\w.\-]+):\s*(\([^)]*\)|[\w\[\],]+)", args):
+                    cur.params[pm.group(1)] = pm.group(2)
+                comps[name] = cur
+                if is_entry:
+                    entry = name
+                continue
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.instrs.append(_Instr(m.group(1), m.group(2), m.group(3), line))
+    return comps, entry
+
+
+def _symbol_table(comp: _Computation) -> dict:
+    table = dict(comp.params)
+    for ins in comp.instrs:
+        table[ins.name] = ins.type_str
+    return table
+
+
+def _operand_names(line: str, op: str) -> list[str]:
+    # operands are inside the first (...) after "op("
+    idx = line.find(op + "(")
+    if idx < 0:
+        return []
+    depth = 0
+    buf = ""
+    for ch in line[idx + len(op):]:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        if ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            buf += ch
+    return re.findall(r"%([\w.\-]+)", buf)
+
+
+def _dot_flops(ins: _Instr, table: dict) -> float:
+    ops = _operand_names(ins.line, ins.op)
+    if not ops:
+        return 0.0
+    lhs_t = table.get(ops[0])
+    res = _parse_shapes(ins.type_str)
+    if not res or lhs_t is None:
+        return 0.0
+    res_elems = math.prod(res[0][1]) if res[0][1] else 1
+    lhs_shapes = _parse_shapes(lhs_t)
+    if not lhs_shapes:
+        return 0.0
+    lhs_shape = lhs_shapes[0][1]
+    m = _CONTRACT_RE.search(ins.line)
+    if not m:
+        return 2.0 * res_elems  # unknown contraction: lower bound
+    cdims = [int(d) for d in m.group(1).split(",") if d]
+    csize = math.prod(lhs_shape[d] for d in cdims if d < len(lhs_shape)) or 1
+    return 2.0 * res_elems * csize
+
+
+def _conv_flops(ins: _Instr, table: dict) -> float:
+    ops = _operand_names(ins.line, ins.op)
+    res = _parse_shapes(ins.type_str)
+    if len(ops) < 2 or not res:
+        return 0.0
+    rhs_t = table.get(ops[1])
+    if rhs_t is None:
+        return 0.0
+    rhs = _parse_shapes(rhs_t)
+    if not rhs:
+        return 0.0
+    # kernel elems x 2 per output element (grouping ignored: upper bound)
+    kernel_elems = math.prod(rhs[0][1][:-1]) if rhs[0][1] else 1
+    res_elems = math.prod(res[0][1]) if res[0][1] else 1
+    return 2.0 * res_elems * kernel_elems
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+@dataclass
+class WalkStats:
+    flops: float = 0.0
+    bytes_proxy: float = 0.0
+    coll_wire_bytes: float = 0.0
+    coll_by_op: dict = field(default_factory=lambda: defaultdict(float))
+    coll_counts: dict = field(default_factory=lambda: defaultdict(float))
+
+    def as_dict(self):
+        return {
+            "flops": self.flops,
+            "bytes_proxy": self.bytes_proxy,
+            "coll_wire_bytes": self.coll_wire_bytes,
+            "coll_by_op": dict(self.coll_by_op),
+            "coll_counts": dict(self.coll_counts),
+        }
+
+
+_SKIP_BYTES_OPS = {"tuple", "parameter", "constant", "get-tuple-element",
+                   "bitcast", "copy", "after-all", "iota"}
+
+
+def walk(hlo_text: str) -> WalkStats:
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:
+        return WalkStats()
+
+    # per-computation raw stats + call edges
+    raw = {}
+    edges = defaultdict(list)  # comp -> [(callee, multiplier)]
+    for name, comp in comps.items():
+        table = _symbol_table(comp)
+        flops = bytes_proxy = wire = 0.0
+        by_op = defaultdict(float)
+        counts = defaultdict(float)
+        for ins in comp.instrs:
+            base_op = ins.op.replace("-start", "") if ins.op.endswith("-start") else ins.op
+            if base_op in ("dot", "dot-general"):
+                flops += _dot_flops(ins, table)
+            elif base_op == "convolution":
+                flops += _conv_flops(ins, table)
+            if base_op in _COLL_FACTOR:
+                n = _group_size(ins.line)
+                if n > 1 or base_op == "collective-permute":
+                    b = _type_bytes(ins.type_str) * _COLL_FACTOR[base_op](max(n, 2))
+                    wire += b
+                    by_op[base_op] += b
+                    counts[base_op] += 1
+            if base_op not in _SKIP_BYTES_OPS and not base_op.endswith("-done"):
+                bytes_proxy += 2.0 * _type_bytes(ins.type_str)
+            # call edges
+            trip = 1
+            tm = _TRIP_RE.search(ins.line)
+            if tm and base_op == "while":
+                trip = int(tm.group(1))
+            for callee in _CALLEE_RE.findall(ins.line):
+                edges[name].append((callee, trip))
+            bm = _BRANCHES_RE.search(ins.line)
+            if bm:
+                for callee in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                    edges[name].append((callee, 1))
+        raw[name] = (flops, bytes_proxy, wire, by_op, counts)
+
+    # effective multiplier per computation (sum over call paths)
+    mult = defaultdict(float)
+
+    def visit(name, m):
+        if name not in raw:
+            return
+        mult[name] += m
+        for callee, trip in edges.get(name, []):
+            visit(callee, m * trip)
+
+    visit(entry, 1.0)
+
+    out = WalkStats()
+    for name, (flops, bp, wire, by_op, counts) in raw.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        out.flops += m * flops
+        out.bytes_proxy += m * bp
+        out.coll_wire_bytes += m * wire
+        for k, v in by_op.items():
+            out.coll_by_op[k] += m * v
+        for k, v in counts.items():
+            out.coll_counts[k] += m * v
+    return out

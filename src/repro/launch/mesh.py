@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Kept as functions (never module-level constants) so importing this module
+never touches jax device state — required for the dry-run's forced 512-device
+initialization to happen first.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment mesh.
+
+    Single pod:  (16, 16) over ("data", "model")  — 256 chips (v5e pod).
+    Multi-pod:   (2, 16, 16) over ("pod", "data", "model") — 512 chips.
+
+    The "pod" axis carries the paper's mesh-of-HMCs data-parallel tier (C6);
+    scaling beyond 2 pods is the same code with a larger leading axis.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh for tests (works with a single CPU device when prod(shape)==1)."""
+    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes_of(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def n_chips(mesh) -> int:
+    import math
+
+    return math.prod(mesh.shape.values())

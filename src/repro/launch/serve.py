@@ -1,0 +1,57 @@
+"""Serve-step factory: batched single-token decode against a KV/state cache.
+
+``decode_*`` / ``long_*`` dry-run cells lower exactly this function. The cache
+is donated (in-place update on device), batch is sharded over DP, heads/state
+width over TP (parallel/sharding.py::cache_specs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import lm
+from repro.models.config import ModelConfig, ParallelCtx
+from repro.parallel import sharding as shd
+
+
+def make_serve_step(cfg: ModelConfig, ctx: ParallelCtx):
+    def serve_step(params, cache, token, pos):
+        logits, cache = lm.serve_step(params, cache, token, pos, cfg, ctx)
+        return logits, cache
+
+    return serve_step
+
+
+def serve_shardings(cfg, param_struct, cache_struct, token_struct, mesh, dp_axes, batch):
+    params_sh = shd.param_shardings(param_struct, mesh)
+    cache_sh = shd.cache_specs(cache_struct, mesh, dp_axes, batch)
+    import math
+
+    dp = math.prod(mesh.shape[a] for a in dp_axes) if dp_axes else 1
+    bspec = dp_axes if (dp_axes and batch % dp == 0) else None
+    token_sh = NamedSharding(mesh, P(bspec, *([None] * (len(token_struct.shape) - 1))))
+    pos_sh = NamedSharding(mesh, P())
+    return params_sh, cache_sh, token_sh, pos_sh
+
+
+def greedy_decode(params, cfg, ctx, prompt_tokens, max_new: int):
+    """Simple greedy decoding loop for the serving example (CPU-scale)."""
+    b, s0 = prompt_tokens.shape
+    max_len = s0 + max_new
+    cache = lm.init_cache(cfg, b, max_len, dtype=cfg.dtype)
+    step = jax.jit(make_serve_step(cfg, ctx))
+
+    tokens = prompt_tokens
+    logits = None
+    for t in range(s0):
+        logits, cache = step(params, cache, tokens[:, t], jnp.int32(t))
+    out = []
+    cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for t in range(s0, max_len):
+        out.append(cur)
+        logits, cache = step(params, cache, cur, jnp.int32(t))
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,74 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+``input_specs`` returns weak-type-correct, shardable ShapeDtypeStructs for
+every model input — no device allocation (the shannon/kernels pattern).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}
+
+
+def batch_structs(cfg: ModelConfig, shape: ShapeCell):
+    """{"inputs", "labels"} ShapeDtypeStructs for a train/prefill step."""
+    b, s = shape.batch, shape.seq
+    if cfg.input_mode == "embeddings":
+        inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.dtype)
+    elif cfg.n_codebooks > 1:
+        inputs = jax.ShapeDtypeStruct((b, s, cfg.n_codebooks), jnp.int32)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.n_codebooks > 1:
+        labels = jax.ShapeDtypeStruct((b, s, cfg.n_codebooks), jnp.int32)
+    else:
+        labels = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return {"inputs": inputs, "labels": labels}
+
+
+def decode_structs(cfg: ModelConfig, shape: ShapeCell):
+    """(cache, token, pos) ShapeDtypeStructs for one serve_step."""
+    b, s = shape.batch, shape.seq
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, b, s))
+    if cfg.input_mode == "embeddings":
+        token = jax.ShapeDtypeStruct((b, cfg.d_model), cfg.dtype)
+    elif cfg.n_codebooks > 1:
+        token = jax.ShapeDtypeStruct((b, cfg.n_codebooks), jnp.int32)
+    else:
+        token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, token, pos
+
+
+def param_structs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: lm.init_lm(jax.random.PRNGKey(0), cfg))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """All ShapeDtypeStructs a given (arch x shape) cell needs."""
+    shape = SHAPES[shape_name]
+    if shape.kind in ("train", "prefill"):
+        return {"params": param_structs(cfg), "batch": batch_structs(cfg, shape)}
+    cache, token, pos = decode_structs(cfg, shape)
+    return {"params": param_structs(cfg), "cache": cache, "token": token, "pos": pos}

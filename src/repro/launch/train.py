@@ -1,0 +1,302 @@
+"""Train-step factory + CLI driver.
+
+Three gradient-sync modes (EXPERIMENTS.md §Perf compares them):
+
+  * ``auto``       — pure pjit: GSPMD inserts the DP all-reduce and XLA's
+                     latency-hiding scheduler overlaps it with the backward
+                     pass. This is the beyond-paper optimized path.
+  * ``systolic``   — the paper-faithful C6 path: loss+grad run inside a
+                     partial-manual shard_map over the DP axes ("pod","data")
+                     and gradients are averaged by the explicit 4-wave
+                     systolic ring (core/systolic.py), exactly like the
+                     mesh-of-HMCs weight update in Fig. 14.
+  * ``compressed`` — systolic + int8 error-feedback compression of the
+                     gradient stream (optim/compression.py): 4x fewer bytes
+                     on the slowest (inter-pod) hop.
+
+Microbatch gradient accumulation (``num_microbatches``) bounds activation
+memory — the paper's batch-loop with constant memory footprint (§4.5 note 1).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import systolic
+from repro.models import lm
+from repro.models.config import ModelConfig, ParallelCtx
+from repro.optim import compression
+from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+from repro.parallel import sharding as shd
+
+
+def _dp_degree(mesh, dp_axes) -> int:
+    return math.prod(mesh.shape[a] for a in dp_axes) if dp_axes else 1
+
+
+def init_train_state(rng, cfg: ModelConfig, optimizer: Optimizer, grad_sync: str = "auto",
+                     mesh=None, dp_axes: tuple[str, ...] = ()):
+    params = lm.init_lm(rng, cfg)
+    state = {"params": params, "opt": optimizer.init(params), "step": jnp.zeros((), jnp.int32)}
+    if grad_sync == "compressed":
+        dp = _dp_degree(mesh, dp_axes) if mesh is not None else 1
+        state["err"] = jax.tree.map(
+            lambda p: jnp.zeros((dp,) + p.shape, jnp.float32), params
+        )
+    return state
+
+
+def _grads_and_metrics(params, batch, cfg, ctx, num_microbatches):
+    """Local (per-dp-shard under systolic; logical under pjit) grads."""
+
+    def loss_fn(p, mb):
+        return lm.lm_loss(p, mb, cfg, ctx)
+
+    if num_microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+
+    def mb_slice(x, i):
+        mb = x.shape[0] // num_microbatches
+        return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+    def body(carry, i):
+        acc, _ = carry
+        mb = jax.tree.map(lambda x: mb_slice(x, i), batch)
+        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+        return (acc, metrics), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (gsum, metrics), _ = jax.lax.scan(
+        body, (zeros, {"loss": 0.0, "ce": 0.0, "load_balance": 0.0, "router_z": 0.0}),
+        jnp.arange(num_microbatches),
+    )
+    grads = jax.tree.map(lambda g, p: (g / num_microbatches).astype(p.dtype), gsum, params)
+    return grads, metrics
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+    optimizer: Optimizer,
+    *,
+    grad_sync: str = "auto",
+    num_microbatches: int = 1,
+    clip_norm: float | None = 1.0,
+):
+    mesh, dp_axes = ctx.mesh, ctx.dp_axes
+
+    def finish(state, grads, metrics):
+        if mesh is not None:
+            # H4 (§Perf): pin gradient shardings to the parameter shardings.
+            # Without this GSPMD may materialize full (TP-unsharded) weight
+            # gradients inside the backward scan and all-reduce them at full
+            # size every layer iteration.
+            g_sh = shd.param_shardings(
+                jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), grads),
+                mesh,
+            )
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, g_sh
+            )
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            metrics = dict(metrics, grad_norm=gnorm)
+        updates, opt = optimizer.update(grads, state["opt"], state["params"])
+        params = apply_updates(state["params"], updates)
+        new_state = dict(state, params=params, opt=opt, step=state["step"] + 1)
+        return new_state, metrics
+
+    if grad_sync == "auto" or mesh is None or not dp_axes:
+
+        def train_step(state, batch):
+            grads, metrics = _grads_and_metrics(state["params"], batch, cfg, ctx,
+                                                num_microbatches)
+            return finish(state, grads, metrics)
+
+        return train_step
+
+    # --- paper-faithful systolic modes -------------------------------------
+    dp_sizes = tuple(mesh.shape[a] for a in dp_axes)
+    # The systolic wave order is horizontal ("data") then vertical ("pod"),
+    # matching Fig. 14 — reverse of the mesh axis order.
+    wave_axes = tuple(reversed(dp_axes))
+    wave_sizes = tuple(mesh.shape[a] for a in wave_axes)
+    inner_ctx = ParallelCtx(
+        mesh=mesh, dp_axes=(), tp_axis=ctx.tp_axis, seq_axis=None,
+        moe_impl=ctx.moe_impl, attn_backend=ctx.attn_backend, remat=ctx.remat,
+        block_kv=ctx.block_kv, ssd_chunk=ctx.ssd_chunk,
+    )
+    compressed = grad_sync == "compressed"
+
+    def per_shard(params, batch, err):
+        grads, metrics = _grads_and_metrics(params, batch, cfg, inner_ctx, num_microbatches)
+        new_err = err
+        if compressed:
+            err0 = jax.tree.map(lambda e: e[0], err)  # drop local leading dim
+            grads, _payload, ne = compression.compress_with_feedback(grads, err0)
+            new_err = jax.tree.map(lambda e: e[None], ne)
+            # int8 wire payload per ring hop (4x fewer bytes on every wave)
+            grads = systolic.systolic_mean_tree_q8(grads, wave_axes, wave_sizes)
+        else:
+            grads = systolic.systolic_mean_tree(grads, wave_axes, wave_sizes)
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, dp_axes), metrics)
+        return grads, metrics, new_err
+
+    batch_spec_fn = lambda leaf: P(dp_axes, *([None] * (len(leaf.shape) - 1)))
+
+    def train_step(state, batch):
+        err = state.get("err", {"_": jnp.zeros((_dp_degree(mesh, dp_axes), 1), jnp.float32)})
+        batch_specs = jax.tree.map(lambda x: batch_spec_fn(x), batch)
+        err_specs = jax.tree.map(lambda _: P(dp_axes), err)
+        grads, metrics, new_err = jax.shard_map(
+            per_shard,
+            mesh=mesh,
+            in_specs=(P(), batch_specs, err_specs),
+            out_specs=(P(), P(), err_specs),
+            axis_names=set(dp_axes),
+            check_vma=False,
+        )(state["params"], batch, err)
+        new_state, metrics = finish(state, grads, metrics)
+        if "err" in state:
+            new_state["err"] = new_err
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers for jit/lower
+# ---------------------------------------------------------------------------
+
+
+def state_shardings(state_struct, mesh, dp_axes):
+    """NamedSharding tree for a train state (params TP, opt ZeRO-1, err DP)."""
+    param_sh = shd.param_shardings(state_struct["params"], mesh)
+    opt_sh = shd.opt_state_shardings(state_struct["opt"], mesh, dp_axes)
+    out = {
+        "params": param_sh,
+        "opt": opt_sh,
+        "step": NamedSharding(mesh, P()),
+    }
+    if "err" in state_struct:
+        out["err"] = jax.tree.map(
+            lambda leaf: NamedSharding(
+                mesh, P(dp_axes, *([None] * (len(leaf.shape) - 1)))
+            ),
+            state_struct["err"],
+        )
+    return out
+
+
+def batch_shardings(batch_struct, cfg, mesh, dp_axes, seq_axis=None, batch_size=None):
+    def one(leaf):
+        b = leaf.shape[0]
+        dp = _dp_degree(mesh, dp_axes)
+        bspec = dp_axes if (dp_axes and b % dp == 0) else None
+        rest = [None] * (len(leaf.shape) - 1)
+        if seq_axis is not None and len(leaf.shape) >= 2:
+            rest[0] = seq_axis
+        return NamedSharding(mesh, P(bspec, *rest))
+
+    return jax.tree.map(one, batch_struct)
+
+
+# ---------------------------------------------------------------------------
+# CLI driver: the production training entrypoint.
+#
+#   PYTHONPATH=src python -m repro.launch.train --arch qwen1_5_0_5b \
+#       --reduced --steps 50 --batch 8 --seq 64 --grad-sync systolic
+#
+# On a real multi-host deployment jax.distributed.initialize() runs first and
+# the same code drives every host; in this container it runs single-process
+# (optionally with fake devices via XLA_FLAGS for mesh exercises).
+# ---------------------------------------------------------------------------
+
+
+def _cli():
+    import argparse
+    import time
+
+    from repro.configs import get_config, reduce_config
+    from repro.data.pipeline import DataIterator, InMemoryDataset
+    from repro.models.config import ParallelCtx
+    from repro.optim.optimizers import get_optimizer
+    from repro.runtime.supervisor import FailureInjector, Supervisor
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1_5_0_5b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--optimizer", default="adamw", choices=["sgd", "adamw"])
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-sync", default="auto",
+                    choices=["auto", "systolic", "compressed"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="artifacts/train_cli_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--crash-at", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    if cfg.input_mode == "embeddings":
+        raise SystemExit("CLI driver trains token-input archs; use examples/ for stubs")
+
+    n_dev = jax.device_count()
+    if n_dev > 1:
+        model = math.gcd(n_dev, 4)
+        mesh = jax.make_mesh(
+            (n_dev // model, model), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        )
+        dp_axes = ("data",)
+    else:
+        mesh, dp_axes = None, ()
+    ctx = ParallelCtx(mesh=mesh, dp_axes=dp_axes,
+                      tp_axis="model" if mesh else None, attn_backend="xla",
+                      grad_sync=args.grad_sync)
+
+    opt = get_optimizer(args.optimizer, args.lr)
+    ds = InMemoryDataset.synthetic(2_000_000, cfg.vocab_size, args.seq, seed=0)
+    iterator = DataIterator(ds, batch_size=args.batch, seed=0)
+
+    def init_state(_mesh):
+        return init_train_state(jax.random.PRNGKey(0), cfg, opt, args.grad_sync,
+                                mesh, dp_axes)
+
+    def make_step(_mesh):
+        return jax.jit(
+            make_train_step(cfg, ctx, opt, grad_sync=args.grad_sync,
+                            num_microbatches=args.microbatches),
+            donate_argnums=(0,),
+        )
+
+    injector = FailureInjector({args.crash_at: "crash"} if args.crash_at else {})
+    t0 = time.time()
+
+    def cb(step, metrics):
+        if step % 10 == 0:
+            print(f"step {step:5d} ce={float(metrics['ce']):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+
+    sup = Supervisor(make_step, init_state, iterator, args.ckpt_dir,
+                     ckpt_every=args.ckpt_every, injector=injector)
+    report = sup.run(args.steps, metrics_cb=cb)
+    print(f"done: {report.steps_run} steps, {report.restarts} restarts")
+
+
+if __name__ == "__main__":
+    _cli()

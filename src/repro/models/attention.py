@@ -1,0 +1,159 @@
+"""GQA attention with full / sliding-window masking and a functional KV cache.
+
+The score computation goes through :mod:`repro.kernels.ops.attention` (Pallas
+flash kernel on TPU, blockwise-jnp elsewhere) so all archs share the NTX-style
+fp32-accumulated datapath. GQA is native — KV is never repeated in memory.
+
+TP sharding note: head dims carry the "heads"/"kv_heads" logical axes; the
+sharding rules map both onto the mesh "model" axis (GSPMD pads when the head
+count is not divisible — the per-arch padding overhead is reported in the
+roofline tables).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.blocks import _dot, apply_rope, init_rmsnorm, rms_norm
+
+
+def init_attention(rng, cfg, dtype=jnp.bfloat16):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    std = d**-0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, hq * dh)) * std).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, hkv * dh)) * std).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, hkv * dh)) * std).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (hq * dh, d)) * (hq * dh) ** -0.5).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh)
+        p["k_norm"] = init_rmsnorm(dh)
+    return p
+
+
+def _project_qkv(x, params, cfg, positions):
+    b, s, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _dot(x, params["wq"])
+    k = _dot(x, params["wk"])
+    v = _dot(x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = q.reshape(b, s, hq, dh).transpose(0, 2, 1, 3)  # (B, Hq, S, Dh)
+    k = k.reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(
+    x: jnp.ndarray,  # (B, S, D)
+    params,
+    cfg,
+    *,
+    window: int | None = None,
+    backend: str = "auto",
+    block_kv: int = 512,
+    windowed: bool = False,
+    ctx=None,
+) -> jnp.ndarray:
+    """Training/prefill self-attention (causal)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = _project_qkv(x, params, cfg, positions)
+    if ctx is not None and ctx.shard_heads and ctx.mesh is not None:
+        # H3 (§Perf): pin the (B, H, S, Dh) tensors to head-sharding so the
+        # score einsums are head-local (GSPMD pads non-divisible head counts);
+        # otherwise GSPMD may shard the contraction dim and partial-sum the
+        # fp32 score tensors — the dominant collective in the baseline.
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        hspec = NamedSharding(ctx.mesh, P(ctx.dp_axes or None, ctx.tp_axis, None, None))
+        q = jax.lax.with_sharding_constraint(q, hspec)
+        k = jax.lax.with_sharding_constraint(k, hspec)
+        v = jax.lax.with_sharding_constraint(v, hspec)
+    o = ops.attention(
+        q, k, v, causal=True, window=window, backend=backend,
+        block_kv=min(block_kv, s), windowed=windowed,
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return _dot(o, params["wo"])
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, window: int | None, dtype=jnp.bfloat16):
+    """Cache for one attention layer. Sliding-window layers only keep the window."""
+    length = min(max_len, window) if window is not None else max_len
+    shape = (batch, cfg.n_kv_heads, length, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention_block(
+    x: jnp.ndarray,  # (B, 1, D)
+    params,
+    cfg,
+    cache,
+    pos: jnp.ndarray,  # scalar int32: index of the token being generated
+    *,
+    window: int | None = None,
+    block_kv: int = 512,
+):
+    """One decode step: update the cache at ``pos`` and attend to the prefix.
+
+    Sliding-window layers store the cache as a ring buffer of size ``window``
+    (slot = pos % window) — the RG-LRU/local-attention memory model.
+    Returns (out (B,1,D), new_cache).
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(x, params, cfg, positions=pos[None])
+    cache_len = cache["k"].shape[2]
+    slot = pos % cache_len if window is not None else pos
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
+
+    if window is not None:
+        # Ring buffer: positions of slot j = pos - ((pos - j) mod cache_len).
+        slots = jnp.arange(cache_len)
+        kv_pos = pos - ((pos - slots) % cache_len)  # (cache_len,) absolute positions
+        valid = kv_pos >= jnp.maximum(0, pos - window + 1)
+    else:
+        valid = jnp.arange(cache_len) <= pos
+    o = _dense_decode_attention(q, new_k, new_v, valid)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return _dot(o, params["wo"]), {"k": new_k, "v": new_v}
+
+
+def _dense_decode_attention(q, k, v, valid):
+    """Single-token attention over the full cache, flash-decoding friendly.
+
+    Written as dense einsums over the cache length so that when the cache is
+    sharded on its sequence dim (kv_heads < TP degree), GSPMD partitions the
+    score/value contractions S-parallel and inserts only tiny collectives
+    (softmax max/sum and the (B,H,D) output psum) — the flash-decoding
+    pattern, with no KV gather.
+    """
+    b, hq, _, dh = q.shape
+    hkv = k.shape[1]
+    grp = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, grp, dh)
+    s = jnp.einsum("bkgd,bkjd->bkgj", qf, k.astype(jnp.float32)) * (dh**-0.5)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    o = jnp.einsum("bkgj,bkjd->bkgd", p, v.astype(jnp.float32))
+    o = o / jnp.sum(p, axis=-1, keepdims=True)
+    return o.reshape(b, hq, 1, dh).astype(q.dtype)

@@ -1,0 +1,118 @@
+"""Shared NN building blocks: norms, RoPE, MLPs.
+
+Parameters are plain pytrees (nested dicts of jnp arrays); every init function
+has a matching apply function. Compute follows the NTX discipline: matmuls
+accumulate in fp32 (``preferred_element_type``) and are rounded once at the
+cast back to the activation dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# Rounding point for matmul partial sums. "f32" (default, NTX-faithful):
+# per-chip partials stay fp32, so the TP all-reduce runs in fp32. "bf16"
+# (beyond-paper perf option, EXPERIMENTS.md §Perf H1): partials are rounded to
+# bf16 *before* the collective, halving TP wire bytes; the MXU still
+# accumulates each partial in fp32 internally.
+MATMUL_PARTIAL_DTYPE = "f32"
+
+
+def set_matmul_partial_dtype(mode: str):
+    global MATMUL_PARTIAL_DTYPE
+    assert mode in ("f32", "bf16")
+    MATMUL_PARTIAL_DTYPE = mode
+
+
+def _dot(x, w):
+    """Activation @ weight with fp32 accumulation, output in activation dtype."""
+    if MATMUL_PARTIAL_DTYPE == "bf16":
+        return jnp.dot(x, w, preferred_element_type=x.dtype)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rms_norm(x: jnp.ndarray, params, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(x: jnp.ndarray, params, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+def apply_norm(x, params, kind: str, eps: float):
+    return rms_norm(x, params, eps) if kind == "rms" else layer_norm(x, params, eps)
+
+
+def init_norm(d: int, kind: str, dtype=jnp.float32):
+    return init_rmsnorm(d, dtype) if kind == "rms" else init_layernorm(d, dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, D_head); positions: (S,) or (..., S) token positions."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (d/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(rng, d: int, d_ff: int, act: str, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    std = d**-0.5
+    p = {"w_down": (jax.random.normal(k3, (d_ff, d)) * d_ff**-0.5).astype(dtype)}
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(k1, (d, d_ff)) * std).astype(dtype)
+        p["w_up"] = (jax.random.normal(k2, (d, d_ff)) * std).astype(dtype)
+    else:  # plain gelu
+        p["w_up"] = (jax.random.normal(k2, (d, d_ff)) * std).astype(dtype)
+    return p
+
+
+def mlp(x: jnp.ndarray, params, act: str) -> jnp.ndarray:
+    if act == "swiglu":
+        h = jax.nn.silu(_dot(x, params["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+        h = h * _dot(x, params["w_up"])
+    elif act == "geglu":
+        h = jax.nn.gelu(_dot(x, params["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+        h = h * _dot(x, params["w_up"])
+    else:
+        h = jax.nn.gelu(_dot(x, params["w_up"]).astype(jnp.float32)).astype(x.dtype)
+    return _dot(h, params["w_down"])

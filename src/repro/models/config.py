@@ -1,0 +1,114 @@
+"""Model and parallelism configuration dataclasses."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import jax.numpy as jnp
+
+# A layer is (mixer, ffn):
+#   mixer: "attn" (full), "swa" (sliding window), "rec" (RG-LRU), "ssm" (Mamba-2)
+#   ffn:   "mlp", "moe", or None (mamba2 blocks have no separate FFN)
+LayerKind = tuple[str, Any]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    pattern: tuple[LayerKind, ...] = (("attn", "mlp"),)
+    # attention
+    rope_theta: float = 1e4
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    window: int | None = None  # sliding-window size for "swa" mixers
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    shared_expert_d_ff: int = 0
+    capacity_factor: float = 1.25
+    # ssm (mamba2)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_groups: int = 1
+    # rg-lru
+    lru_width: int = 0
+    # frontend / io
+    input_mode: str = "tokens"  # "tokens" | "embeddings" (vlm/audio stubs)
+    n_codebooks: int = 1  # musicgen: parallel codebook heads
+    tie_embeddings: bool = False
+    embed_scale: bool = False  # gemma-style sqrt(d) embedding scale
+    # misc
+    mlp_act: str = "swiglu"  # swiglu | geglu | gelu
+    norm_type: str = "rms"  # rms | layer
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    # which input shapes this arch supports (dry-run cells)
+    shapes: tuple[str, ...] = ("train_4k", "prefill_32k", "decode_32k")
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch can run long_500k (no full-attention layer)."""
+        return all(m != "attn" for m, _ in self.pattern)
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ParallelCtx:
+    """How a forward/backward pass is parallelized & executed.
+
+    ``mesh=None`` means single-device (smoke tests / CPU examples); then all
+    sharding constraints are no-ops and MoE uses the dense oracle path.
+    """
+
+    mesh: Any = None
+    dp_axes: tuple[str, ...] = ()  # axes the batch dim is sharded over
+    tp_axis: str | None = None  # "model" on the production mesh
+    seq_axis: str | None = None  # sequence-parallel axis (long-context cells)
+    moe_impl: str = "dense"  # dense | ep
+    attn_backend: str = "auto"  # kernels.ops backend
+    remat: str = "none"  # none | full
+    block_kv: int = 512
+    ssd_chunk: int = 128
+    grad_sync: str = "auto"  # auto(pjit psum) | systolic | compressed
+    # §Perf knobs (EXPERIMENTS.md):
+    sp_model: bool = False  # H2: sequence-parallel residual stream over "model"
+    collective_dtype: str = "f32"  # H1: "bf16" rounds partials pre-collective
+    windowed_attn: bool = False  # H5: window-limited KV scan for swa prefill
+    shard_heads: bool = False  # H3: pin q/k/v to head-sharding (GSPMD pads)
+    shard_scan_params: bool = False  # H6: pin per-layer param slices in the scan
+
+    def act_spec(self):
+        """PartitionSpec for (B, S, D) activations."""
+        from jax.sharding import PartitionSpec as P
+
+        if self.mesh is None:
+            return None
+        seq = self.seq_axis
+        if self.sp_model and seq is None:
+            seq = self.tp_axis  # Megatron-SP: residuals sharded on S over TP
+        return P(self.dp_axes if self.dp_axes else None, seq, None)
+
+
+def constrain(x, ctx: ParallelCtx, spec=None):
+    """with_sharding_constraint if a mesh is present, else identity."""
+    if ctx.mesh is None:
+        return x
+    import jax
+    from jax.sharding import NamedSharding
+
+    spec = spec if spec is not None else ctx.act_spec()
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

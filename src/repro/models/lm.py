@@ -1,0 +1,135 @@
+"""Language-model wrapper: embeddings, decoder stack, heads, losses, serving.
+
+Inputs are either token ids (B, S) or — for the [vlm]/[audio] stub frontends —
+precomputed embeddings (B, S, D) (`cfg.input_mode == "embeddings"`); musicgen
+additionally predicts ``n_codebooks`` parallel vocabularies.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as tfm
+from repro.models.blocks import init_norm, apply_norm
+from repro.models.config import ModelConfig, ParallelCtx, constrain
+
+
+def init_lm(rng, cfg: ModelConfig) -> dict:
+    k_embed, k_dec, k_head = jax.random.split(rng, 3)
+    p = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(
+            cfg.dtype
+        ),
+        "decoder": tfm.init_decoder(k_dec, cfg),
+        "final_norm": init_norm(cfg.d_model, cfg.norm_type),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.n_codebooks * cfg.vocab_size))
+            * cfg.d_model**-0.5
+        ).astype(cfg.dtype)
+    return p
+
+
+def embed_inputs(params, inputs, cfg: ModelConfig):
+    """Token ids (B,S) or (B,S,n_codebooks) -> embeddings; passthrough for stubs."""
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        if cfg.n_codebooks > 1 and inputs.ndim == 3:
+            x = jnp.take(params["embed"], inputs, axis=0).sum(axis=2)  # codebook sum
+        else:
+            x = jnp.take(params["embed"], inputs, axis=0)
+    else:
+        x = inputs.astype(cfg.dtype)  # stub frontend: precomputed embeddings
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return x
+
+
+def logits_from_hidden(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        w = params["embed"].T  # (D, V)
+    else:
+        w = params["lm_head"]  # (D, CB*V)
+    logits = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if cfg.n_codebooks > 1:
+        logits = logits.reshape(x.shape[:-1] + (cfg.n_codebooks, cfg.vocab_size))
+    return logits
+
+
+def forward(params, inputs, cfg: ModelConfig, ctx: ParallelCtx):
+    """-> (logits fp32, aux dict)."""
+    from repro.models import blocks as _blocks
+
+    _blocks.set_matmul_partial_dtype(ctx.collective_dtype)
+    x = embed_inputs(params, inputs, cfg)
+    x = constrain(x, ctx)
+    x, aux = tfm.decoder(x, params["decoder"], cfg, ctx)
+    x = apply_norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+    logits = logits_from_hidden(params, x, cfg)
+    if ctx.mesh is not None:
+        vspec = (
+            P(ctx.dp_axes or None, ctx.seq_axis, ctx.tp_axis)
+            if cfg.n_codebooks == 1
+            else P(ctx.dp_axes or None, ctx.seq_axis, None, ctx.tp_axis)
+        )
+        logits = constrain(logits, ctx, vspec)
+    return logits, aux
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, z_loss: float = 0.0):
+    """Mean CE over all positions (and codebooks when present), fp32.
+
+    logits: (..., V) fp32; labels: (...) int32.
+    """
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - ll)
+    if z_loss:
+        ce = ce + z_loss * jnp.mean(lse**2)
+    return ce
+
+
+def lm_loss(params, batch, cfg: ModelConfig, ctx: ParallelCtx, aux_weight: float = 0.01):
+    """batch: {"inputs": ids/embeddings, "labels": ids}. Returns (loss, metrics)."""
+    logits, aux = forward(params, batch["inputs"], cfg, ctx)
+    ce = cross_entropy(logits, batch["labels"])
+    loss = ce + aux_weight * aux["load_balance"] + 1e-3 * aux["router_z"]
+    metrics = {"loss": loss, "ce": ce, **aux}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    return tfm.init_decoder_cache(cfg, batch, max_len, dtype)
+
+
+def serve_step(params, cache, token, pos, cfg: ModelConfig, ctx: ParallelCtx):
+    """One decode step: token (B,) int32 (or (B,D) stub embedding), pos scalar.
+
+    Returns (logits (B, V) fp32 [or (B, CB, V)], new_cache).
+    """
+    if token.dtype in (jnp.int32, jnp.int64):
+        inp = token[:, None] if cfg.n_codebooks == 1 else token[:, None, :]
+    else:
+        inp = token[:, None, :]
+    x = embed_inputs(params, inp, cfg)
+    x, cache = tfm.decoder_step(x, params["decoder"], cfg, cache, pos, ctx)
+    x = apply_norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+    logits = logits_from_hidden(params, x, cfg)
+    return logits[:, 0], cache
+
+
+def prefill(params, inputs, cfg: ModelConfig, ctx: ParallelCtx):
+    """Prefill forward (logits for all positions; cache fill is decode-side).
+
+    The prefill benchmark cell lowers this function: it is the compute shape
+    that matters (attention + MLP over the full prompt).
+    """
+    logits, _ = forward(params, inputs, cfg, ctx)
+    return logits

@@ -1,0 +1,131 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The RG-LRU recurrence is a *diagonal* linear RNN:
+
+    r_t = sigmoid(x_t W_a)                       (recurrence gate)
+    i_t = sigmoid(x_t W_x)                       (input gate)
+    log a_t = -c * softplus(Lambda) * r_t        (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Being diagonal+associative it runs as ``lax.associative_scan`` (O(log S)
+depth — TPU-friendly without a custom kernel; the NTX mapping is the L0
+hardware loop with a carried accumulator). Decode is a single fused step on a
+carried state. The full recurrent block is Griffin's: GeLU branch x (conv1d ->
+RG-LRU) branch, merged multiplicatively.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import _dot
+
+_C = 8.0
+_CONV_W = 4  # temporal conv width
+
+
+N_GATE_BLOCKS = 16  # block-diagonal gates (official impl); also TP-local
+
+
+def init_rglru_block(rng, cfg, dtype=jnp.bfloat16):
+    d, dr = cfg.d_model, cfg.lru_width
+    nb = N_GATE_BLOCKS
+    assert dr % nb == 0, (dr, nb)
+    ks = jax.random.split(rng, 7)
+    std = d**-0.5
+    # Lambda init so a^c in (0.9, 0.999) (Griffin appendix).
+    u = jax.random.uniform(ks[0], (dr,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * _C)))  # softplus^-1
+    bstd = (dr // nb) ** -0.5
+    return {
+        "w_gelu": (jax.random.normal(ks[1], (d, dr)) * std).astype(dtype),
+        "w_rnn": (jax.random.normal(ks[2], (d, dr)) * std).astype(dtype),
+        "w_out": (jax.random.normal(ks[3], (dr, d)) * dr**-0.5).astype(dtype),
+        "conv_w": (jax.random.normal(ks[4], (_CONV_W, dr)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        # Block-diagonal gate projections (Griffin's BlockDiagonalLinear):
+        # TP-local when the rnn width is sharded, since each block stays whole.
+        "w_a": (jax.random.normal(ks[5], (nb, dr // nb, dr // nb)) * bstd).astype(dtype),
+        "w_x": (jax.random.normal(ks[6], (nb, dr // nb, dr // nb)) * bstd).astype(dtype),
+        "lambda": lam,  # fp32
+    }
+
+
+def _block_diag_dot(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., Dr), w: (nb, Dr/nb, Dr/nb) block-diagonal projection."""
+    nb, blk, _ = w.shape
+    xb = x.reshape(x.shape[:-1] + (nb, blk))
+    y = jnp.einsum("...nb,nbc->...nc", xb, w, preferred_element_type=jnp.float32)
+    return y.reshape(x.shape).astype(jnp.float32)
+
+
+def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over the sequence dim. x: (B,S,C), w: (W,C)."""
+    out = jnp.zeros_like(x, shape=x.shape).astype(jnp.float32)
+    for k in range(w.shape[0]):
+        shifted = jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted.astype(jnp.float32) * w[k].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _rglru_gates(x: jnp.ndarray, params):
+    """Returns (log_a, beta*ix): the per-step decay and input of the recurrence."""
+    r = jax.nn.sigmoid(_block_diag_dot(x, params["w_a"]))
+    i = jax.nn.sigmoid(_block_diag_dot(x, params["w_x"]))
+    log_a = -_C * jax.nn.softplus(params["lambda"]) * r  # (B,S,Dr) fp32, <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - a2, 1e-12))
+    return log_a, beta * i * x.astype(jnp.float32)
+
+
+def rglru_scan(x: jnp.ndarray, params) -> jnp.ndarray:
+    """Full-sequence RG-LRU via associative scan. x: (B,S,Dr)."""
+    log_a, bx = _rglru_gates(x, params)
+
+    def combine(e1, e2):  # e2 applied after e1
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    log_acum, h = jax.lax.associative_scan(combine, (log_a, bx), axis=1)
+    del log_acum
+    return h.astype(x.dtype)
+
+
+def rglru_step(x1: jnp.ndarray, h: jnp.ndarray, params):
+    """One decode step. x1: (B,1,Dr); h: (B,Dr) fp32. Returns (y, new_h)."""
+    log_a, bx = _rglru_gates(x1, params)
+    h = jnp.exp(log_a[:, 0]) * h + bx[:, 0]
+    return h[:, None].astype(x1.dtype), h
+
+
+def rglru_block(x: jnp.ndarray, params, cfg) -> jnp.ndarray:
+    """Griffin recurrent block, full sequence. x: (B,S,D) -> (B,S,D)."""
+    g = jax.nn.gelu(_dot(x, params["w_gelu"]).astype(jnp.float32)).astype(x.dtype)
+    r = _dot(x, params["w_rnn"])
+    r = _causal_conv1d(r, params["conv_w"], params["conv_b"])
+    r = rglru_scan(r, params)
+    return _dot(g * r, params["w_out"])
+
+
+def init_rglru_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    dr = cfg.lru_width
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_W - 1, dr), dtype),
+    }
+
+
+def rglru_block_step(x1: jnp.ndarray, params, cfg, cache):
+    """One decode step of the full recurrent block. x1: (B,1,D)."""
+    g = jax.nn.gelu(_dot(x1, params["w_gelu"]).astype(jnp.float32)).astype(x1.dtype)
+    r = _dot(x1, params["w_rnn"])  # (B,1,Dr)
+    # conv over [cache, r]
+    window = jnp.concatenate([cache["conv"], r], axis=1)  # (B, W, Dr)
+    w = params["conv_w"]
+    rc = (window.astype(jnp.float32) * w[::-1].astype(jnp.float32)[None]).sum(1)
+    rc = (rc + params["conv_b"].astype(jnp.float32)).astype(x1.dtype)[:, None]
+    y, h = rglru_step(rc, cache["h"], params)
+    out = _dot(g * y, params["w_out"])
+    return out, {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,159 @@
+"""Mamba-2 (SSD) block — attention-free sequence mixing.
+
+Follows the Mamba-2 architecture (arXiv:2405.21060): a fused input projection
+producing (z, x, B, C, dt); a short depthwise causal conv over (x, B, C); the
+SSD scan with scalar-per-head decay A; a D skip; gated RMSNorm; out projection.
+
+The scan runs through :mod:`repro.kernels.ops.ssd` — the Pallas chunked kernel
+on TPU, the portable chunked scan elsewhere; both were property-tested against
+the sequential recurrence. Decode carries (conv_state, ssm_state) and costs
+O(1) per token — this is why mamba2 runs the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.blocks import _dot, init_rmsnorm, rms_norm
+
+_CONV_W = 4
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_headdim * cfg.n_heads  # == 2 * d_model for mamba2
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    return d_inner, g, n
+
+
+def init_ssm_block(rng, cfg, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    d_inner, g, n = _dims(cfg)
+    h = cfg.n_heads
+    conv_dim = d_inner + 2 * g * n
+    ks = jax.random.split(rng, 5)
+    std = d**-0.5
+    # dt bias: softplus^-1 of dt in [1e-3, 1e-1] (mamba init)
+    dt = jnp.exp(
+        jax.random.uniform(ks[3], (h,), jnp.float32)
+        * (jnp.log(0.1) - jnp.log(1e-3))
+        + jnp.log(1e-3)
+    )
+    kz, kx, kb, kc, kd = jax.random.split(ks[0], 5)
+    # Input projections kept separate (not fused as in the reference CUDA impl)
+    # so each is cleanly column-shardable under TP; see DESIGN.md §Hardware.
+    return {
+        "w_z": (jax.random.normal(kz, (d, d_inner)) * std).astype(dtype),
+        "w_x": (jax.random.normal(kx, (d, d_inner)) * std).astype(dtype),
+        "w_b": (jax.random.normal(kb, (d, g * n)) * std).astype(dtype),
+        "w_c": (jax.random.normal(kc, (d, g * n)) * std).astype(dtype),
+        "w_dt": (jax.random.normal(kd, (d, h)) * std).astype(dtype),
+        # Separate depthwise convs per component keep the sharded x-part TP-local
+        # while b/c stay replicated (they are tiny: g*n wide).
+        "conv_wx": (jax.random.normal(ks[1], (_CONV_W, d_inner)) * 0.1).astype(dtype),
+        "conv_bx": jnp.zeros((d_inner,), dtype),
+        "conv_wb": (jax.random.normal(ks[4], (_CONV_W, g * n)) * 0.1).astype(dtype),
+        "conv_bb": jnp.zeros((g * n,), dtype),
+        "conv_wc": (jax.random.normal(ks[4], (_CONV_W, g * n)) * 0.1).astype(dtype),
+        "conv_bc": jnp.zeros((g * n,), dtype),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),  # A = -exp(a_log)
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),  # softplus^-1(dt)
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": init_rmsnorm(d_inner),
+        "w_out": (jax.random.normal(ks[2], (d_inner, d)) * d_inner**-0.5).astype(dtype),
+    }
+
+
+def _project(x, params):
+    z = _dot(x, params["w_z"])
+    xs = _dot(x, params["w_x"])
+    b = _dot(x, params["w_b"])
+    c = _dot(x, params["w_c"])
+    dt = _dot(x, params["w_dt"])
+    return z, xs, b, c, dt
+
+
+def _causal_conv1d(x, w, b):
+    out = jnp.zeros(x.shape, jnp.float32)
+    for k in range(w.shape[0]):
+        shifted = jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted.astype(jnp.float32) * w[k].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssm_block(x: jnp.ndarray, params, cfg, *, backend: str = "auto", chunk: int = 128):
+    """Full-sequence Mamba-2 block. x: (B,S,D) -> (B,S,D)."""
+    bsz, s, _ = x.shape
+    d_inner, g, n = _dims(cfg)
+    h, p = cfg.n_heads, cfg.ssm_headdim
+
+    z, xs, b, c, dt = _project(x, params)
+    xs = _causal_conv1d(xs, params["conv_wx"], params["conv_bx"])
+    b = _causal_conv1d(b, params["conv_wb"], params["conv_bb"])
+    c = _causal_conv1d(c, params["conv_wc"], params["conv_bc"])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["a_log"])  # (H,)
+    la = (dt * a).transpose(0, 2, 1)  # (B,H,S) log-decay <= 0
+
+    xh = xs.reshape(bsz, s, h, p).transpose(0, 2, 1, 3)  # (B,H,S,P)
+    xh = xh * dt.transpose(0, 2, 1)[..., None].astype(xh.dtype)  # dt-scaled input
+    bg = b.reshape(bsz, s, g, n).transpose(0, 2, 1, 3)  # (B,G,S,N)
+    cg = c.reshape(bsz, s, g, n).transpose(0, 2, 1, 3)
+
+    y = ops.ssd(xh, la, bg, cg, chunk=min(chunk, s), backend=backend)  # (B,H,S,P)
+    y = y + params["d_skip"][None, :, None, None].astype(xh.dtype) * xh
+    y = y.transpose(0, 2, 1, 3).reshape(bsz, s, d_inner)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)  # gated
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    return _dot(y, params["w_out"])
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    d_inner, g, n = _dims(cfg)
+    conv_dim = d_inner + 2 * g * n
+    return {
+        "conv": jnp.zeros((batch, _CONV_W - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.ssm_headdim, n), jnp.float32),
+    }
+
+
+def ssm_block_step(x1: jnp.ndarray, params, cfg, cache):
+    """One decode step (O(1)). x1: (B,1,D). Returns (y (B,1,D), new cache)."""
+    bsz = x1.shape[0]
+    d_inner, g, n = _dims(cfg)
+    h, p = cfg.n_heads, cfg.ssm_headdim
+
+    z, xs, b, c, dt = _project(x1, params)
+    xbc = jnp.concatenate([xs, b, c], axis=-1)  # (B,1,conv_dim)
+    window = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B,W,conv_dim)
+
+    def _conv_step(win, w, bias):
+        out = (win.astype(jnp.float32) * w[::-1].astype(jnp.float32)[None]).sum(1)
+        return jax.nn.silu(out + bias.astype(jnp.float32)).astype(x1.dtype)
+
+    wx, wb, wc = jnp.split(window, [d_inner, d_inner + g * n], axis=-1)
+    xs = _conv_step(wx, params["conv_wx"], params["conv_bx"])
+    b = _conv_step(wb, params["conv_wb"], params["conv_bb"])
+    c = _conv_step(wc, params["conv_wc"], params["conv_bc"])
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = jnp.exp(dt * -jnp.exp(params["a_log"]))  # (B,H) decay
+    xh = xs.reshape(bsz, h, p) * dt[..., None].astype(xs.dtype)  # (B,H,P)
+    bg = b.reshape(bsz, g, n)
+    cg = c.reshape(bsz, g, n)
+    grp = h // g
+    bh = jnp.repeat(bg, grp, axis=1)  # (B,H,N)
+    ch = jnp.repeat(cg, grp, axis=1)
+
+    state = cache["ssm"] * a[..., None, None] + (
+        xh[..., :, None].astype(jnp.float32) * bh[..., None, :].astype(jnp.float32)
+    )  # (B,H,P,N)
+    y = jnp.einsum("bhpn,bhn->bhp", state, ch.astype(jnp.float32)).astype(x1.dtype)
+    y = y + params["d_skip"][None, :, None].astype(x1.dtype) * xh
+    y = y.reshape(bsz, 1, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    return _dot(y, params["w_out"]), {"conv": window[:, 1:], "ssm": state}

@@ -1,0 +1,222 @@
+"""The unified decoder: dense / MoE / hybrid (RG-LRU) / SSM block mixes.
+
+Layers are grouped into *pattern units* (e.g. RecurrentGemma's
+(rec, rec, swa)); parameters of equal-kind layers are stacked along a leading
+unit axis and the forward pass is a ``lax.scan`` over units — keeping the HLO
+size O(pattern) instead of O(n_layers), which matters both for multi-pod
+compile times and for the NTX view of the world: one offloaded "command"
+(scan body) sweeps all layers (C2).
+
+Remat ("full") wraps the scan body, so the memory-vs-recompute trade is made
+per unit — the activation-storage discipline the paper's Figure 1 discusses.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.blocks import apply_norm, init_mlp, init_norm, mlp
+from repro.models.config import ModelConfig, ParallelCtx, constrain
+
+AUX_KEYS = ("load_balance", "router_z")
+
+
+def _zero_aux():
+    return {k: jnp.float32(0.0) for k in AUX_KEYS}
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+
+def init_layer(rng, cfg: ModelConfig, kind) -> dict:
+    mixer, ffn = kind
+    k1, k2 = jax.random.split(rng)
+    p: dict[str, Any] = {"norm1": init_norm(cfg.d_model, cfg.norm_type)}
+    if mixer in ("attn", "swa"):
+        p["attn"] = attn_mod.init_attention(k1, cfg, cfg.dtype)
+    elif mixer == "rec":
+        p["rec"] = rglru_mod.init_rglru_block(k1, cfg, cfg.dtype)
+    elif mixer == "ssm":
+        p["ssm"] = ssm_mod.init_ssm_block(k1, cfg, cfg.dtype)
+    else:
+        raise ValueError(f"unknown mixer {mixer!r}")
+    if ffn is not None:
+        p["norm2"] = init_norm(cfg.d_model, cfg.norm_type)
+        if ffn == "mlp":
+            p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_act, cfg.dtype)
+        elif ffn == "moe":
+            p["moe"] = moe_mod.init_moe(k2, cfg, cfg.dtype)
+        else:
+            raise ValueError(f"unknown ffn {ffn!r}")
+    return p
+
+
+def apply_layer(x, p, cfg: ModelConfig, kind, ctx: ParallelCtx):
+    mixer, ffn = kind
+    aux = _zero_aux()
+    h = apply_norm(x, p["norm1"], cfg.norm_type, cfg.norm_eps)
+    if mixer in ("attn", "swa"):
+        window = cfg.window if mixer == "swa" else None
+        h = attn_mod.attention_block(
+            h, p["attn"], cfg, window=window, backend=ctx.attn_backend,
+            block_kv=ctx.block_kv, windowed=ctx.windowed_attn, ctx=ctx,
+        )
+    elif mixer == "rec":
+        h = rglru_mod.rglru_block(h, p["rec"], cfg)
+    elif mixer == "ssm":
+        h = ssm_mod.ssm_block(h, p["ssm"], cfg, backend=ctx.attn_backend, chunk=ctx.ssd_chunk)
+    x = constrain(x + h, ctx)
+    if ffn is not None:
+        h = apply_norm(x, p["norm2"], cfg.norm_type, cfg.norm_eps)
+        if ffn == "mlp":
+            h = mlp(h, p["mlp"], cfg.mlp_act)
+        else:
+            if ctx.moe_impl == "ep" and ctx.mesh is not None:
+                h, aux = moe_mod.moe_ep(h, p["moe"], cfg, ctx.mesh, dp_axes=ctx.dp_axes)
+            else:
+                h, aux = moe_mod.moe_dense(h, p["moe"], cfg)
+        x = constrain(x + h, ctx)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token) layer
+# ---------------------------------------------------------------------------
+
+
+def init_layer_cache(cfg: ModelConfig, kind, batch: int, max_len: int, dtype=None):
+    mixer, _ = kind
+    dtype = dtype or cfg.dtype
+    if mixer in ("attn", "swa"):
+        window = cfg.window if mixer == "swa" else None
+        return attn_mod.init_kv_cache(cfg, batch, max_len, window, dtype)
+    if mixer == "rec":
+        return rglru_mod.init_rglru_cache(cfg, batch, dtype)
+    if mixer == "ssm":
+        return ssm_mod.init_ssm_cache(cfg, batch, dtype)
+    raise ValueError(mixer)
+
+
+def apply_layer_step(x, p, cfg, kind, cache, pos, ctx: ParallelCtx):
+    mixer, ffn = kind
+    h = apply_norm(x, p["norm1"], cfg.norm_type, cfg.norm_eps)
+    if mixer in ("attn", "swa"):
+        window = cfg.window if mixer == "swa" else None
+        h, cache = attn_mod.decode_attention_block(
+            h, p["attn"], cfg, cache, pos, window=window, block_kv=ctx.block_kv
+        )
+    elif mixer == "rec":
+        h, cache = rglru_mod.rglru_block_step(h, p["rec"], cfg, cache)
+    elif mixer == "ssm":
+        h, cache = ssm_mod.ssm_block_step(h, p["ssm"], cfg, cache)
+    x = x + h
+    if ffn is not None:
+        h = apply_norm(x, p["norm2"], cfg.norm_type, cfg.norm_eps)
+        if ffn == "mlp":
+            h = mlp(h, p["mlp"], cfg.mlp_act)
+        elif ctx.moe_impl == "ep" and ctx.mesh is not None:
+            h, _ = moe_mod.moe_ep(h, p["moe"], cfg, ctx.mesh, dp_axes=ctx.dp_axes)
+        else:
+            h, _ = moe_mod.moe_dense(h, p["moe"], cfg)
+        x = x + h
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Full decoder stack (scan over pattern units)
+# ---------------------------------------------------------------------------
+
+
+def _unit_counts(cfg: ModelConfig) -> tuple[int, int]:
+    plen = len(cfg.pattern)
+    return cfg.n_layers // plen, cfg.n_layers % plen
+
+
+def init_decoder(rng, cfg: ModelConfig) -> dict:
+    n_units, rem = _unit_counts(cfg)
+    keys = jax.random.split(rng, n_units * len(cfg.pattern) + rem)
+
+    units = []
+    for pos, kind in enumerate(cfg.pattern):
+        stacked = [
+            init_layer(keys[u * len(cfg.pattern) + pos], cfg, kind) for u in range(n_units)
+        ]
+        units.append(jax.tree.map(lambda *xs: jnp.stack(xs), *stacked))
+    rem_layers = [
+        init_layer(keys[n_units * len(cfg.pattern) + i], cfg, cfg.pattern[i])
+        for i in range(rem)
+    ]
+    return {"units": tuple(units), "rem": tuple(rem_layers)}
+
+
+def decoder(x, params, cfg: ModelConfig, ctx: ParallelCtx):
+    """x: (B, S, D) -> (B, S, D), plus accumulated aux losses."""
+    n_units, rem = _unit_counts(cfg)
+
+    def unit_body(carry, unit_params):
+        x, aux = carry
+        for pos, kind in enumerate(cfg.pattern):
+            x, a = apply_layer(x, unit_params[pos], cfg, kind, ctx)
+            aux = {k: aux[k] + a[k] for k in AUX_KEYS}
+        return (x, aux), None
+
+    body = unit_body
+    if ctx.remat == "full":
+        body = jax.checkpoint(unit_body, prevent_cse=False)
+
+    carry = (x, _zero_aux())
+    if n_units > 0:
+        carry, _ = jax.lax.scan(body, carry, params["units"])
+    x, aux = carry
+    for i, p in enumerate(params["rem"]):
+        x, a = apply_layer(x, p, cfg, cfg.pattern[i], ctx)
+        aux = {k: aux[k] + a[k] for k in AUX_KEYS}
+    return x, aux
+
+
+def init_decoder_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    n_units, rem = _unit_counts(cfg)
+    units = []
+    for pos, kind in enumerate(cfg.pattern):
+        one = init_layer_cache(cfg, kind, batch, max_len, dtype)
+        units.append(jax.tree.map(lambda l: jnp.broadcast_to(l, (n_units,) + l.shape).copy(), one))
+    rem_caches = tuple(
+        init_layer_cache(cfg, cfg.pattern[i], batch, max_len, dtype) for i in range(rem)
+    )
+    return {"units": tuple(units), "rem": rem_caches}
+
+
+def decoder_step(x, params, cfg: ModelConfig, cache, pos, ctx: ParallelCtx):
+    """One decode step through the whole stack. x: (B,1,D)."""
+    n_units, rem = _unit_counts(cfg)
+
+    def unit_body(x, scanned):
+        unit_params, unit_cache = scanned
+        new_caches = []
+        for p_idx, kind in enumerate(cfg.pattern):
+            x, c = apply_layer_step(
+                x, unit_params[p_idx], cfg, kind, unit_cache[p_idx], pos, ctx
+            )
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    new_cache = {"units": cache["units"], "rem": cache["rem"]}
+    if n_units > 0:
+        x, new_units = jax.lax.scan(unit_body, x, (params["units"], cache["units"]))
+        new_cache["units"] = new_units
+    rem_caches = []
+    for i, p in enumerate(params["rem"]):
+        x, c = apply_layer_step(x, p, cfg, cfg.pattern[i], cache["rem"][i], pos, ctx)
+        rem_caches.append(c)
+    new_cache["rem"] = tuple(rem_caches)
+    return x, new_cache

@@ -1,0 +1,56 @@
+"""Gradient compression with error feedback (beyond-paper extension).
+
+The paper streams the full 300 MB fp32 weight update over the mesh (§4.9).
+A modern large-scale trick the paper explicitly leaves to future work
+("compression techniques offer other interesting angles", §6): quantize the
+cross-pod gradient stream to int8 with *error feedback*, cutting the slowest
+(inter-pod) hop's bytes 4x while keeping SGD convergence (the residual is
+re-injected next step, so the compression error is zero-mean over time).
+
+Used by the "compressed" grad_sync mode of the train step; the collective
+roofline term of the pod axis drops accordingly (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray):
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads, err_state):
+    """EF-SGD compression: g_hat = Q(g + e); e' = g + e - g_hat.
+
+    Returns (compressed fp32 grads — exactly representable in int8*scale —
+    plus the payload tree (q, scale) a transport layer would ship, and the
+    new error state).
+    """
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(x)
+        ghat = dequantize_int8(q, scale)
+        return ghat, (q, scale), x - ghat
+
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    eflat = jax.tree_util.tree_leaves(err_state)
+    outs = [one(g, e) for g, e in zip(flat, eflat)]
+    ghat = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    payload = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    new_err = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+    return ghat, payload, new_err

@@ -1,0 +1,101 @@
+"""Optimizers: SGD(+momentum) — the paper's algorithm — and AdamW.
+
+Functional optax-style interface kept dependency-free:
+
+    opt = sgd(lr=..., momentum=...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Optimizer state is the ZeRO-1-shardable tree (see parallel/sharding.py):
+momenta/second moments are kept in fp32 regardless of param dtype (the paper's
+full-precision-where-it-matters discipline, C1 at the optimizer level).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, new_state)
+
+
+def _f32(tree):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"mu": _f32(params), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        del params
+        mu = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads
+        )
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32), mu, grads)
+        else:
+            upd = mu
+        updates = jax.tree.map(lambda u: -lr * u, upd)
+        return updates, {"mu": mu, "count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params):
+        return {"m": _f32(params), "v": _f32(params), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads
+        )
+        bc1 = 1 - b1**c.astype(jnp.float32)
+        bc2 = 1 - b2**c.astype(jnp.float32)
+
+        def upd(m, v, p):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            return -lr * (step + weight_decay * p.astype(jnp.float32))
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "count": c}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def get_optimizer(name: str, lr: float) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr=lr)
+    if name == "adamw":
+        return adamw(lr=lr)
+    raise ValueError(f"unknown optimizer {name!r}")

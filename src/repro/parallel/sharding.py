@@ -1,0 +1,259 @@
+"""Sharding rules: parameter/optimizer/cache PartitionSpecs for the zoo.
+
+Parallelism map (production mesh (pod, data, model)):
+
+  * DP  — batch over ("pod", "data"); the pod axis is the paper's
+          mesh-of-HMCs tier (C6), "data" the intra-pod tier.
+  * TP  — "model": attention heads, FFN hidden, vocab, experts, rnn width.
+          Head counts not divisible by the axis are GSPMD-padded (overhead
+          reported per arch in EXPERIMENTS.md §Roofline).
+  * EP  — experts live on "model" (see models/moe.py).
+  * SP  — long-context cells shard the *sequence* over "data"
+          (ParallelCtx.seq_axis) instead of the batch.
+  * ZeRO-1 — optimizer state additionally sharded over the DP axes on the
+          first divisible unsharded dim (:func:`zero1_spec`).
+
+Specs are derived from tree *paths* (module name + leaf name), so they work
+for any pattern mix and for unit-stacked (leading-axis) parameter trees.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+TP = "model"
+
+# (module, leaf) -> layer-local spec (without the unit-stacking dim).
+_RULES: dict[tuple[str, str], tuple] = {
+    # attention
+    ("attn", "wq"): (None, TP),
+    ("attn", "wk"): (None, TP),
+    ("attn", "wv"): (None, TP),
+    ("attn", "wo"): (TP, None),
+    ("attn", "bq"): (TP,),
+    ("attn", "bk"): (TP,),
+    ("attn", "bv"): (TP,),
+    # mlp
+    ("mlp", "w_gate"): (None, TP),
+    ("mlp", "w_up"): (None, TP),
+    ("mlp", "w_down"): (TP, None),
+    ("shared", "w_gate"): (None, TP),
+    ("shared", "w_up"): (None, TP),
+    ("shared", "w_down"): (TP, None),
+    # moe (experts on the model axis = EP; expert FFN dim FSDP-sharded over
+    # "data" — gathered per layer inside the EP body — so 400B-param expert
+    # banks fit per-chip: see models/moe.py and DESIGN.md §Distribution)
+    ("moe", "router"): (None, None),
+    ("moe", "w_gate"): (TP, None, "data"),
+    ("moe", "w_up"): (TP, None, "data"),
+    ("moe", "w_down"): (TP, "data", None),
+    # rg-lru
+    ("rec", "w_gelu"): (None, TP),
+    ("rec", "w_rnn"): (None, TP),
+    ("rec", "w_out"): (TP, None),
+    ("rec", "conv_w"): (None, TP),
+    ("rec", "conv_b"): (TP,),
+    ("rec", "w_a"): (TP, None, None),  # block-diagonal gates: blocks on TP
+    ("rec", "w_x"): (TP, None, None),
+    ("rec", "lambda"): (TP,),
+    # mamba2
+    ("ssm", "w_z"): (None, TP),
+    ("ssm", "w_x"): (None, TP),
+    ("ssm", "w_b"): (None, None),  # tiny (d, g*n): replicated
+    ("ssm", "w_c"): (None, None),
+    ("ssm", "w_dt"): (None, TP),
+    ("ssm", "conv_wx"): (None, TP),
+    ("ssm", "conv_bx"): (TP,),
+    ("ssm", "conv_wb"): (None, None),
+    ("ssm", "conv_bb"): (None,),
+    ("ssm", "conv_wc"): (None, None),
+    ("ssm", "conv_bc"): (None,),
+    ("ssm", "a_log"): (TP,),
+    ("ssm", "dt_bias"): (TP,),
+    ("ssm", "d_skip"): (TP,),
+    ("ssm", "w_out"): (TP, None),
+    # top level
+    ("", "embed"): (TP, None),  # vocab-sharded
+    ("", "lm_head"): (None, TP),
+}
+
+_MODULES = ("attn", "moe", "shared", "mlp", "rec", "ssm")
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            names.append(f"[{k.idx}]")
+        else:
+            names.append(str(k))
+    return names
+
+
+def spec_for_path(path, shape) -> P:
+    """PartitionSpec for one parameter leaf, inferring unit-stacking."""
+    names = _path_names(path)
+    leaf = names[-1]
+    module = ""
+    for n in names[:-1]:
+        if n in _MODULES:
+            module = n
+    # norms (any *norm* module or scale/bias leaves) are replicated, except
+    # the ssm gated-norm scale which lives on the sharded d_inner.
+    if leaf in ("scale", "bias"):
+        if module == "ssm" and "norm" in names:
+            base = (TP,)
+        else:
+            base = (None,) * _infer_rank_tail(shape, 1)
+            return _pad_spec(base, shape)
+        return _pad_spec(base, shape)
+    key = (module, leaf)
+    if key not in _RULES and ("", leaf) in _RULES:
+        key = ("", leaf)
+    if key not in _RULES:
+        return P(*((None,) * len(shape)))  # replicate unknowns
+    base = _RULES[key]
+    return _pad_spec(base, shape)
+
+
+def _infer_rank_tail(shape, tail: int) -> int:
+    return tail
+
+
+def _pad_spec(base: tuple, shape) -> P:
+    """Left-pad the layer-local spec with None for unit-stacking dims."""
+    pad = len(shape) - len(base)
+    assert pad >= 0, (base, shape)
+    return P(*(((None,) * pad) + tuple(base)))
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drop (replicate) any spec axis whose dim isn't divisible by the axis.
+
+    Explicit pjit in_shardings require exact divisibility; e.g. mamba2's
+    vocab 50280 cannot shard 16-way, so its embedding stays replicated.
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for e, d in zip(entries, shape):
+        if e is None:
+            out.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        n = math.prod(mesh.shape[a] for a in axes)
+        out.append(e if (d % n == 0 and d >= n) else None)
+    return P(*out)
+
+
+def param_shardings(params_shape_tree, mesh) -> Any:
+    """NamedSharding tree for a parameter (shape-)tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, sanitize_spec(spec_for_path(path, leaf.shape), leaf.shape, mesh)
+        ),
+        params_shape_tree,
+    )
+
+
+def zero1_spec(spec: P, shape, mesh, dp_axes: tuple[str, ...]) -> P:
+    """ZeRO-1: additionally shard one unsharded dim over the *free* DP axes."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,)):
+            if a is not None:
+                used.add(a)
+    free = tuple(a for a in dp_axes if a not in used)
+    if not free:
+        return spec
+    dp = math.prod(mesh.shape[a] for a in free)
+    for i, (e, d) in enumerate(zip(entries, shape)):
+        if e is None and d % dp == 0 and d >= dp:
+            entries[i] = free
+            return P(*entries)
+    return spec  # nothing divisible: keep replicated over DP
+
+
+def opt_state_shardings(params_shape_tree, mesh, dp_axes: tuple[str, ...]) -> Any:
+    def one(path, leaf):
+        spec = sanitize_spec(spec_for_path(path, leaf.shape), leaf.shape, mesh)
+        return NamedSharding(mesh, zero1_spec(spec, leaf.shape, mesh, dp_axes))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape_tree)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg, kind: str, batch: int, mesh, dp_axes, seq_axis=None):
+    """PartitionSpecs for a train/prefill batch dict."""
+    dp = math.prod(mesh.shape[a] for a in dp_axes) if dp_axes else 1
+    bspec = tuple(dp_axes) if (dp_axes and batch % dp == 0) else None
+    if cfg.input_mode == "embeddings":
+        inputs = P(bspec, seq_axis, None)
+    else:
+        inputs = P(bspec, seq_axis) if cfg.n_codebooks == 1 else P(bspec, seq_axis, None)
+    labels = P(bspec, seq_axis) if cfg.n_codebooks == 1 else P(bspec, seq_axis, None)
+    return {"inputs": inputs, "labels": labels}
+
+
+def _div(size: int, mesh, axis) -> bool:
+    n = mesh.shape[axis] if isinstance(axis, str) else math.prod(mesh.shape[a] for a in axis)
+    return size % n == 0 and size >= n
+
+
+def cache_specs(cache_shape_tree, mesh, dp_axes, batch: int):
+    """Decode-cache NamedShardings: batch over DP, then TP placement per leaf.
+
+    Cache layouts (with optional unit-stacking dim U in front):
+      attn k/v:  (U, B, Hkv, L, Dh) -> heads on TP when Hkv % tp == 0, else the
+                 cache *sequence* on TP (flash-decoding; see
+                 models/attention.py::_dense_decode_attention), else replicate.
+      rec h:     (U, B, Dr)           -> width on TP
+      rec conv:  (U, B, W, Dr)        -> width on TP
+      ssm conv:  (U, B, W, conv_dim)  -> replicated (tiny, mixed-part concat)
+      ssm state: (U, B, H, P, N)      -> heads on TP
+
+    Every TP placement falls back to replication when not divisible — explicit
+    pjit in_shardings require exact divisibility.
+    """
+    dp = math.prod(mesh.shape[a] for a in dp_axes) if dp_axes else 1
+    bspec = tuple(dp_axes) if (dp_axes and batch % dp == 0) else None
+
+    def one(path, leaf):
+        names = _path_names(path)
+        leaf_name = names[-1]
+        rank = len(leaf.shape)
+        shape = leaf.shape
+
+        def tp_if(dim_idx):
+            return TP if _div(shape[dim_idx], mesh, TP) else None
+
+        if leaf_name in ("k", "v"):
+            # (..., B, Hkv, L, Dh)
+            h_tp = tp_if(rank - 3)
+            l_tp = tp_if(rank - 2) if h_tp is None else None
+            base = (bspec, h_tp, l_tp, None)
+        elif leaf_name == "h":
+            base = (bspec, tp_if(rank - 1))
+        elif leaf_name == "conv":
+            base = (bspec, None, tp_if(rank - 1))  # rec/ssm conv window: width on TP
+        elif leaf_name == "ssm":
+            base = (bspec, tp_if(rank - 3), None, None)
+        else:
+            base = (None,) * rank
+        pad = rank - len(base)
+        spec = P(*(((None,) * pad) + tuple(base)))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape_tree)

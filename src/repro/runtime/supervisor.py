@@ -1,0 +1,187 @@
+"""Fault-tolerant training supervisor: restart, elastic re-mesh, stragglers.
+
+What a 1000-node deployment needs and how this maps onto the single-process
+container (mechanisms are real; failures are injected):
+
+  * **checkpoint/restart** — AsyncCheckpointer every ``ckpt_every`` steps;
+    on failure the supervisor restores the latest complete checkpoint and
+    resumes the data iterator at the restored step (bit-identical stream —
+    data/pipeline.py's (seed, step) contract).
+  * **elastic re-mesh** — on permanent node loss the job continues on the
+    surviving device set: a new (smaller DP) mesh is built, parameters are
+    re-placed with the new shardings (checkpoint.restore(shardings=...)),
+    and the global batch is either kept (more per-device work) or rescaled.
+    Exercised in tests by re-meshing 8 -> 4 fake devices.
+  * **straggler mitigation** — per-step deadline derived from the paper's
+    mesh-update model (core/systolic.mesh_update_time_model) plus an EWMA of
+    compute time. In production the policy is drop-and-rescale: the gradient
+    average proceeds over responsive workers and is rescaled by
+    alive/total — statistically unbiased because shard assignment is random.
+    The container simulates the detection path and logs the decision.
+  * **failure detection** — heartbeats are the step returns themselves; an
+    injected ``FailureInjector`` raises at configured steps to exercise the
+    recovery path deterministically.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core.systolic import mesh_update_time_model
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class SimulatedStraggler(RuntimeError):
+    pass
+
+
+@dataclass
+class FailureInjector:
+    """Deterministic fault schedule: {step: kind}; kind in {"crash","straggler"}."""
+
+    schedule: dict = field(default_factory=dict)
+
+    def check(self, step: int):
+        kind = self.schedule.get(step)
+        if kind == "crash":
+            # fire once
+            del self.schedule[step]
+            raise SimulatedFailure(f"injected crash at step {step}")
+        if kind == "straggler":
+            del self.schedule[step]
+            raise SimulatedStraggler(f"injected straggler at step {step}")
+
+
+@dataclass
+class StragglerPolicy:
+    """Deadline = ewma(compute) * slack + mesh update bound (paper eq. 14/15)."""
+
+    slack: float = 3.0
+    weight_bytes: float = 300e6  # paper's 300 MB update
+    mesh_side: int = 16
+    ewma: float | None = None
+
+    def deadline(self) -> float:
+        base = self.ewma if self.ewma is not None else 60.0
+        return base * self.slack + mesh_update_time_model(self.weight_bytes, self.mesh_side)
+
+    def observe(self, dt: float):
+        self.ewma = dt if self.ewma is None else 0.9 * self.ewma + 0.1 * dt
+
+
+@dataclass
+class SupervisorReport:
+    steps_run: int = 0
+    restarts: int = 0
+    straggler_events: int = 0
+    remesh_events: int = 0
+    log: list = field(default_factory=list)
+
+
+class Supervisor:
+    """Drives (train_step, iterator) to ``total_steps`` surviving failures."""
+
+    def __init__(
+        self,
+        make_step,  # (mesh) -> train_step callable
+        init_state,  # (mesh) -> fresh state (used only on cold start)
+        iterator,
+        ckpt_dir,
+        *,
+        ckpt_every: int = 10,
+        injector: FailureInjector | None = None,
+        straggler_policy: StragglerPolicy | None = None,
+        meshes=None,  # fallback meshes for elastic re-mesh (largest first)
+        state_shardings_fn=None,  # (state_template, mesh) -> shardings tree
+    ):
+        self.make_step = make_step
+        self.init_state = init_state
+        self.iterator = iterator
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.injector = injector or FailureInjector()
+        self.straggler = straggler_policy or StragglerPolicy()
+        self.meshes = list(meshes) if meshes else [None]
+        self.state_shardings_fn = state_shardings_fn
+        self.checkpointer = ckpt.AsyncCheckpointer(ckpt_dir)
+        self.report = SupervisorReport()
+
+    def _restore_or_init(self, mesh):
+        state = self.init_state(mesh)
+        latest = ckpt.latest_step(self.ckpt_dir)
+        if latest is None:
+            return state, 0
+        shardings = (
+            self.state_shardings_fn(state, mesh) if self.state_shardings_fn else None
+        )
+        state, extras = ckpt.restore(self.ckpt_dir, state, shardings=shardings)
+        self.iterator.load_state_dict(extras["iterator"])
+        return state, int(extras["step"])
+
+    def run(self, total_steps: int, metrics_cb=None) -> SupervisorReport:
+        mesh_idx = 0
+        while True:
+            mesh = self.meshes[mesh_idx]
+            step_fn = self.make_step(mesh)
+            state, step = self._restore_or_init(mesh)
+            try:
+                while step < total_steps:
+                    t0 = time.time()
+                    try:
+                        self.injector.check(step)
+                    except SimulatedStraggler as e:
+                        # Straggler != failure: the drop-and-rescale policy
+                        # proceeds with the step (over responsive workers).
+                        self.report.straggler_events += 1
+                        self.report.log.append(
+                            f"straggler: {e} — continuing (drop-and-rescale)"
+                        )
+                    batch = next(self.iterator)
+                    state, metrics = step_fn(state, batch)
+                    dt = time.time() - t0
+                    self.straggler.observe(dt)
+                    if dt > self.straggler.deadline():
+                        self.report.straggler_events += 1
+                        self.report.log.append(
+                            f"step {step}: exceeded deadline ({dt:.2f}s) — "
+                            "drop-and-rescale policy would engage"
+                        )
+                    step += 1
+                    self.report.steps_run += 1
+                    if metrics_cb:
+                        metrics_cb(step, metrics)
+                    if step % self.ckpt_every == 0 or step == total_steps:
+                        self.checkpointer.save(
+                            step,
+                            state,
+                            extras={
+                                "step": step,
+                                "iterator": self.iterator.state_dict(),
+                            },
+                        )
+                self.checkpointer.wait()
+                return self.report
+            except SimulatedStraggler as e:
+                self.report.straggler_events += 1
+                self.report.log.append(f"straggler: {e} — continuing (drop-and-rescale)")
+                continue
+            except SimulatedFailure as e:
+                self.report.restarts += 1
+                self.report.log.append(f"crash: {e} — restoring latest checkpoint")
+                self.checkpointer.wait()
+                # Elastic policy: after a crash, optionally fail over to the
+                # next (smaller) mesh if one is configured.
+                if mesh_idx + 1 < len(self.meshes):
+                    mesh_idx += 1
+                    self.report.remesh_events += 1
+                    self.report.log.append(
+                        f"re-mesh: continuing on fallback mesh #{mesh_idx}"
+                    )
+                continue

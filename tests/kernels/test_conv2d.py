@@ -1,0 +1,52 @@
+"""Kernel sweep: conv2d_ntx (interpret mode) vs the lax oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.conv2d import conv2d_ntx
+
+CASES = [
+    # (n, h, w, cin, kh, kw, cout, stride)
+    (1, 12, 12, 3, 3, 3, 8, 1),
+    (2, 16, 10, 4, 3, 3, 8, 2),
+    (1, 9, 9, 3, 1, 1, 16, 1),
+    (1, 14, 14, 3, 5, 5, 4, 2),
+    (2, 11, 13, 2, 3, 2, 4, 3),
+    (1, 8, 8, 8, 7, 7, 4, 1),
+]
+
+
+@pytest.mark.parametrize("n,h,w,cin,kh,kw,cout,stride", CASES)
+def test_conv_vs_ref(n, h, w, cin, kh, kw, cout, stride):
+    rng = np.random.RandomState(h * 10 + kh + stride)
+    x = jnp.asarray(rng.randn(n, h, w, cin), jnp.float32)
+    wt = jnp.asarray(rng.randn(kh, kw, cin, cout) * 0.2, jnp.float32)
+    got = conv2d_ntx(x, wt, stride=stride, tile_h=4, interpret=True)
+    want = ref.conv2d_ref(x, wt, stride=stride, padding=0)
+    assert got.shape == want.shape, (got.shape, want.shape)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_conv_matches_ntx_interpreter():
+    """Kernel == the cycle-level NtxCommand interpreter (C2 semantics)."""
+    from repro.core import ntx
+
+    rng = np.random.RandomState(0)
+    ih, iw, ci, kh, kw = 6, 6, 3, 3, 3
+    x = rng.randn(ih, iw, ci).astype(np.float32)
+    w = rng.randn(kh, kw, ci).astype(np.float32)
+    mem = np.zeros(4000, np.float32)
+    mem[: x.size] = x.ravel()
+    mem[200 : 200 + w.size] = w.ravel()
+    cmd = ntx.conv2d_command(ih, iw, ci, kh, kw, 1, 0, 200, 300)
+    out = ntx.ntx_execute(cmd, mem)
+    oh, ow = ih - kh + 1, iw - kw + 1
+    want = out[300 : 300 + oh * ow].reshape(oh, ow)
+
+    got = conv2d_ntx(
+        jnp.asarray(x)[None], jnp.asarray(w)[..., None], stride=1, tile_h=2,
+        interpret=True,
+    )[0, :, :, 0]
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-4, rtol=1e-4)

@@ -1,0 +1,106 @@
+"""Kernel sweep: flash attention (interpret + blockwise xla) vs dense oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+CASES = [
+    # (B, Hq, Hkv, Sq, Skv, D, causal, window)
+    (2, 4, 2, 128, 128, 64, True, None),
+    (1, 8, 4, 256, 256, 64, True, None),
+    (1, 4, 4, 128, 384, 64, True, 128),
+    (2, 2, 1, 128, 128, 128, False, None),
+    (1, 2, 2, 64, 192, 32, True, 64),
+]
+
+
+@pytest.mark.parametrize("b,hq,hkv,sq,skv,d,causal,window", CASES)
+@pytest.mark.parametrize("backend", ["interpret", "xla"])
+def test_attention_vs_ref(b, hq, hkv, sq, skv, d, causal, window, backend):
+    rng = np.random.RandomState(abs(hash((b, hq, sq, skv, d, causal, window))) % 2**31)
+    q = jnp.asarray(rng.randn(b, hq, sq, d) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.randn(b, hkv, skv, d) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.randn(b, hkv, skv, d) * 0.3, jnp.float32)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    got = ops.attention(
+        q, k, v, causal=causal, window=window, backend=backend, block_q=64, block_kv=64
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=1e-3)
+
+
+def test_attention_bf16():
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(1, 4, 128, 64) * 0.3, jnp.bfloat16)
+    k = jnp.asarray(rng.randn(1, 2, 128, 64) * 0.3, jnp.bfloat16)
+    v = jnp.asarray(rng.randn(1, 2, 128, 64) * 0.3, jnp.bfloat16)
+    want = ref.attention_ref(q, k, v, causal=True)
+    got = ops.attention(q, k, v, causal=True, backend="interpret")
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=2e-2
+    )
+
+
+def test_decode_path_traced_offsets():
+    rng = np.random.RandomState(1)
+    b, hq, hkv, d, s = 2, 4, 2, 64, 128
+    q1 = jnp.asarray(rng.randn(b, hq, 1, d) * 0.3, jnp.float32)
+    kc = jnp.asarray(rng.randn(b, hkv, s, d) * 0.3, jnp.float32)
+    vc = jnp.asarray(rng.randn(b, hkv, s, d) * 0.3, jnp.float32)
+    for pos in [0, 5, 77, 127]:
+        want = ref.attention_ref(q1, kc, vc, causal=True, q_offset=pos, kv_valid_len=pos + 1)
+        got = ops.attention(
+            q1, kc, vc, causal=True,
+            q_offset=jnp.int32(pos), kv_valid_len=jnp.int32(pos + 1),
+            backend="xla", block_kv=32,
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_gradients_match_dense():
+    rng = np.random.RandomState(2)
+    q = jnp.asarray(rng.randn(1, 2, 32, 16) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.randn(1, 1, 32, 16) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.randn(1, 1, 32, 16) * 0.3, jnp.float32)
+
+    def f_block(q):
+        return (ops.attention(q, k, v, backend="xla", block_kv=8) ** 2).sum()
+
+    def f_ref(q):
+        return (ref.attention_ref(q, k, v) ** 2).sum()
+
+    g1 = jax.grad(f_block)(q)
+    g2 = jax.grad(f_ref)(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4, rtol=1e-3)
+
+
+def test_windowed_equals_masked_blockwise():
+    """H5 (window-limited KV scan) must equal the masked blockwise path."""
+    rng = np.random.RandomState(5)
+    for (b, hq, hkv, s, d, win) in [(1, 4, 2, 512, 32, 128), (2, 2, 1, 256, 16, 64)]:
+        q = jnp.asarray(rng.randn(b, hq, s, d) * 0.3, jnp.float32)
+        k = jnp.asarray(rng.randn(b, hkv, s, d) * 0.3, jnp.float32)
+        v = jnp.asarray(rng.randn(b, hkv, s, d) * 0.3, jnp.float32)
+        base = ops.attention(q, k, v, causal=True, window=win, backend="xla",
+                             block_kv=64)
+        fast = ops.attention(q, k, v, causal=True, window=win, backend="xla",
+                             block_kv=64, windowed=True)
+        np.testing.assert_allclose(np.asarray(fast), np.asarray(base),
+                                   atol=2e-5, rtol=1e-3)
+
+
+def test_windowed_gradients():
+    rng = np.random.RandomState(6)
+    q = jnp.asarray(rng.randn(1, 2, 512, 16) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.randn(1, 1, 512, 16) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.randn(1, 1, 512, 16) * 0.3, jnp.float32)
+
+    def f(q, windowed):
+        return (ops.attention(q, k, v, causal=True, window=128, backend="xla",
+                              block_kv=64, windowed=windowed) ** 2).sum()
+
+    g1 = jax.grad(lambda q: f(q, True))(q)
+    g2 = jax.grad(lambda q: f(q, False))(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4, rtol=1e-3)

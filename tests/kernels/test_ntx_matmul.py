@@ -1,0 +1,49 @@
+"""Kernel sweep: ntx_matmul (interpret mode) vs the jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [
+    (128, 128, 128),
+    (128, 128, 512),
+    (256, 128, 384),
+    (64, 64, 64),
+    (100, 70, 333),  # ragged -> exercises padding
+    (8, 200, 40),
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_matmul_interpret_vs_ref(m, n, k, dtype):
+    rng = np.random.RandomState(m + n + k)
+    a = jnp.asarray(rng.randn(m, k), dtype)
+    b = jnp.asarray(rng.randn(k, n), dtype)
+    got = ops.matmul(a, b, backend="interpret")
+    want = ref.matmul_ref(a, b)
+    tol = 2e-5 * np.sqrt(k) if dtype == jnp.float32 else 2e-2 * np.sqrt(k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol, rtol=1e-2)
+
+
+@pytest.mark.parametrize("m,n,k", [(128, 128, 2048)])
+def test_compensated_not_worse_vs_fp64(m, n, k):
+    rng = np.random.RandomState(0)
+    a = jnp.asarray(rng.randn(m, k) * 10.0 ** rng.uniform(-2, 2, (m, k)), jnp.float32)
+    b = jnp.asarray(rng.randn(k, n), jnp.float32)
+    want = ref.matmul_ref64(np.asarray(a), np.asarray(b))
+    plain = np.asarray(ops.matmul(a, b, backend="interpret"), np.float64)
+    comp = np.asarray(ops.matmul(a, b, backend="interpret", compensated=True), np.float64)
+    rms = lambda x: float(np.sqrt(np.mean(np.square(x - want))))
+    assert rms(comp) <= rms(plain) * 1.001
+
+
+def test_out_dtype():
+    a = jnp.ones((128, 128), jnp.bfloat16)
+    b = jnp.ones((128, 128), jnp.bfloat16)
+    out = ops.matmul(a, b, backend="interpret", out_dtype=jnp.bfloat16)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32), 128.0)

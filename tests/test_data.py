@@ -1,0 +1,65 @@
+"""Data pipeline: determinism, resumability, sharding, prefetch."""
+
+import numpy as np
+
+from repro.data.pipeline import DataIterator, InMemoryDataset, Prefetcher
+
+
+def test_synthetic_deterministic():
+    d1 = InMemoryDataset.synthetic(10_000, 97, 32, seed=7)
+    d2 = InMemoryDataset.synthetic(10_000, 97, 32, seed=7)
+    np.testing.assert_array_equal(d1.tokens, d2.tokens)
+
+
+def test_batch_at_pure():
+    ds = InMemoryDataset.synthetic(10_000, 97, 32, seed=0)
+    b1 = ds.batch_at(5, 4, seed=3)
+    b2 = ds.batch_at(5, 4, seed=3)
+    np.testing.assert_array_equal(b1["inputs"], b2["inputs"])
+    b3 = ds.batch_at(6, 4, seed=3)
+    assert not np.array_equal(b1["inputs"], b3["inputs"])
+
+
+def test_labels_shifted():
+    ds = InMemoryDataset.synthetic(10_000, 97, 32, seed=0)
+    b = ds.batch_at(0, 2, seed=0)
+    assert b["inputs"].shape == (2, 32)
+    # labels are inputs shifted by one within the sampled window
+    np.testing.assert_array_equal(b["inputs"][:, 1:], b["labels"][:, :-1])
+
+
+def test_iterator_resume_bit_identical():
+    ds = InMemoryDataset.synthetic(20_000, 97, 16, seed=1)
+    it = DataIterator(ds, batch_size=4, seed=9)
+    batches = [next(it) for _ in range(5)]
+    snap = it.state_dict()
+    after = [next(it) for _ in range(3)]
+
+    it2 = DataIterator(ds, batch_size=4, seed=0)
+    it2.load_state_dict(snap)
+    after2 = [next(it2) for _ in range(3)]
+    for a, b in zip(after, after2):
+        np.testing.assert_array_equal(a["inputs"], b["inputs"])
+        np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_shards_disjoint():
+    ds = InMemoryDataset.synthetic(64_000, 97, 32, seed=2)
+    s0 = ds.shard(0, 4)
+    s1 = ds.shard(1, 4)
+    assert s0.n_sequences == s1.n_sequences
+    # shards come from disjoint token ranges
+    assert not np.array_equal(s0.tokens[:100], s1.tokens[:100])
+
+
+def test_prefetcher_yields_and_stops():
+    ds = InMemoryDataset.synthetic(10_000, 97, 16, seed=3)
+    it = DataIterator(ds, batch_size=2, seed=0)
+    pf = Prefetcher(it, depth=2)
+    try:
+        b1 = next(pf)
+        b2 = next(pf)
+        assert b1["inputs"].shape == (2, 16)
+        assert not np.array_equal(np.asarray(b1["inputs"]), np.asarray(b2["inputs"]))
+    finally:
+        pf.stop()

@@ -1,0 +1,58 @@
+"""bf16 dtype consistency via eval_shape (no execution; XLA:CPU can't run
+bf16 dots, but abstract evaluation catches scan-carry dtype leaks — the class
+of bug that once broke the full-scale mamba2 dry-run)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, reduce_config
+from repro.launch.train import init_train_state, make_train_step
+from repro.models import lm
+from repro.models.config import ParallelCtx
+from repro.optim.optimizers import sgd
+
+CTX = ParallelCtx(attn_backend="xla")
+OPT = sgd(1e-2)
+
+
+def _batch_structs(cfg, b=2, s=16):
+    if cfg.input_mode == "embeddings":
+        inp = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    elif cfg.n_codebooks > 1:
+        inp = jax.ShapeDtypeStruct((b, s, cfg.n_codebooks), jnp.int32)
+    else:
+        inp = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    lab_shape = (b, s) if cfg.n_codebooks == 1 else (b, s, cfg.n_codebooks)
+    return {"inputs": inp, "labels": jax.ShapeDtypeStruct(lab_shape, jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_bf16_train_step_abstractly(arch):
+    cfg = reduce_config(get_config(arch)).with_(dtype=jnp.bfloat16)
+    state = jax.eval_shape(lambda: init_train_state(jax.random.PRNGKey(0), cfg, OPT))
+    step = make_train_step(cfg, CTX, OPT)
+    new_state, metrics = jax.eval_shape(step, state, _batch_structs(cfg))
+    # params keep their dtypes through the update
+    for a, b in zip(jax.tree.leaves(state["params"]), jax.tree.leaves(new_state["params"])):
+        assert a.dtype == b.dtype
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_bf16_serve_step_abstractly(arch):
+    cfg = reduce_config(get_config(arch)).with_(dtype=jnp.bfloat16)
+    params = jax.eval_shape(lambda: lm.init_lm(jax.random.PRNGKey(0), cfg))
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, 2, 32))
+    if cfg.input_mode == "embeddings":
+        tok = jax.ShapeDtypeStruct((2, cfg.d_model), jnp.bfloat16)
+    elif cfg.n_codebooks > 1:
+        tok = jax.ShapeDtypeStruct((2, cfg.n_codebooks), jnp.int32)
+    else:
+        tok = jax.ShapeDtypeStruct((2,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    logits, new_cache = jax.eval_shape(
+        lambda p, c, t, q: lm.serve_step(p, c, t, q, cfg, CTX), params, cache, tok, pos
+    )
+    assert logits.dtype == jnp.float32
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(new_cache)):
+        assert a.dtype == b.dtype and a.shape == b.shape

@@ -1,0 +1,76 @@
+"""Optimizers + gradient compression (error feedback)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim import compression
+from repro.optim.optimizers import adamw, apply_updates, clip_by_global_norm, sgd
+
+
+def _quadratic(opt, steps=60):
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    return float(loss(params))
+
+
+def test_sgd_converges():
+    assert _quadratic(sgd(lr=0.1, momentum=0.9), steps=200) < 1e-3
+
+
+def test_adamw_converges():
+    assert _quadratic(adamw(lr=0.1, weight_decay=0.0), steps=200) < 1e-3
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 10.0, "b": jnp.ones(3) * -10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    total = jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+    assert float(norm) > 1.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 200))
+def test_quantize_roundtrip_bound(n):
+    rng = np.random.RandomState(n)
+    x = jnp.asarray(rng.randn(n) * 10 ** rng.uniform(-2, 2), jnp.float32)
+    q, scale = compression.quantize_int8(x)
+    back = compression.dequantize_int8(q, scale)
+    assert float(jnp.abs(back - x).max()) <= float(scale) / 2 + 1e-7
+
+
+def test_error_feedback_unbiased_over_time():
+    """EF-SGD property: accumulated compressed updates track the true sum."""
+    rng = np.random.RandomState(0)
+    grads_seq = [jnp.asarray(rng.randn(64), jnp.float32) for _ in range(50)]
+    err = {"g": jnp.zeros(64)}
+    sum_true = jnp.zeros(64)
+    sum_comp = jnp.zeros(64)
+    for g in grads_seq:
+        ghat, _payload, err = compression.compress_with_feedback({"g": g}, err)
+        sum_true = sum_true + g
+        sum_comp = sum_comp + ghat["g"]
+    # residual is bounded by the last error state, not growing with T
+    resid = float(jnp.abs(sum_true - sum_comp).max())
+    assert resid <= float(jnp.abs(err["g"]).max()) + 1e-5
+
+
+def test_compression_payload_is_int8():
+    g = {"w": jnp.ones((8, 8))}
+    err = compression.init_error_state(g)
+    _, payload, _ = compression.compress_with_feedback(g, err)
+    q, scale = payload["w"]
+    assert q.dtype == jnp.int8
+    assert scale.dtype == jnp.float32

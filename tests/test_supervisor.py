@@ -1,0 +1,94 @@
+"""Fault tolerance: crash/restore resume, stragglers, elastic re-mesh."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import DataIterator, InMemoryDataset
+from repro.runtime.supervisor import FailureInjector, StragglerPolicy, Supervisor
+
+
+def _toy_setup(tmp_path):
+    """A linear-regression 'model' so we can check exact-resume numerics."""
+    ds = InMemoryDataset.synthetic(50_000, 31, 8, seed=0)
+    it = DataIterator(ds, batch_size=4, seed=1)
+
+    def init_state(mesh):
+        return {"w": jnp.zeros((31,)), "count": jnp.int32(0)}
+
+    def make_step(mesh):
+        @jax.jit
+        def step(state, batch):
+            x = jax.nn.one_hot(batch["inputs"][:, 0], 31).mean(0)
+            w = state["w"] + 0.1 * x
+            return {"w": w, "count": state["count"] + 1}, {"loss": jnp.sum(w)}
+
+        return step
+
+    return init_state, make_step, it
+
+
+def test_run_to_completion(tmp_path):
+    init_state, make_step, it = _toy_setup(tmp_path)
+    sup = Supervisor(make_step, init_state, it, tmp_path / "ck", ckpt_every=5)
+    report = sup.run(12)
+    assert report.steps_run == 12
+    assert report.restarts == 0
+
+
+def test_crash_restart_is_exact(tmp_path):
+    """State after crash+restore must equal the uninterrupted run."""
+    # uninterrupted reference
+    init_state, make_step, it = _toy_setup(tmp_path)
+    sup = Supervisor(make_step, init_state, it, tmp_path / "a", ckpt_every=4)
+    sup.run(16)
+    from repro.checkpoint import checkpoint as ckpt
+
+    ref_state, _ = ckpt.restore(tmp_path / "a", init_state(None))
+
+    # crashing run
+    init_state, make_step, it2 = _toy_setup(tmp_path)
+    inj = FailureInjector({7: "crash", 13: "crash"})
+    sup2 = Supervisor(make_step, init_state, it2, tmp_path / "b", ckpt_every=4, injector=inj)
+    report = sup2.run(16)
+    assert report.restarts == 2
+    got_state, _ = ckpt.restore(tmp_path / "b", init_state(None))
+    np.testing.assert_allclose(
+        np.asarray(got_state["w"]), np.asarray(ref_state["w"]), atol=1e-6
+    )
+    assert int(got_state["count"]) == 16
+
+
+def test_straggler_logged_and_continues(tmp_path):
+    init_state, make_step, it = _toy_setup(tmp_path)
+    inj = FailureInjector({3: "straggler"})
+    sup = Supervisor(make_step, init_state, it, tmp_path / "c", ckpt_every=5, injector=inj)
+    report = sup.run(10)
+    assert report.steps_run == 10
+    assert report.straggler_events >= 1
+    assert any("straggler" in line for line in report.log)
+
+
+def test_elastic_remesh_failover(tmp_path):
+    """After a crash, the job continues on the fallback mesh entry."""
+    init_state, make_step, it = _toy_setup(tmp_path)
+    inj = FailureInjector({5: "crash"})
+    sup = Supervisor(
+        make_step, init_state, it, tmp_path / "d", ckpt_every=2,
+        injector=inj, meshes=["mesh-large", "mesh-small"],
+    )
+    report = sup.run(9)
+    assert report.remesh_events == 1
+    assert any("re-mesh" in line for line in report.log)
+    from repro.checkpoint import checkpoint as ckpt
+
+    st, _ = ckpt.restore(tmp_path / "d", init_state(None))
+    assert int(st["count"]) == 9
+
+
+def test_straggler_deadline_uses_paper_model():
+    pol = StragglerPolicy(slack=2.0, weight_bytes=300e6, mesh_side=16)
+    pol.observe(0.5)
+    # paper: T_update = 4*(300MB/60GBps + 16*20us) = 4*(5ms + 0.32ms) ~ 21.3ms
+    d = pol.deadline()
+    assert 1.0 < d < 2.0  # 2*0.5 + 0.0213

@@ -1,0 +1,52 @@
+"""C3: tile planner invariants (VMEM budget, alignment, burst length)."""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.tiling import (
+    DEFAULT_VMEM_BUDGET,
+    LANE,
+    MIN_BURST_ELEMS,
+    plan_matmul_tiles,
+    plan_stencil_tiles,
+)
+
+dim = st.integers(1, 16384)
+
+
+@settings(max_examples=50, deadline=None)
+@given(dim, dim, dim, st.sampled_from([1, 2, 4]))
+def test_matmul_plan_fits_and_aligned(m, n, k, bytes_):
+    plan = plan_matmul_tiles(m, n, k, in_dtype_bytes=bytes_)
+    assert plan.vmem_bytes <= DEFAULT_VMEM_BUDGET
+    assert plan.bm % LANE == 0 and plan.bn % LANE == 0 and plan.bk % LANE == 0
+    # grid covers the problem
+    assert plan.grid[0] * plan.bm >= m
+    assert plan.grid[1] * plan.bn >= n
+    assert plan.grid[2] * plan.bk >= k
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(4, 256),
+    st.integers(4, 256),
+    st.integers(1, 512),
+    st.integers(1, 512),
+    st.integers(1, 7),
+)
+def test_stencil_plan_fits(h, w, cin, cout, k):
+    plan = plan_stencil_tiles(h, w, cin, cout, k, k)
+    # weights alone may exceed the budget for pathological channel counts; the
+    # planner must never *under-report*.
+    inp = (plan.th + plan.halo) * (plan.tw + plan.halo) * cin
+    out = plan.th * plan.tw * cout
+    wgt = k * k * cin * cout
+    assert plan.vmem_bytes == (2 * inp + 2 * out + wgt) * 4
+    assert plan.burst_elems >= MIN_BURST_ELEMS
+    assert plan.halo == k - 1
+
+
+def test_reuse_grows_with_tiles():
+    small = plan_matmul_tiles(128, 128, 4096)
+    big = plan_matmul_tiles(4096, 4096, 4096)
+    assert big.arithmetic_intensity >= small.arithmetic_intensity
