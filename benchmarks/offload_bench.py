@@ -1,0 +1,196 @@
+"""Offload-runtime benchmarks: queued vs synchronous, overlap, cross-checks.
+
+Four benchmarks over :mod:`repro.runtime` in the same (rows, summary) shape
+as :mod:`benchmarks.tables`:
+
+  * ``offload_overhead``  — the §2.2 claim: command queues cut the modeled
+    offload overhead (cycles engines sit idle around each command) vs a
+    tightly-coupled synchronous driver. Acceptance floor: >= 5x.
+  * ``queue_depth_sweep`` — how deep the staging FIFOs must be before one
+    driver keeps 8 NTX engines busy.
+  * ``overlap_sweep``     — what double-buffered DMA buys over serialized
+    transfer+compute, per paper workload.
+  * ``model_crosscheck``  — the event-driven runtime vs the paper's
+    analytical model (benchmarks/ntx_model.py) on the CNN workloads; the
+    two must agree within 10% wherever the HMC bandwidth cap (which the two
+    models apply differently) is not active.
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.offload_bench`` — also
+writes a chrome://tracing timeline to ``artifacts/offload_trace.json``.
+"""
+
+from __future__ import annotations
+
+from repro.core import ntx
+from repro.runtime import cmdqueue, scheduler
+from repro.runtime.dma import DmaConfig, Transfer
+
+from benchmarks import ntx_model as M
+from benchmarks.workloads import WORKLOADS
+
+# The paper's Table 2 GoogLeNet layers, one NTX command per output channel.
+TABLE2_LAYERS = [
+    ("7x7x3->112x112x64", ntx.ConvShape(7, 7, 3, 112, 112, 64)),
+    ("3x3x64->56x56x192", ntx.ConvShape(3, 3, 64, 56, 56, 192)),
+    ("1x1x256->28x28x64", ntx.ConvShape(1, 1, 256, 28, 28, 64)),
+    ("1x1x512->14x14x192", ntx.ConvShape(1, 1, 512, 14, 14, 192)),
+]
+
+
+def _layer_commands(conv: ntx.ConvShape, in_h: int | None = None,
+                    in_w: int | None = None):
+    """One command + input-byte count per output channel (the NTX mapping)."""
+    ih = in_h or (conv.out_h + conv.kh - 1)
+    iw = in_w or (conv.out_w + conv.kw - 1)
+    cmd = ntx.conv2d_command(ih, iw, conv.cin, conv.kh, conv.kw, 1, 0, 0, 0)
+    # per offload: the weight filter + its share of the streamed input plane
+    w_bytes = conv.kh * conv.kw * conv.cin * 4
+    x_bytes = ih * iw * conv.cin * 4 / conv.cout
+    cmds = [cmd] * conv.cout
+    byts = [w_bytes + x_bytes] * conv.cout
+    return cmds, byts
+
+
+def offload_overhead():
+    """Queued vs synchronous offload per Table 2 layer (single engine: the
+    pure driver-coupling overhead, no multi-engine parallelism mixed in)."""
+    rows = []
+    reductions = []
+    for label, conv in TABLE2_LAYERS:
+        cmds, byts = _layer_commands(conv)
+        s, q, red = cmdqueue.overhead_reduction(
+            cmds, n_engines=1, queue_depth=4,
+            dma_cycles=[DmaConfig().transfer_cycles(Transfer(b)) for b in byts],
+        )
+        reductions.append(red)
+        rows.append((label, s.stats.overhead_cycles, q.stats.overhead_cycles,
+                     red, q.stats.utilization))
+    mn = min(reductions)
+    return rows, {
+        "min_overhead_reduction": mn,
+        "paper_claims": 7.0,
+        "reproduced_5x": mn >= 5.0,
+    }
+
+
+def queue_depth_sweep():
+    """One driver vs 8 engines: staging depth needed for full utilization."""
+    _, conv = TABLE2_LAYERS[3]  # the finest-grained layer -> worst case
+    base_cmds, byts = _layer_commands(conv)
+    # split each per-channel command over its out_h loop for finer tiles
+    cmds, dma_b = [], []
+    for c, b in zip(base_cmds, byts):
+        parts = scheduler.partition_command(c, 4)
+        cmds += parts
+        dma_b += [b / len(parts)] * len(parts)
+    dma_cycles = [DmaConfig().transfer_cycles(Transfer(b)) for b in dma_b]
+    rows = []
+    totals = {}
+    for depth in (1, 2, 4, 8):
+        t = cmdqueue.simulate_offload(cmds, n_engines=8, queue_depth=depth,
+                                      dma_cycles=dma_cycles)
+        totals[depth] = t.stats.total_cycles
+        rows.append((f"depth{depth}", t.stats.total_cycles,
+                     t.stats.utilization, t.stats.queue_stall_cycles,
+                     t.stats.dma_stall_cycles))
+    sync = cmdqueue.simulate_offload(cmds, n_engines=8, sync=True,
+                                     dma_cycles=dma_cycles)
+    rows.append(("sync", sync.stats.total_cycles, sync.stats.utilization,
+                 sync.stats.queue_stall_cycles, sync.stats.dma_stall_cycles))
+    return rows, {
+        "speedup_sync_to_depth4": sync.stats.total_cycles / totals[4],
+        "depth1_to_depth4": totals[1] / totals[4],
+    }
+
+
+def overlap_sweep():
+    """Double-buffered vs serialized DMA across the paper's workloads."""
+    rows = []
+    speedups = []
+    for name in ("alexnet", "googlenet", "resnet50", "inception_v3"):
+        w = WORKLOADS[name]
+        macs, byts = w.train_gflop * 1e9 / 2, w.dma_bytes(True)
+        ov = scheduler.simulate_workload(macs, byts, n_clusters=16)
+        ser = scheduler.simulate_workload(macs, byts, n_clusters=16,
+                                          overlap=False)
+        sp = ser.cycles / ov.cycles
+        speedups.append(sp)
+        rows.append((name, ov.cycles, ser.cycles, sp, ov.overlap_efficiency))
+    return rows, {
+        "mean_overlap_speedup": sum(speedups) / len(speedups),
+        "all_overlap_efficiency_near_1": all(r[4] > 0.95 for r in rows),
+    }
+
+
+def model_crosscheck():
+    """Event-driven runtime vs analytical model, per workload and cube size."""
+    rows = []
+    errs_uncapped = []
+    for name in ("alexnet", "googlenet", "resnet50", "inception_v3",
+                 "resnet34", "resnet152"):
+        w = WORKLOADS[name]
+        k = M.Kernel(macs=w.train_gflop * 1e9 / 2, bytes_total=w.dma_bytes(True))
+        for ncl in (16, 64):
+            m = M.cube(k, ncl, 1.5e9, "28nm")
+            est = scheduler.simulate_workload(k.macs, k.bytes_total,
+                                              n_clusters=ncl, f_ntx=1.5e9)
+            rel = (est.time - m.time) / m.time
+            if not m.bw_capped:
+                errs_uncapped.append(abs(rel))
+            rows.append((f"{name}@{ncl}cl", m.time * 1e3, est.time * 1e3,
+                         rel, m.bw_capped))
+    return rows, {
+        "n_workloads_within_10pct": sum(1 for e in errs_uncapped if e < 0.10),
+        "max_rel_err_uncapped": max(errs_uncapped),
+        "agrees_within_10pct": max(errs_uncapped) < 0.10,
+    }
+
+
+ALL = {
+    "offload_overhead": offload_overhead,
+    "queue_depth_sweep": queue_depth_sweep,
+    "overlap_sweep": overlap_sweep,
+    "model_crosscheck": model_crosscheck,
+}
+
+
+def export_demo_trace(path="artifacts/offload_trace.json") -> str:
+    """A small multi-cluster schedule, exported for chrome://tracing."""
+    import os
+
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    cmd = ntx.matmul_command(512, 512, 512, 0, 0, 0)
+    sched = scheduler.MultiClusterScheduler(n_clusters=4)
+    buckets = sched.distribute(cmd)
+    flat_bytes = [512 * 512 * 4 / 4 / len(b) for b in buckets for _ in b]
+    res = sched.schedule(buckets, bytes_per_command=flat_bytes)
+    res.timeline.save(path)
+    return path
+
+
+def main() -> None:
+    import time
+
+    details = []
+    for name, fn in ALL.items():
+        t0 = time.perf_counter()
+        rows, summary = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        derived = ";".join(
+            f"{k}={v:.4g}" if isinstance(v, (int, float)) else f"{k}={v}"
+            for k, v in summary.items()
+        )
+        print(f"{name},{us:.0f},{derived}")
+        details.append((name, rows, summary))
+    print()
+    for name, rows, summary in details:
+        print(f"== {name} ==")
+        for r in rows:
+            print("  ", *(f"{x:.4g}" if isinstance(x, float) else x for x in r))
+        for k, v in summary.items():
+            print(f"   -> {k}: {v}")
+    print("trace:", export_demo_trace())
+
+
+if __name__ == "__main__":
+    main()

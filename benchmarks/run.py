@@ -27,7 +27,7 @@ def _run(name, fn, details):
 
 
 def main() -> None:
-    from benchmarks import kernels_bench, roofline, tables
+    from benchmarks import kernels_bench, offload_bench, roofline, tables
 
     details: list = []
     _run("table1_precision", tables.table1_precision, details)
@@ -37,6 +37,8 @@ def main() -> None:
     _run("fig8_vfs", tables.fig8_vfs, details)
     _run("fig14_mesh_scaling", tables.fig14_mesh_scaling, details)
     _run("fig15_16_datacenter", tables.fig15_16_datacenter, details)
+    for name, fn in offload_bench.ALL.items():
+        _run(name, fn, details)
 
     for name, fn in kernels_bench.ALL.items():
         t0 = time.perf_counter()

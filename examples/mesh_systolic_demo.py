@@ -11,6 +11,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.configs import get_config, reduce_config  # noqa: E402
 from repro.data.pipeline import DataIterator, InMemoryDataset  # noqa: E402
 from repro.launch.train import init_train_state, make_train_step  # noqa: E402
@@ -19,8 +20,7 @@ from repro.optim.optimizers import sgd  # noqa: E402
 
 
 def main():
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = reduce_config(get_config("llama3_2_3b")).with_(vocab_size=128)
     print(f"mesh: {dict(mesh.shape)}  arch: {cfg.name} (reduced)")
 

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import systolic
 from repro.models import lm
 from repro.models.config import ModelConfig, ParallelCtx
@@ -157,7 +158,7 @@ def make_train_step(
         err = state.get("err", {"_": jnp.zeros((_dp_degree(mesh, dp_axes), 1), jnp.float32)})
         batch_specs = jax.tree.map(lambda x: batch_spec_fn(x), batch)
         err_specs = jax.tree.map(lambda _: P(dp_axes), err)
-        grads, metrics, new_err = jax.shard_map(
+        grads, metrics, new_err = compat.shard_map(
             per_shard,
             mesh=mesh,
             in_specs=(P(), batch_specs, err_specs),
@@ -171,6 +172,70 @@ def make_train_step(
         return new_state, metrics
 
     return train_step
+
+
+# ---------------------------------------------------------------------------
+# Offload-aware step accounting (the paper's runtime view of one train step)
+# ---------------------------------------------------------------------------
+
+
+def offload_step_report(cfg: ModelConfig, seq: int, batch: int, *,
+                        n_clusters: int = 16, queue_depth: int = 4,
+                        f_ntx: float = 1.5e9) -> dict:
+    """Map one training step onto the NTX offload runtime (modeled).
+
+    MACs come from the analytic flop counts, DMA bytes from the HBM-traffic
+    model at fp32 stream width (the near-memory tier streams wide); the
+    cycle estimate runs the double-buffered runtime of
+    :mod:`repro.runtime.scheduler`. The queue-level block maps the step's
+    dominant GEMM onto per-cluster command streams and compares queued vs
+    synchronous offload — the §2.2 accounting for this exact model.
+    """
+    from repro.core import ntx as ntx_mod
+    from repro.models import flops
+    from repro.runtime import scheduler as rt_sched
+
+    macs = flops.train_step_flops(cfg, seq, batch) / 2.0
+    dma_bytes = flops.train_hbm_bytes_per_chip(cfg, seq, batch, tp=1, dp=1,
+                                               dtype_bytes=4)
+    est = rt_sched.simulate_workload(macs, dma_bytes, n_clusters=n_clusters,
+                                     f_ntx=f_ntx)
+
+    # queue-level view of the dominant GEMM: (tokens x d_ff x d_model)
+    tokens = seq * batch
+    d_ff = cfg.d_ff or getattr(cfg, "moe_d_ff", 0) or 4 * cfg.d_model
+    gemm = ntx_mod.matmul_command(tokens, d_ff, cfg.d_model, 0, 0, 0)
+    # enough tiles that every engine's queue can actually fill to queue_depth
+    parts = rt_sched.partition_command(
+        gemm, n_clusters * rt_sched.ENGINES_PER_CLUSTER * queue_depth
+    )
+    tile_bytes = [
+        (p.loops[2] * p.loops[0] + p.loops[0] * p.loops[1]) * 4 for p in parts
+    ]
+    sched = rt_sched.MultiClusterScheduler(
+        n_clusters=n_clusters,
+        cluster=rt_sched.ClusterConfig(queue_depth=queue_depth),
+        f_ntx=f_ntx,
+    )
+    queued = sched.schedule(parts, bytes_per_command=tile_bytes)
+    sync_sched = rt_sched.MultiClusterScheduler(
+        n_clusters=n_clusters,
+        cluster=rt_sched.ClusterConfig(sync=True),
+        f_ntx=f_ntx,
+    )
+    synced = sync_sched.schedule(parts, bytes_per_command=tile_bytes)
+    return {
+        "macs_per_step": macs,
+        "dma_bytes_per_step": dma_bytes,
+        "cycles_per_step": est.cycles,
+        "step_time_s": est.time,
+        "overlap_efficiency": est.overlap_efficiency,
+        "gemm_offloads": queued.summary()["n_commands"],
+        "gemm_cycles_queued": queued.total_cycles,
+        "gemm_cycles_sync": synced.total_cycles,
+        "gemm_queued_speedup": synced.total_cycles / max(queued.total_cycles, 1),
+        "gemm_utilization": queued.utilization,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -247,6 +312,12 @@ def _cli():
     ap.add_argument("--ckpt-dir", default="artifacts/train_cli_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--crash-at", type=int, default=None)
+    ap.add_argument("--offload-report", action="store_true",
+                    help="print the modeled NTX offload accounting for one "
+                         "train step (queue/DMA runtime) and compare it with "
+                         "the measured step time at the end")
+    ap.add_argument("--offload-clusters", type=int, default=16)
+    ap.add_argument("--queue-depth", type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -258,10 +329,7 @@ def _cli():
     n_dev = jax.device_count()
     if n_dev > 1:
         model = math.gcd(n_dev, 4)
-        mesh = jax.make_mesh(
-            (n_dev // model, model), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        mesh = compat.make_mesh((n_dev // model, model), ("data", "model"))
         dp_axes = ("data",)
     else:
         mesh, dp_axes = None, ()
@@ -284,6 +352,15 @@ def _cli():
             donate_argnums=(0,),
         )
 
+    offload = None
+    if args.offload_report:
+        offload = offload_step_report(cfg, args.seq, args.batch,
+                                      n_clusters=args.offload_clusters,
+                                      queue_depth=args.queue_depth)
+        print("offload step accounting (modeled NTX runtime):")
+        for key, v in offload.items():
+            print(f"  {key}: {v:.4g}" if isinstance(v, float) else f"  {key}: {v}")
+
     injector = FailureInjector({args.crash_at: "crash"} if args.crash_at else {})
     t0 = time.time()
 
@@ -296,6 +373,11 @@ def _cli():
                      ckpt_every=args.ckpt_every, injector=injector)
     report = sup.run(args.steps, metrics_cb=cb)
     print(f"done: {report.steps_run} steps, {report.restarts} restarts")
+    if offload is not None and report.steps_run:
+        measured = (time.time() - t0) / report.steps_run
+        print(f"offload model: {offload['step_time_s']*1e3:.2f} ms/step modeled "
+              f"on {args.offload_clusters} clusters vs {measured*1e3:.2f} ms/step "
+              f"measured on {jax.default_backend()}")
 
 
 if __name__ == "__main__":

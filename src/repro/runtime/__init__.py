@@ -1,0 +1,16 @@
+"""Offload runtime: command queues, DMA streaming, multi-cluster scheduling.
+
+The asynchronous near-memory offload subsystem (paper §2.2/§3.1):
+
+- :mod:`repro.runtime.cmdqueue`  — per-engine command FIFOs with depth,
+  back-pressure and issue/retire timestamps; one driver feeding 8 NTX.
+- :mod:`repro.runtime.dma`       — double-buffered cluster DMA with TCDM bank
+  conflicts and the shared HMC vault bandwidth cap.
+- :mod:`repro.runtime.scheduler` — loop-nest partitioning across clusters,
+  queue feeding, chrome-trace timelines, and the event-driven counterpart of
+  the analytical model in ``benchmarks/ntx_model.py``.
+- :mod:`repro.runtime.supervisor` — fault-tolerant training supervisor
+  (imported lazily: it pulls in jax).
+"""
+
+from repro.runtime import cmdqueue, dma, scheduler  # noqa: F401

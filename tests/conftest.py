@@ -1,0 +1,22 @@
+"""Shared pytest plumbing: the ``slow`` marker gate.
+
+Long-running system/distributed tests are marked ``@pytest.mark.slow`` and
+skipped by default so the tier-1 run stays fast; ``--runslow`` enables them
+(CI runs both lanes).
+"""
+
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="also run tests marked @pytest.mark.slow")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow test: pass --runslow to include")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

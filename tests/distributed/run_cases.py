@@ -15,10 +15,11 @@ import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
+
 
 def mesh3():
-    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 
 def case_systolic_equals_psum():
@@ -34,7 +35,7 @@ def case_systolic_equals_psum():
         return (m - p)[None]
 
     f = jax.jit(
-        jax.shard_map(inner, mesh=mesh, in_specs=P(("pod", "data")),
+        compat.shard_map(inner, mesh=mesh, in_specs=P(("pod", "data")),
                       out_specs=P(("pod", "data")), check_vma=False)
     )
     diff = f(x)
@@ -56,7 +57,7 @@ def case_systolic_tree():
         return jax.tree.map(lambda l: l[None], m)
 
     f = jax.jit(
-        jax.shard_map(inner, mesh=mesh, in_specs=P(("pod", "data")),
+        compat.shard_map(inner, mesh=mesh, in_specs=P(("pod", "data")),
                       out_specs=P(("pod", "data")), check_vma=False)
     )
     out = f(tree)
@@ -137,8 +138,7 @@ def case_elastic_checkpoint_reshard():
 
     from repro.checkpoint import checkpoint as ckpt
 
-    mesh_a = jax.make_mesh((4, 2), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_a = compat.make_mesh((4, 2), ("data", "model"))
     devices = np.array(jax.devices()[:4]).reshape(2, 2)
     from jax.sharding import Mesh
 

@@ -10,6 +10,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.slow  # each case is a fresh 8-fake-device subprocess
+
 ROOT = Path(__file__).resolve().parents[2]
 
 CASES = [

@@ -1,8 +1,13 @@
 """MoE invariants: routing, capacity, EP == dense oracle."""
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -45,8 +50,7 @@ def test_dense_vs_ep_single_rank():
     params = moe.init_moe(rng, cfg, jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model), jnp.float32)
     y_dense, aux_d = moe.moe_dense(x, params, cfg)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     y_ep, aux_e = moe.moe_ep(x, params, cfg, mesh, dp_axes=())
     np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_ep), atol=1e-4)
     np.testing.assert_allclose(
@@ -59,8 +63,7 @@ def test_capacity_drops_reduce_output():
     cfg = _cfg(capacity_factor=1e-9)
     params = moe.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, cfg.d_model), jnp.float32)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     y_ep, _ = moe.moe_ep(x, params, cfg, mesh, dp_axes=())
     y_dense, _ = moe.moe_dense(x, params, cfg)
     # capacity floor is 8 slots/expert, so *some* tokens survive, but overall

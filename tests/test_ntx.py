@@ -1,6 +1,9 @@
 """C2: the NTX offload model — interpreter, AGU math, Table 2 counts."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,0 +1,153 @@
+"""ntx_execute opcode edge cases (no hypothesis — always collected).
+
+Covers the non-MAC opcodes (memset, copy, argmax, vmax/vmin, relu, vadd,
+vmul) and the accumulator init/store-level corners that the command-queue
+partitioner relies on.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ntx
+from repro.core.ntx import Agu, MAX_LOOPS, NtxCommand
+
+
+def _agu(base, *strides):
+    return Agu(base, tuple(strides) + (0,) * (MAX_LOOPS - len(strides)))
+
+
+def test_memset_fills_strided_region():
+    mem = np.arange(32, dtype=np.float32)
+    cmd = NtxCommand(
+        loops=(8, 1, 1, 1, 1), opcode="memset",
+        agu_rd0=_agu(0, 0),  # reads are ignored but addressed
+        agu_wr=_agu(4, 2),  # every other word from 4
+        init_level=MAX_LOOPS, store_level=0, init_value=7.5,
+    )
+    out = ntx.ntx_execute(cmd, mem)
+    np.testing.assert_array_equal(out[4:20:2], np.full(8, 7.5, np.float32))
+    untouched = [i for i in range(32) if not (4 <= i < 20 and (i - 4) % 2 == 0)]
+    np.testing.assert_array_equal(out[untouched], mem[untouched])
+
+
+def test_copy_transposes_via_agus():
+    rows, cols = 3, 4
+    mem = np.zeros(50, np.float32)
+    mem[: rows * cols] = np.arange(rows * cols)
+    cmd = NtxCommand(
+        loops=(cols, rows, 1, 1, 1), opcode="copy",
+        agu_rd0=_agu(0, 1, cols),  # read row-major [i1, i0]
+        agu_wr=_agu(20, rows, 1),  # write column-major -> transpose
+        init_level=0, store_level=0,
+    )
+    out = ntx.ntx_execute(cmd, mem)
+    want = mem[: rows * cols].reshape(rows, cols).T
+    np.testing.assert_array_equal(out[20 : 20 + rows * cols].reshape(cols, rows), want)
+
+
+def test_argmax_writes_index():
+    vec = np.array([3.0, -1.0, 9.0, 9.0, 2.0], np.float32)  # first max wins
+    mem = np.concatenate([vec, np.zeros(3, np.float32)])
+    cmd = NtxCommand(
+        loops=(5, 1, 1, 1, 1), opcode="argmax",
+        agu_rd0=_agu(0, 1), agu_wr=_agu(6, 0),
+        init_level=MAX_LOOPS, store_level=1,
+    )
+    out = ntx.ntx_execute(cmd, mem)
+    assert out[6] == 2.0
+
+
+def test_argmax_per_row_with_init_level():
+    x = np.array([[1.0, 5.0, 2.0], [7.0, 0.0, 3.0]], np.float32)
+    mem = np.concatenate([x.ravel(), np.zeros(4, np.float32)])
+    cmd = NtxCommand(
+        loops=(3, 2, 1, 1, 1), opcode="argmax",
+        agu_rd0=_agu(0, 1, 3), agu_wr=_agu(8, 0, 1),
+        init_level=1, store_level=1,  # fresh argmax per row, store per row
+    )
+    out = ntx.ntx_execute(cmd, mem)
+    np.testing.assert_array_equal(out[8:10], [1.0, 0.0])
+
+
+@pytest.mark.parametrize("op,fn", [("vmax", np.max), ("vmin", np.min)])
+def test_vmax_vmin_ignore_init_value(op, fn):
+    rng = np.random.RandomState(0)
+    vec = rng.randn(16).astype(np.float32) - 5.0  # all negative-ish
+    mem = np.concatenate([vec, np.zeros(2, np.float32)])
+    cmd = NtxCommand(
+        loops=(16, 1, 1, 1, 1), opcode=op,
+        agu_rd0=_agu(0, 1), agu_wr=_agu(17, 0),
+        init_level=1, store_level=1, init_value=0.0,
+    )
+    out = ntx.ntx_execute(cmd, mem)
+    assert out[17] == np.float32(fn(vec))  # init_value must not leak into max
+
+
+def test_relu_and_vadd_elementwise():
+    a = np.array([-2.0, 3.0, -0.5, 4.0], np.float32)
+    b = np.array([1.0, 1.0, 1.0, 1.0], np.float32)
+    mem = np.concatenate([a, b, np.zeros(8, np.float32)])
+    relu = NtxCommand(
+        loops=(4, 1, 1, 1, 1), opcode="relu",
+        agu_rd0=_agu(0, 1), agu_wr=_agu(8, 1),
+        init_level=0, store_level=0,
+    )
+    out = ntx.ntx_execute(relu, mem)
+    np.testing.assert_array_equal(out[8:12], np.maximum(a, 0.0))
+    vadd = NtxCommand(
+        loops=(4, 1, 1, 1, 1), opcode="vadd",
+        agu_rd0=_agu(0, 1), agu_rd1=_agu(4, 1), agu_wr=_agu(8, 1),
+        init_level=0, store_level=0,
+    )
+    out = ntx.ntx_execute(vadd, mem)
+    np.testing.assert_array_equal(out[8:12], a + b)
+
+
+def test_mac_init_level_max_is_one_running_sum():
+    """init_level=MAX_LOOPS: the accumulator is never re-initialized -> the
+    final store holds the grand total (plus init_value)."""
+    x = np.ones(12, np.float32)
+    mem = np.concatenate([x, x, np.zeros(2, np.float32)])
+    cmd = NtxCommand(
+        loops=(4, 3, 1, 1, 1), opcode="mac",
+        agu_rd0=_agu(0, 1, 4), agu_rd1=_agu(12, 1, 4), agu_wr=_agu(25, 0, 0),
+        init_level=MAX_LOOPS, store_level=2, init_value=100.0,
+    )
+    out = ntx.ntx_execute(cmd, mem)
+    assert out[25] == 112.0  # 100 + 12 dot-products of 1*1
+
+
+def test_mac_store_level_0_streams_partial_sums():
+    x = np.array([1.0, 2.0, 3.0], np.float32)
+    mem = np.concatenate([x, np.ones(3, np.float32), np.zeros(4, np.float32)])
+    cmd = NtxCommand(
+        loops=(3, 1, 1, 1, 1), opcode="mac",
+        agu_rd0=_agu(0, 1), agu_rd1=_agu(3, 1), agu_wr=_agu(6, 1),
+        init_level=MAX_LOOPS, store_level=0,
+    )
+    out = ntx.ntx_execute(cmd, mem)
+    np.testing.assert_array_equal(out[6:9], np.cumsum(x))  # prefix sums
+
+
+def test_wide_false_rounds_every_fma():
+    rng = np.random.RandomState(4)
+    k = 2048
+    a = (rng.randn(k) * 10.0 ** rng.uniform(-3, 3, k)).astype(np.float32)
+    b = rng.randn(k).astype(np.float32)
+    mem = np.concatenate([a, b, np.zeros(1, np.float32)])
+    cmd = ntx.matmul_command(1, 1, k, 0, k, 2 * k)
+    ref = float(np.dot(a.astype(np.float64), b.astype(np.float64)))
+    wide = float(ntx.ntx_execute(cmd, mem, wide=True)[2 * k])
+    narrow = float(ntx.ntx_execute(cmd, mem, wide=False)[2 * k])
+    assert abs(wide - ref) <= abs(narrow - ref)
+
+
+def test_invalid_commands_rejected():
+    with pytest.raises(ValueError):
+        NtxCommand(loops=(1, 1, 1, 1), opcode="mac", agu_rd0=_agu(0, 1))
+    with pytest.raises(ValueError):
+        NtxCommand(loops=(1, 1, 1, 1, 1), opcode="nope", agu_rd0=_agu(0, 1))
+    with pytest.raises(ValueError):
+        NtxCommand(loops=(0, 1, 1, 1, 1), opcode="mac", agu_rd0=_agu(0, 1))
+    with pytest.raises(ValueError):
+        Agu(0, (1, 2))

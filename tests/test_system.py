@@ -8,6 +8,7 @@ in memory, without intervention from a host" (§3) at miniature scale.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config, reduce_config
 from repro.data.pipeline import DataIterator, InMemoryDataset
@@ -15,6 +16,8 @@ from repro.launch.train import init_train_state, make_train_step
 from repro.models.config import ParallelCtx
 from repro.optim.optimizers import adamw, sgd
 from repro.runtime.supervisor import FailureInjector, Supervisor
+
+pytestmark = pytest.mark.slow  # minutes of end-to-end training on CPU
 
 CTX = ParallelCtx(attn_backend="xla")
 

@@ -1,5 +1,8 @@
 """C3: tile planner invariants (VMEM budget, alignment, burst length)."""
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
