@@ -1,6 +1,6 @@
 """Offload-runtime benchmarks: queued vs synchronous, overlap, cross-checks.
 
-Four benchmarks over :mod:`repro.runtime` in the same (rows, summary) shape
+Five benchmarks over :mod:`repro.runtime` in the same (rows, summary) shape
 as :mod:`benchmarks.tables`:
 
   * ``offload_overhead``  — the §2.2 claim: command queues cut the modeled
@@ -14,50 +14,53 @@ as :mod:`benchmarks.tables`:
     analytical model (benchmarks/ntx_model.py) on the CNN workloads; the
     two must agree within 10% wherever the HMC bandwidth cap (which the two
     models apply differently) is not active.
+  * ``lowering_crosscheck`` — program-derived offload/cycle counts (from
+    ``repro.lower``) vs the closed-form Table 2 arithmetic
+    (``ntx.offload_count``) for every CONV_LAYERS layer at both design
+    points, plus fwd+dW+dX training totals from the same lowering.
+
+All command streams come from the unified lowering pipeline
+(``repro.lower.lower``) — the benchmarks consume NtxPrograms, not hand-built
+commands.
 
 Standalone: ``PYTHONPATH=src python -m benchmarks.offload_bench`` — also
 writes a chrome://tracing timeline to ``artifacts/offload_trace.json``.
+``--smoke`` runs a single small workload per benchmark (the CI drift check).
 """
 
 from __future__ import annotations
 
 from repro.core import ntx
+from repro.lower import MatmulSpec, NS_DESIGN, NTX_DESIGN, lower, lower_layer
 from repro.runtime import cmdqueue, scheduler
 from repro.runtime.dma import DmaConfig, Transfer
 
 from benchmarks import ntx_model as M
-from benchmarks.workloads import WORKLOADS
-
-# The paper's Table 2 GoogLeNet layers, one NTX command per output channel.
-TABLE2_LAYERS = [
-    ("7x7x3->112x112x64", ntx.ConvShape(7, 7, 3, 112, 112, 64)),
-    ("3x3x64->56x56x192", ntx.ConvShape(3, 3, 64, 56, 56, 192)),
-    ("1x1x256->28x28x64", ntx.ConvShape(1, 1, 256, 28, 28, 64)),
-    ("1x1x512->14x14x192", ntx.ConvShape(1, 1, 512, 14, 14, 192)),
-]
+from benchmarks.workloads import CONV_LAYERS, TABLE2_LAYERS, WORKLOADS
 
 
-def _layer_commands(conv: ntx.ConvShape, in_h: int | None = None,
-                    in_w: int | None = None):
-    """One command + input-byte count per output channel (the NTX mapping)."""
-    ih = in_h or (conv.out_h + conv.kh - 1)
-    iw = in_w or (conv.out_w + conv.kw - 1)
-    cmd = ntx.conv2d_command(ih, iw, conv.cin, conv.kh, conv.kw, 1, 0, 0, 0)
-    # per offload: the weight filter + its share of the streamed input plane
-    w_bytes = conv.kh * conv.kw * conv.cin * 4
-    x_bytes = ih * iw * conv.cin * 4 / conv.cout
-    cmds = [cmd] * conv.cout
-    byts = [w_bytes + x_bytes] * conv.cout
+def _layer_commands(spec, include_staging: bool = False):
+    """Command stream + per-command input bytes for one conv layer's forward
+    pass, straight from the lowered program (one command per output channel
+    at the NTX design point). Staging blits (pad memset/copy) are excluded
+    by default so the stream matches Table 2's compute-offload counts."""
+    prog = lower(spec, "fwd", design=NTX_DESIGN)
+    cmds, byts = [], []
+    for b in prog.blocks:
+        if b.is_staging and not include_staging:
+            continue
+        cmds += list(b.commands())
+        byts += [b.dma_bytes_in] * b.n_commands
     return cmds, byts
 
 
-def offload_overhead():
+def offload_overhead(layers=None):
     """Queued vs synchronous offload per Table 2 layer (single engine: the
     pure driver-coupling overhead, no multi-engine parallelism mixed in)."""
     rows = []
     reductions = []
-    for label, conv in TABLE2_LAYERS:
-        cmds, byts = _layer_commands(conv)
+    for label, spec in layers or TABLE2_LAYERS:
+        cmds, byts = _layer_commands(spec)
         s, q, red = cmdqueue.overhead_reduction(
             cmds, n_engines=1, queue_depth=4,
             dma_cycles=[DmaConfig().transfer_cycles(Transfer(b)) for b in byts],
@@ -75,8 +78,8 @@ def offload_overhead():
 
 def queue_depth_sweep():
     """One driver vs 8 engines: staging depth needed for full utilization."""
-    _, conv = TABLE2_LAYERS[3]  # the finest-grained layer -> worst case
-    base_cmds, byts = _layer_commands(conv)
+    _, spec = TABLE2_LAYERS[3]  # the finest-grained layer -> worst case
+    base_cmds, byts = _layer_commands(spec)
     # split each per-channel command over its out_h loop for finer tiles
     cmds, dma_b = [], []
     for c, b in zip(base_cmds, byts):
@@ -146,11 +149,78 @@ def model_crosscheck():
     }
 
 
+def lowering_crosscheck(networks=None):
+    """Program-derived offload/cycle counts vs the closed-form arithmetic.
+
+    For every conv layer of every CNN: ``lower(spec, "fwd")`` at both design
+    points must reproduce ``ntx.offload_count`` / ``busy_cycles_per_offload``
+    exactly (the Table 2 columns), and the fwd+dW+dX training programs from
+    the same lowering must carry ~3x the forward MAC cycles — the paper's
+    "training = 3x inference" flop accounting, now derived from commands
+    instead of assumed.
+    """
+    rows = []
+    all_match = True
+    ratios = []
+    for name in networks or CONV_LAYERS:
+        for spec in CONV_LAYERS[name]:
+            shape = spec.conv_shape()
+            progs = lower_layer(spec)
+            ns_fwd = lower(spec, "fwd", design=NS_DESIGN)
+            match = (
+                progs["fwd"].n_offloads == ntx.offload_count(shape, **ntx.NTX_LOOPS)
+                and ns_fwd.n_offloads == ntx.offload_count(shape, **ntx.NS_LOOPS)
+                and progs["fwd"].busy_cycles_per_offload
+                == ntx.busy_cycles_per_offload(shape, **ntx.NTX_LOOPS)
+                and ns_fwd.busy_cycles_per_offload
+                == ntx.busy_cycles_per_offload(shape, **ntx.NS_LOOPS)
+            )
+            all_match &= match
+            fwd_cyc = progs["fwd"].busy_cycles
+            bwd_cyc = progs["dw"].busy_cycles + progs["dx"].busy_cycles
+            train_ratio = (fwd_cyc + bwd_cyc) / fwd_cyc
+            ratios.append(train_ratio)
+            rows.append((
+                f"{name}:{spec.kh}x{spec.kw}x{spec.cin}->"
+                f"{spec.out_h}x{spec.out_w}x{spec.cout}",
+                progs["fwd"].n_offloads, ns_fwd.n_offloads,
+                progs["dw"].n_offloads, progs["dx"].n_offloads,
+                train_ratio, match,
+            ))
+    mean_ratio = sum(ratios) / len(ratios)
+    return rows, {
+        "n_layers": len(rows),
+        "all_counts_match_closed_form": all_match,
+        "mean_train_to_infer_cycle_ratio": mean_ratio,
+        "paper_assumes": 3.0,
+    }
+
+
 ALL = {
     "offload_overhead": offload_overhead,
     "queue_depth_sweep": queue_depth_sweep,
     "overlap_sweep": overlap_sweep,
     "model_crosscheck": model_crosscheck,
+    "lowering_crosscheck": lowering_crosscheck,
+}
+
+# One small workload per benchmark — the CI smoke lane's model/simulator
+# drift check (seconds, not minutes). model_crosscheck is pure arithmetic,
+# so the full sweep stays in.
+SMOKE = {
+    "offload_overhead": lambda: offload_overhead(layers=TABLE2_LAYERS[3:]),
+    "model_crosscheck": model_crosscheck,
+    "lowering_crosscheck": lambda: lowering_crosscheck(networks=["googlenet"]),
+}
+
+# Acceptance gates: summary keys that must be truthy for the run (and the CI
+# bench-smoke job) to exit 0 — this is what actually catches drift between
+# the analytical model, the event-driven runtime, and the lowering pipeline.
+GATES = {
+    "offload_overhead": ("reproduced_5x",),
+    "overlap_sweep": ("all_overlap_efficiency_near_1",),
+    "model_crosscheck": ("agrees_within_10pct",),
+    "lowering_crosscheck": ("all_counts_match_closed_form",),
 }
 
 
@@ -159,7 +229,8 @@ def export_demo_trace(path="artifacts/offload_trace.json") -> str:
     import os
 
     os.makedirs(os.path.dirname(path), exist_ok=True)
-    cmd = ntx.matmul_command(512, 512, 512, 0, 0, 0)
+    prog = lower(MatmulSpec(512, 512, 512), "fwd")
+    cmd = prog.blocks[0].template
     sched = scheduler.MultiClusterScheduler(n_clusters=4)
     buckets = sched.distribute(cmd)
     flat_bytes = [512 * 512 * 4 / 4 / len(b) for b in buckets for _ in b]
@@ -169,10 +240,18 @@ def export_demo_trace(path="artifacts/offload_trace.json") -> str:
 
 
 def main() -> None:
+    import argparse
     import time
 
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one small workload per benchmark (CI drift check)")
+    args = ap.parse_args()
+    suite = SMOKE if args.smoke else ALL
+
     details = []
-    for name, fn in ALL.items():
+    failed = []
+    for name, fn in suite.items():
         t0 = time.perf_counter()
         rows, summary = fn()
         us = (time.perf_counter() - t0) * 1e6
@@ -182,6 +261,9 @@ def main() -> None:
         )
         print(f"{name},{us:.0f},{derived}")
         details.append((name, rows, summary))
+        failed += [
+            f"{name}:{key}" for key in GATES.get(name, ()) if not summary.get(key)
+        ]
     print()
     for name, rows, summary in details:
         print(f"== {name} ==")
@@ -190,6 +272,8 @@ def main() -> None:
         for k, v in summary.items():
             print(f"   -> {k}: {v}")
     print("trace:", export_demo_trace())
+    if failed:
+        raise SystemExit(f"acceptance gates failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

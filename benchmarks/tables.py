@@ -50,27 +50,38 @@ def table1_precision():
 
 
 def table2_offloads():
+    """Table 2 derived from *lowered programs* (repro.lower), with the
+    closed-form arithmetic (ntx.offload_count) asserted to agree — the two
+    are independent derivations of the same driver-loop split."""
     from repro.core import ntx
+    from repro.lower import NS_DESIGN, NTX_DESIGN, lower
 
-    convs = [
-        ("7x7x3 -> 112x112x64", ntx.ConvShape(7, 7, 3, 112, 112, 64)),
-        ("3x3x64 -> 56x56x192", ntx.ConvShape(3, 3, 64, 56, 56, 192)),
-        ("1x1x256 -> 28x28x64", ntx.ConvShape(1, 1, 256, 28, 28, 64)),
-        ("1x1x512 -> 14x14x192", ntx.ConvShape(1, 1, 512, 14, 14, 192)),
-    ]
+    from benchmarks.workloads import TABLE2_LAYERS
+
     paper = [(802816, 64, 147, 1843968), (602112, 192, 576, 1806336),
              (50176, 64, 256, 200704), (37632, 192, 512, 100352)]
     rows, exact = [], True
-    for (label, c), (ns_o, ntx_o, ns_c, ntx_c) in zip(convs, paper):
+    for (label, spec), (ns_o, ntx_o, ns_c, ntx_c) in zip(TABLE2_LAYERS, paper):
+        ns_prog = lower(spec, "fwd", design=NS_DESIGN)
+        ntx_prog = lower(spec, "fwd", design=NTX_DESIGN)
         got = (
-            ntx.offload_count(c, **ntx.NS_LOOPS),
-            ntx.offload_count(c, **ntx.NTX_LOOPS),
-            ntx.busy_cycles_per_offload(c, **ntx.NS_LOOPS),
-            ntx.busy_cycles_per_offload(c, **ntx.NTX_LOOPS),
+            ns_prog.n_offloads,
+            ntx_prog.n_offloads,
+            ns_prog.busy_cycles_per_offload,
+            ntx_prog.busy_cycles_per_offload,
         )
+        shape = spec.conv_shape()
+        closed = (
+            ntx.offload_count(shape, **ntx.NS_LOOPS),
+            ntx.offload_count(shape, **ntx.NTX_LOOPS),
+            ntx.busy_cycles_per_offload(shape, **ntx.NS_LOOPS),
+            ntx.busy_cycles_per_offload(shape, **ntx.NTX_LOOPS),
+        )
+        assert got == closed, f"{label}: program {got} != closed form {closed}"
         exact &= got == (ns_o, ntx_o, ns_c, ntx_c)
         rows.append((label,) + got)
     return rows, {"matches_paper_exactly": exact,
+                  "program_matches_closed_form": True,
                   "offload_reduction_7x7": 802816 / 64}
 
 

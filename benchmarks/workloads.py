@@ -7,11 +7,20 @@ tile-streaming model of §3.1: weights + activations streamed once per pass,
 with a re-read factor kappa for halo overlap and weight re-streaming across
 output tiles, calibrated once on the paper's GoogLeNet numbers (Table 4) and
 applied to all CNNs.
+
+``CONV_LAYERS`` gives each CNN's representative conv layers as
+:class:`repro.lower.Conv2dSpec`s, so the benchmarks derive offload/cycle
+counts from *lowered programs* (``lower(spec, pass)``) rather than from the
+closed-form Table 2 arithmetic; ``benchmarks/offload_bench.py``'s
+``lowering_crosscheck`` asserts the two agree for every layer below at both
+design points.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+
+from repro.lower import Conv2dSpec
 
 
 @dataclass(frozen=True)
@@ -50,6 +59,58 @@ WORKLOADS = {
 }
 
 CNNS = ["alexnet", "googlenet", "inception_v3", "resnet34", "resnet50", "resnet152"]
+
+# Representative conv layers per CNN (from the networks' published
+# architectures), as lowerable specs. The googlenet entries are exactly the
+# paper's Table 2 rows (stem + inception 1x1s), with the input extents that
+# produce the quoted output shapes.
+CONV_LAYERS: dict[str, list[Conv2dSpec]] = {
+    "alexnet": [
+        Conv2dSpec(227, 227, 3, 11, 11, 96, stride=4),      # conv1 -> 55x55x96
+        Conv2dSpec(27, 27, 96, 5, 5, 256, padding=2),       # conv2 -> 27x27x256
+        Conv2dSpec(13, 13, 256, 3, 3, 384, padding=1),      # conv3
+        Conv2dSpec(13, 13, 384, 3, 3, 256, padding=1),      # conv5
+    ],
+    "googlenet": [
+        Conv2dSpec(224, 224, 3, 7, 7, 64, stride=2, padding=3),   # -> 112x112x64
+        Conv2dSpec(56, 56, 64, 3, 3, 192, padding=1),             # -> 56x56x192
+        Conv2dSpec(28, 28, 256, 1, 1, 64),                        # -> 28x28x64
+        Conv2dSpec(14, 14, 512, 1, 1, 192),                       # -> 14x14x192
+    ],
+    "inception_v3": [
+        Conv2dSpec(299, 299, 3, 3, 3, 32, stride=2),        # stem -> 149x149x32
+        Conv2dSpec(149, 149, 32, 3, 3, 32),                 # -> 147x147x32
+        Conv2dSpec(35, 35, 192, 1, 1, 64),                  # inception 1x1
+        Conv2dSpec(17, 17, 768, 1, 1, 192),                 # reduction 1x1
+    ],
+    "resnet34": [
+        Conv2dSpec(224, 224, 3, 7, 7, 64, stride=2, padding=3),
+        Conv2dSpec(56, 56, 64, 3, 3, 64, padding=1),
+        Conv2dSpec(28, 28, 128, 3, 3, 128, padding=1),
+        Conv2dSpec(7, 7, 512, 3, 3, 512, padding=1),
+    ],
+    "resnet50": [
+        Conv2dSpec(224, 224, 3, 7, 7, 64, stride=2, padding=3),
+        Conv2dSpec(56, 56, 256, 1, 1, 64),                  # bottleneck in
+        Conv2dSpec(56, 56, 64, 3, 3, 64, padding=1),        # bottleneck mid
+        Conv2dSpec(56, 56, 64, 1, 1, 256),                  # bottleneck out
+    ],
+    "resnet152": [
+        Conv2dSpec(224, 224, 3, 7, 7, 64, stride=2, padding=3),
+        Conv2dSpec(28, 28, 512, 1, 1, 128),
+        Conv2dSpec(28, 28, 128, 3, 3, 128, padding=1),
+        Conv2dSpec(14, 14, 256, 1, 1, 1024),
+    ],
+}
+
+# The paper's Table 2 GoogLeNet layers (label, spec) — the canonical rows
+# every offload benchmark and test crosschecks against offload_count().
+TABLE2_LAYERS: list[tuple[str, Conv2dSpec]] = [
+    ("7x7x3->112x112x64", CONV_LAYERS["googlenet"][0]),
+    ("3x3x64->56x56x192", CONV_LAYERS["googlenet"][1]),
+    ("1x1x256->28x28x64", CONV_LAYERS["googlenet"][2]),
+    ("1x1x512->14x14x192", CONV_LAYERS["googlenet"][3]),
+]
 
 # Paper Table 5 energy-efficiency values [Gflop/s/W] for comparison.
 PAPER_TABLE5 = {

@@ -4,6 +4,8 @@ The paper's contributions are exposed as composable subsystems:
 
 - :mod:`repro.core`      — wide accumulation, NTX offload descriptors, tiling,
                             strided-conv decomposition, systolic mesh collectives.
+- :mod:`repro.lower`     — the unified lowering pipeline: layer specs ->
+                            NtxProgram IR -> {reference, timing, Pallas} executors.
 - :mod:`repro.kernels`   — Pallas TPU kernels (ntx_matmul, flash_attention, ssd_scan,
                             conv2d) with jnp oracles.
 - :mod:`repro.models`    — the model zoo (dense/MoE/hybrid/SSM decoders) and

@@ -37,12 +37,25 @@ def _phase_slices(k: int, stride: int, phase: int) -> jnp.ndarray:
     return jnp.arange(phase, k, stride)
 
 
+def _dense_corr(dy: jnp.ndarray, w_ab: jnp.ndarray, pads: tuple[int, int]):
+    """Default dense stride-1 "full" correlation for one phase (lax conv)."""
+    ph, pw = pads
+    return lax.conv_general_dilated(
+        dy,
+        w_ab,
+        window_strides=(1, 1),
+        padding=[(ph, ph), (pw, pw)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
 def conv2d_input_grad_decomposed(
     dy: jnp.ndarray,
     w: jnp.ndarray,
     stride: int,
     x_hw: tuple[int, int],
     padding: int = 0,
+    conv_fn=_dense_corr,
 ) -> jnp.ndarray:
     """d(loss)/d(x) of :func:`conv2d`, as s*s interleaved *dense* convolutions.
 
@@ -51,6 +64,11 @@ def conv2d_input_grad_decomposed(
     (j+pad)%s) gives, per phase, a dense stride-1 correlation of ``dy`` with
     the *flipped* tap subset w[a::s, b::s] — a constant number of MACs per
     pixel, which is the property NTX needs (one command per phase).
+
+    ``conv_fn(dy, w_ab, (pad_h, pad_w))`` performs the per-phase dense
+    correlation; the default uses ``lax``, and the Pallas program executor
+    injects the streaming kernel here so the backward pass runs on the same
+    datapath as the forward (see :func:`repro.lower.executors.run_pallas`).
     """
     n, yh, yw, cout = dy.shape
     kh, kw, cin, _ = w.shape
@@ -72,13 +90,7 @@ def conv2d_input_grad_decomposed(
             w_ab = jnp.flip(w_ab, axis=(0, 1)).transpose(0, 1, 3, 2)  # (ta,tb,cout,cin)
 
             # Dense stride-1 "full" correlation: out[m] = sum_t dy[m-t]*w_sub[t].
-            out_full = lax.conv_general_dilated(
-                dy,
-                w_ab,
-                window_strides=(1, 1),
-                padding=[(ta - 1, ta - 1), (tb - 1, tb - 1)],
-                dimension_numbers=("NHWC", "HWIO", "NHWC"),
-            )  # (n, yh+ta-1, yw+tb-1, cin)
+            out_full = conv_fn(dy, w_ab, (ta - 1, tb - 1))  # (n, yh+ta-1, yw+tb-1, cin)
 
             # Input pixels of this phase: i = i0_a + s*q, q = 0..na-1.
             i0 = (a - padding) % s

@@ -106,7 +106,14 @@ def steps_to_strides(steps: Sequence[int], loops: Sequence[int]) -> list[int]:
     return strides
 
 
-def ntx_execute(cmd: NtxCommand, memory: np.ndarray, wide: bool = True) -> np.ndarray:
+def ntx_execute(
+    cmd: NtxCommand,
+    memory: np.ndarray,
+    wide: bool = True,
+    *,
+    vectorize: bool = True,
+    inplace: bool = False,
+) -> np.ndarray:
     """Reference interpreter: execute one offloaded command against ``memory``.
 
     ``memory`` is the TCDM: a flat fp32 numpy array; a copy with results written
@@ -114,8 +121,28 @@ def ntx_execute(cmd: NtxCommand, memory: np.ndarray, wide: bool = True) -> np.nd
     (fp64 carried internally, rounded at store — bit-accurate to two-float for
     the sizes we test); ``wide=False`` models a conventional fp32 FPU that
     rounds after every FMA.
+
+    ``vectorize=True`` routes affine-dense ``mac``/``copy``/``memset``
+    commands through a numpy fast path that is bit-identical to the loop
+    interpreter (same accumulation order, same rounding points) but orders of
+    magnitude faster; anything it cannot prove safe falls back to the loops.
+    ``inplace=True`` mutates ``memory`` (must be a flat fp32 array) instead of
+    copying — the program executors use this to avoid O(TCDM) per command.
     """
-    mem = np.array(memory, dtype=np.float32, copy=True)
+    if inplace:
+        mem = memory
+        if mem.dtype != np.float32 or mem.ndim != 1:
+            raise ValueError("inplace execution needs a flat float32 memory")
+    else:
+        mem = np.array(memory, dtype=np.float32, copy=True)
+    if vectorize and _execute_vectorized(cmd, mem, wide):
+        return mem
+    _execute_loops(cmd, mem, wide)
+    return mem
+
+
+def _execute_loops(cmd: NtxCommand, mem: np.ndarray, wide: bool) -> None:
+    """The cycle-faithful 5-deep loop nest (mutates ``mem``)."""
     acc_dtype = np.float64 if wide else np.float32
     acc = acc_dtype(cmd.init_value)
     arg_idx = 0
@@ -176,7 +203,114 @@ def ntx_execute(cmd: NtxCommand, memory: np.ndarray, wide: bool = True) -> np.nd
                         if wraps and cmd.agu_wr is not None:
                             out = np.float32(arg_idx) if cmd.opcode == "argmax" else np.float32(acc)
                             mem[cmd.agu_wr.address(idx)] = out
-    return mem
+
+
+# ---------------------------------------------------------------------------
+# Vectorized fast path (bit-identical to the loop interpreter)
+# ---------------------------------------------------------------------------
+
+
+def _agu_span(agu: Agu, loops: Sequence[int]) -> tuple[int, int]:
+    """(min, max) address the AGU can emit over the loop nest."""
+    lo = hi = agu.base
+    for n, s in zip(loops, agu.strides):
+        d = (n - 1) * s
+        if d < 0:
+            lo += d
+        else:
+            hi += d
+    return lo, hi
+
+
+def _agu_grid(agu: Agu, loops: Sequence[int]) -> np.ndarray:
+    """All addresses, shaped (n4, n3, n2, n1, n0) so C-order == issue order."""
+    addr = np.int64(agu.base)
+    for j, (n, s) in enumerate(zip(loops, agu.strides)):
+        shape = [1] * MAX_LOOPS
+        shape[MAX_LOOPS - 1 - j] = n
+        addr = addr + (np.arange(n, dtype=np.int64) * s).reshape(shape)
+    return np.broadcast_to(addr, tuple(reversed(loops)))
+
+
+def _spans_ok(cmd: NtxCommand, size: int, check_alias: bool = True) -> bool:
+    """All addresses in range and (for value-reading opcodes) the write span
+    disjoint from every read span — the loop interpreter interleaves reads
+    and writes, so gathering all reads up front is only safe without
+    aliasing. Out-of-range also covers negative addresses, where numpy's
+    wrap-around semantics require the sequential interpreter."""
+    agus = [a for a in (cmd.agu_rd0, cmd.agu_rd1, cmd.agu_wr) if a is not None]
+    spans = [_agu_span(a, cmd.loops) for a in agus]
+    if any(lo < 0 or hi >= size for lo, hi in spans):
+        return False
+    if check_alias and cmd.agu_wr is not None:
+        wlo, whi = _agu_span(cmd.agu_wr, cmd.loops)
+        for agu, (lo, hi) in zip(agus, spans):
+            if agu is cmd.agu_wr:
+                continue
+            if not (hi < wlo or whi < lo):
+                return False
+    return True
+
+
+def _execute_vectorized(cmd: NtxCommand, mem: np.ndarray, wide: bool) -> bool:
+    """Try the affine-dense fast path; return False to fall back to loops."""
+    if cmd.agu_wr is None:
+        return False
+    # memset ignores the read values, so read/write aliasing is harmless.
+    if not _spans_ok(cmd, mem.size, check_alias=cmd.opcode != "memset"):
+        return False
+
+    if cmd.opcode == "memset" and cmd.store_level == 0:
+        wa = _agu_grid(cmd.agu_wr, cmd.loops).ravel()
+        if np.unique(wa).size != wa.size:
+            return False  # colliding writes: sequential order matters
+        mem[wa] = np.float32(cmd.init_value)
+        return True
+
+    if cmd.opcode == "copy" and cmd.store_level == 0:
+        wa = _agu_grid(cmd.agu_wr, cmd.loops).ravel()
+        if np.unique(wa).size != wa.size:
+            return False
+        ra = _agu_grid(cmd.agu_rd0, cmd.loops).ravel()
+        mem[wa] = mem[ra]
+        return True
+
+    if cmd.opcode == "mac":
+        # One accumulation region per outer-loop combo: requires the init and
+        # store boundaries to coincide so regions are contiguous runs.
+        lvl = cmd.init_level
+        if cmd.store_level != lvl or not 1 <= lvl <= MAX_LOOPS:
+            return False
+        if cmd.agu_rd1 is None:
+            return False
+        red = math.prod(cmd.loops[:lvl])  # reduction length per region
+        outer = math.prod(cmd.loops[lvl:])  # number of regions
+        # Gathered reads, C-order == issue order; regions are the rows.
+        v0 = mem[_agu_grid(cmd.agu_rd0, cmd.loops).ravel()].reshape(outer, red)
+        v1 = mem[_agu_grid(cmd.agu_rd1, cmd.loops).ravel()].reshape(outer, red)
+        # Store address per region: inner loops at their final index. Pinning
+        # the inner loop bounds to 1 (their stride contribution is folded
+        # into the base) keeps the grid's ravel order == region issue order.
+        wr = cmd.agu_wr
+        base = wr.base + sum((cmd.loops[j] - 1) * wr.strides[j] for j in range(lvl))
+        wa = _agu_grid(Agu(base, wr.strides), (1,) * lvl + cmd.loops[lvl:]).ravel()
+        if np.unique(wa).size != wa.size:
+            return False
+        # Sequential accumulation per region, vectorized across regions —
+        # the same fp ops in the same order as the loop interpreter, so the
+        # result is bit-identical.
+        if wide:
+            acc = np.full(outer, cmd.init_value, np.float64)
+            v0 = v0.astype(np.float64)
+            v1 = v1.astype(np.float64)
+        else:
+            acc = np.full(outer, cmd.init_value, np.float32)
+        for r in range(red):
+            acc = acc + v0[:, r] * v1[:, r]
+        mem[wa] = acc.astype(np.float32)
+        return True
+
+    return False
 
 
 # ---------------------------------------------------------------------------
@@ -244,18 +378,13 @@ def matmul_command(
 ) -> NtxCommand:
     """Build the NtxCommand for a row-major (m,k)x(k,n)->(m,n) matmul.
 
-    Loop mapping (innermost first): L0=k (reduction), L1=n, L2=m.
-    AGU strides follow eq. (1) with element units.
+    .. deprecated:: Thin wrapper kept for compatibility — the lowering rule
+       lives in :func:`repro.lower.rules.matmul_template`; new code should
+       go through :func:`repro.lower.lower` on a ``MatmulSpec``.
     """
-    return NtxCommand(
-        loops=(k, n, m, 1, 1),
-        opcode="mac",
-        agu_rd0=Agu(a_base, (1, 0, k, 0, 0)),  # A[i2, i0]
-        agu_rd1=Agu(b_base, (n, 1, 0, 0, 0)),  # B[i0, i1]
-        agu_wr=Agu(c_base, (0, 1, n, 0, 0)),  # C[i2, i1]
-        init_level=1,  # new accumulation per (i1, i2) pixel
-        store_level=1,  # store once L0 completes
-    )
+    from repro.lower.rules import matmul_template
+
+    return matmul_template(m, n, k, a_base, b_base, c_base)
 
 
 def conv2d_command(
@@ -271,21 +400,16 @@ def conv2d_command(
 ) -> NtxCommand:
     """NtxCommand for a VALID 2-D convolution tile, NHWC x HWIO -> NHWC.
 
-    Loop mapping (innermost first): L0=cin, L1=kw, L2=kh (reduction);
-    L3=out_w, L4=out_h. One command covers a full output plane for one
-    output channel — the paper's "many output pixels per offload".
+    One command covers a full output plane for one output channel (HWI-
+    contiguous weights) — the paper's "many output pixels per offload".
+
+    .. deprecated:: Thin wrapper kept for compatibility — the lowering rule
+       lives in :func:`repro.lower.rules.conv2d_fwd_template` (``cout=1``);
+       new code should go through :func:`repro.lower.lower` on a
+       ``Conv2dSpec``, which also covers the dW/dX training passes.
     """
-    out_h, out_w = in_h - kh + 1, in_w - kw + 1
-    return NtxCommand(
-        loops=(cin, kw, kh, out_w, out_h),
-        opcode="mac",
-        # x[i4 + i2, i3 + i1, i0] with row stride in_w*cin
-        agu_rd0=Agu(x_base, (1, cin, in_w * cin, cin, in_w * cin)),
-        # w[i2, i1, i0] for a fixed cout (HWI contiguous)
-        agu_rd1=Agu(w_base, (1, cin, kw * cin, 0, 0)),
-        # y[i4, i3] with row stride out_w (single channel plane)
-        agu_wr=Agu(y_base, (0, 0, 0, 1, out_w)),
-        init_level=3,  # fresh accumulator per output pixel (loops 0..2 reduce)
-        store_level=3,  # store when the 3 reduction loops complete
-        init_value=0.0,
+    from repro.lower.rules import conv2d_fwd_template
+
+    return conv2d_fwd_template(
+        in_h, in_w, cin, kh, kw, 1, x_base, w_base, y_base, stride=1
     )

@@ -1,3 +1,25 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Public kernel entry points.
+
+Callers import ops from here (``from repro.kernels import matmul``) instead
+of reaching into the implementation modules: :mod:`repro.kernels.ops` owns
+the backend policy ("tpu" / "interpret" / "xla" / "auto") and
+:mod:`repro.kernels.streaming` the hand-rolled double-buffered variants that
+mirror the runtime's DMA model. :mod:`repro.kernels.ref` stays importable as
+a module — it is the oracle package for the test-suite, not a serving path.
+"""
+
+from repro.kernels.ops import attention, matmul, ssd
+from repro.kernels.streaming import (
+    streaming_conv2d,
+    streaming_matmul,
+    streaming_tiles,
+)
+
+__all__ = [
+    "attention",
+    "matmul",
+    "ssd",
+    "streaming_conv2d",
+    "streaming_matmul",
+    "streaming_tiles",
+]

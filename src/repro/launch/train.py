@@ -187,11 +187,13 @@ def offload_step_report(cfg: ModelConfig, seq: int, batch: int, *,
     MACs come from the analytic flop counts, DMA bytes from the HBM-traffic
     model at fp32 stream width (the near-memory tier streams wide); the
     cycle estimate runs the double-buffered runtime of
-    :mod:`repro.runtime.scheduler`. The queue-level block maps the step's
-    dominant GEMM onto per-cluster command streams and compares queued vs
-    synchronous offload — the §2.2 accounting for this exact model.
+    :mod:`repro.runtime.scheduler`. The per-layer block lowers the step's
+    GEMMs through :func:`repro.lower.lower` — forward plus both training
+    passes (dW, dX), the paper's whole-training-layer offload story — and
+    the queue-level block maps the dominant forward GEMM onto per-cluster
+    command streams to compare queued vs synchronous offload (§2.2).
     """
-    from repro.core import ntx as ntx_mod
+    from repro.lower import MatmulSpec, lower_layer
     from repro.models import flops
     from repro.runtime import scheduler as rt_sched
 
@@ -201,10 +203,26 @@ def offload_step_report(cfg: ModelConfig, seq: int, batch: int, *,
     est = rt_sched.simulate_workload(macs, dma_bytes, n_clusters=n_clusters,
                                      f_ntx=f_ntx)
 
-    # queue-level view of the dominant GEMM: (tokens x d_ff x d_model)
+    # per-layer fwd+bwd command accounting from the unified lowering
     tokens = seq * batch
     d_ff = cfg.d_ff or getattr(cfg, "moe_d_ff", 0) or 4 * cfg.d_model
-    gemm = ntx_mod.matmul_command(tokens, d_ff, cfg.d_model, 0, 0, 0)
+    layer_specs = {
+        "attn_qkvo": MatmulSpec(tokens, 4 * cfg.d_model, cfg.d_model),
+        "ffn_in": MatmulSpec(tokens, d_ff, cfg.d_model),
+        "ffn_out": MatmulSpec(tokens, cfg.d_model, d_ff),
+    }
+    layers = {}
+    layer_progs = {}
+    for lname, spec in layer_specs.items():
+        progs = layer_progs[lname] = lower_layer(spec)
+        layers[lname] = {
+            "offloads": {p: pr.n_offloads for p, pr in progs.items()},
+            "busy_cycles": {p: pr.busy_cycles for p, pr in progs.items()},
+            "fwd_bwd_offloads": sum(pr.n_offloads for pr in progs.values()),
+        }
+
+    # queue-level view of the dominant GEMM: (tokens x d_ff x d_model)
+    gemm = layer_progs["ffn_in"]["fwd"].blocks[0].template
     # enough tiles that every engine's queue can actually fill to queue_depth
     parts = rt_sched.partition_command(
         gemm, n_clusters * rt_sched.ENGINES_PER_CLUSTER * queue_depth
@@ -230,6 +248,7 @@ def offload_step_report(cfg: ModelConfig, seq: int, batch: int, *,
         "cycles_per_step": est.cycles,
         "step_time_s": est.time,
         "overlap_efficiency": est.overlap_efficiency,
+        "layers": layers,
         "gemm_offloads": queued.summary()["n_commands"],
         "gemm_cycles_queued": queued.total_cycles,
         "gemm_cycles_sync": synced.total_cycles,
@@ -359,7 +378,15 @@ def _cli():
                                       queue_depth=args.queue_depth)
         print("offload step accounting (modeled NTX runtime):")
         for key, v in offload.items():
-            print(f"  {key}: {v:.4g}" if isinstance(v, float) else f"  {key}: {v}")
+            if key == "layers":
+                print("  per-layer fwd+bwd offloads (lowered programs):")
+                for lname, info in v.items():
+                    offs = info["offloads"]
+                    print(f"    {lname}: fwd={offs['fwd']} dw={offs['dw']} "
+                          f"dx={offs['dx']} total={info['fwd_bwd_offloads']}")
+            else:
+                print(f"  {key}: {v:.4g}" if isinstance(v, float)
+                      else f"  {key}: {v}")
 
     injector = FailureInjector({args.crash_at: "crash"} if args.crash_at else {})
     t0 = time.time()

@@ -1,0 +1,51 @@
+"""The unified NTX lowering pipeline (layer spec -> NtxProgram -> backends).
+
+    spec = Conv2dSpec(in_h=16, in_w=16, cin=8, kh=3, kw=3, cout=4)
+    prog = lower(spec, "dx")                   # command-level §3.2 backward
+    outs = run_reference(prog, {"dy": dy, "w": w})   # numpy ground truth
+    res  = run_timing(prog, n_clusters=4)      # event-driven cycle estimate
+    outs = run_pallas(prog, {"dy": dy, "w": w})      # Pallas kernels
+
+One lowering rule per layer type serves the interpreter, the timing model,
+and the TPU backend — see docs/architecture.md ("The lowering pipeline").
+"""
+
+from repro.lower.executors import run_pallas, run_reference, run_timing
+from repro.lower.ir import (
+    ELEM_BYTES,
+    CommandBlock,
+    DesignPoint,
+    NS_DESIGN,
+    NTX_DESIGN,
+    NtxProgram,
+    TensorRegion,
+)
+from repro.lower.rules import (
+    Conv2dSpec,
+    MatmulSpec,
+    MaxPool2dSpec,
+    PASSES,
+    ReluSpec,
+    lower,
+    lower_layer,
+)
+
+__all__ = [
+    "ELEM_BYTES",
+    "CommandBlock",
+    "Conv2dSpec",
+    "DesignPoint",
+    "MatmulSpec",
+    "MaxPool2dSpec",
+    "NS_DESIGN",
+    "NTX_DESIGN",
+    "NtxProgram",
+    "PASSES",
+    "ReluSpec",
+    "TensorRegion",
+    "lower",
+    "lower_layer",
+    "run_pallas",
+    "run_reference",
+    "run_timing",
+]

@@ -1,0 +1,201 @@
+"""Three interchangeable executors over one :class:`NtxProgram`.
+
+  * :func:`run_reference` — the behavioural model: place the inputs in a flat
+    numpy TCDM, run every command through
+    :func:`repro.core.ntx.ntx_execute` (vectorized fast path by default),
+    read the outputs back. Ground truth for the other two.
+  * :func:`run_timing` — the performance model: feed the exact command
+    stream + per-command DMA descriptors to
+    :class:`repro.runtime.scheduler.MultiClusterScheduler` and return its
+    event-driven :class:`ScheduleResult` (queues, back-pressure,
+    double-buffered DMA, chrome-trace timeline).
+  * :func:`run_pallas` — the production backend: route the lowered layer to
+    the Pallas kernels (:mod:`repro.kernels.streaming`,
+    :mod:`repro.kernels.ops`), so "one offload" becomes "one pallas_call".
+
+All three consume the same lowered program — a new layer type needs one
+lowering rule, not three backend implementations.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.ntx import ntx_execute
+from repro.lower.ir import NtxProgram
+from repro.lower.rules import Conv2dSpec, MatmulSpec, MaxPool2dSpec, ReluSpec
+
+# Keep timing runs bounded: materializing an NS-design program for a big conv
+# would enqueue ~1e6 commands; refuse rather than hang.
+MAX_TIMED_COMMANDS = 250_000
+
+
+# ---------------------------------------------------------------------------
+# 1. Reference executor (numpy TCDM + the ntx_execute interpreter)
+# ---------------------------------------------------------------------------
+
+
+def run_reference(
+    program: NtxProgram,
+    inputs: dict[str, np.ndarray],
+    *,
+    wide: bool = True,
+    vectorize: bool = True,
+) -> dict[str, np.ndarray]:
+    """Execute ``program`` against a flat TCDM; return its output regions.
+
+    ``inputs`` maps region names (kind "input"/"param") to arrays of the
+    region's shape. Scratch regions are staged by the program's own
+    memset/copy commands — no out-of-band padding happens here.
+    """
+    mem = np.zeros(program.memory_words, np.float32)
+    needed = {r.name for r in program.regions.values() if r.kind in ("input", "param")}
+    missing = needed - set(inputs)
+    if missing:
+        raise ValueError(f"missing input regions: {sorted(missing)}")
+    for name, arr in inputs.items():
+        r = program.region(name)
+        a = np.asarray(arr, np.float32)
+        if a.shape != r.shape:
+            raise ValueError(f"region {name!r} expects shape {r.shape}, got {a.shape}")
+        mem[r.base : r.end] = a.ravel()
+    for cmd in program.commands():
+        ntx_execute(cmd, mem, wide=wide, vectorize=vectorize, inplace=True)
+    return {
+        r.name: mem[r.base : r.end].reshape(r.shape).copy()
+        for r in program.regions_of_kind("output")
+    }
+
+
+# ---------------------------------------------------------------------------
+# 2. Timing executor (event-driven queue/DMA runtime)
+# ---------------------------------------------------------------------------
+
+
+def run_timing(
+    program: NtxProgram,
+    *,
+    n_clusters: int = 1,
+    cluster=None,
+    f_ntx: float = 1.5e9,
+    max_commands: int = MAX_TIMED_COMMANDS,
+):
+    """Simulate ``program`` on the offload runtime; returns a ScheduleResult.
+
+    The command stream and the per-command input-DMA byte counts both come
+    straight from the lowered program, so the timing model sees exactly what
+    the reference interpreter executes.
+    """
+    from repro.runtime import scheduler as rt_sched
+
+    n = program.n_commands
+    if n > max_commands:
+        raise ValueError(
+            f"program has {n} commands (> {max_commands}); partition or raise "
+            "max_commands explicitly"
+        )
+    sched = rt_sched.MultiClusterScheduler(
+        n_clusters=n_clusters, cluster=cluster, f_ntx=f_ntx
+    )
+    return sched.schedule_program(program)
+
+
+# ---------------------------------------------------------------------------
+# 3. Pallas executor (kernels/streaming.py + kernels/ops.py)
+# ---------------------------------------------------------------------------
+
+
+def run_pallas(
+    program: NtxProgram,
+    inputs: dict[str, np.ndarray],
+    *,
+    interpret: bool | None = None,
+) -> dict[str, np.ndarray]:
+    """Execute the lowered layer through the Pallas kernels.
+
+    ``interpret=None`` picks the Pallas interpreter off-TPU (CPU tests) and
+    the compiled kernel on TPU. Output dict mirrors :func:`run_reference`.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import conv_decomp
+    from repro.kernels import streaming
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    spec = program.meta.get("spec")
+    pass_ = program.meta.get("pass", "fwd")
+    j = {k: jnp.asarray(np.asarray(v, np.float32)) for k, v in inputs.items()}
+
+    if isinstance(spec, MatmulSpec):
+        if pass_ == "fwd":
+            out = streaming.streaming_matmul(j["a"], j["b"], interpret=interpret)
+            return {"c": np.asarray(out)}
+        if pass_ == "dw":
+            out = streaming.streaming_matmul(j["a"].T, j["dy"], interpret=interpret)
+            return {"dw": np.asarray(out)}
+        if pass_ == "dx":
+            out = streaming.streaming_matmul(j["dy"], j["b"].T, interpret=interpret)
+            return {"dx": np.asarray(out)}
+
+    if isinstance(spec, Conv2dSpec):
+        s, p = spec.stride, spec.padding
+        if pass_ == "fwd":
+            y = streaming.streaming_conv2d(
+                j["x"][None], j["w"], stride=s, padding=p, interpret=interpret
+            )
+            return {"y": np.asarray(y[0])}
+        if pass_ == "dw":
+            # dW = cols(x)^T @ dy: the same im2col the forward kernel streams,
+            # with the (oh*ow) output pixels as the contraction dim.
+            x = j["x"][None]
+            if p:
+                x = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
+            oh, ow = spec.out_h, spec.out_w
+            cols = jnp.concatenate(
+                [
+                    x[:, dh : dh + oh * s : s, dw : dw + ow * s : s, :]
+                    for dh in range(spec.kh)
+                    for dw in range(spec.kw)
+                ],
+                axis=-1,
+            ).reshape(oh * ow, spec.kh * spec.kw * spec.cin)
+            dyf = j["dy"].reshape(oh * ow, spec.cout)
+            dw_flat = streaming.streaming_matmul(cols.T, dyf, interpret=interpret)
+            return {
+                "dw": np.asarray(
+                    dw_flat.reshape(spec.kh, spec.kw, spec.cin, spec.cout)
+                )
+            }
+        if pass_ == "dx":
+            # The §3.2 phase decomposition with the dense per-phase conv
+            # routed through the streaming Pallas kernel.
+            def conv_fn(dy, w_ab, pads):
+                ph, pw = pads
+                dyp = jnp.pad(dy, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+                return streaming.streaming_conv2d(
+                    dyp, w_ab, stride=1, padding=0, interpret=interpret
+                )
+
+            dx = conv_decomp.conv2d_input_grad_decomposed(
+                j["dy"][None], j["w"], s, (spec.in_h, spec.in_w), p,
+                conv_fn=conv_fn,
+            )
+            return {"dx": np.asarray(dx[0])}
+
+    if isinstance(spec, MaxPool2dSpec):
+        x = j["x"]
+        w, s = spec.window, spec.stride
+        y = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (w, w, 1), (s, s, 1), "VALID"
+        )
+        return {"y": np.asarray(y)}
+
+    if isinstance(spec, ReluSpec):
+        return {"y": np.asarray(jnp.maximum(j["x"], 0.0))}
+
+    raise TypeError(
+        f"no Pallas route for spec {type(spec).__name__} pass {pass_!r}"
+    )

@@ -1,0 +1,251 @@
+"""The NtxProgram IR: what a whole layer pass looks like to the hardware.
+
+The paper's Table 2 observation is that one training-layer pass is a *driver
+loop around one command template*: the RISC-V core re-issues the same 5-deep
+loop nest with rebased AGU base addresses. This module keeps that structure
+first-class instead of materializing every command eagerly:
+
+  * :class:`TensorRegion` — a named, shaped window of the flat TCDM address
+    space (inputs, parameters, outputs, staging scratch).
+  * :class:`CommandBlock` — one command *template* plus the driver-side
+    replication loops (``reps``) and the per-level AGU base steps. A block
+    with ``reps=(64,)`` is Table 2's "64 offloads" row; iterating
+    :meth:`CommandBlock.commands` reproduces the exact command stream the
+    driver would issue. Offload/cycle counts are O(1) properties — no
+    materialization needed for the 802 816-command NS rows.
+  * :class:`NtxProgram` — ordered blocks + regions + the layer spec they were
+    lowered from. This is the single representation the reference
+    interpreter, the event-driven timing model, and the Pallas backend all
+    consume (see :mod:`repro.lower.executors`).
+
+Staging (zero-padding, halo blits) is expressed *in-band* as ``memset`` /
+``copy`` command blocks, so executing a program needs no out-of-band numpy
+padding logic: the DMA/offload stream is the whole story.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Iterator
+
+from repro.core.ntx import MAX_LOOPS, Agu, NtxCommand
+
+ELEM_BYTES = 4  # the NTX datapath streams fp32 words
+
+# The two design points the paper compares (Table 2). ``hw_loops`` is the
+# depth of the hardware loop nest, ``n_agus`` the address generators, and
+# ``autonomous_writeback`` whether a write AGU exists — without one (NS) at
+# most the reduction dims can be offloaded: every output pixel is its own
+# command (§2.5(iii)).
+
+
+@dataclass(frozen=True)
+class DesignPoint:
+    name: str
+    hw_loops: int
+    n_agus: int
+    autonomous_writeback: bool
+
+
+NS_DESIGN = DesignPoint("ns", hw_loops=3, n_agus=2, autonomous_writeback=False)
+NTX_DESIGN = DesignPoint("ntx", hw_loops=5, n_agus=3, autonomous_writeback=True)
+
+
+@dataclass(frozen=True)
+class TensorRegion:
+    """A named window of the flat TCDM address space (element units)."""
+
+    name: str
+    base: int
+    shape: tuple[int, ...]
+    kind: str  # "input" | "param" | "output" | "scratch"
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+    @property
+    def end(self) -> int:
+        return self.base + self.size
+
+    @property
+    def bytes(self) -> int:
+        return self.size * ELEM_BYTES
+
+
+def _rebased(agu: Agu | None, offset: int) -> Agu | None:
+    if agu is None or offset == 0:
+        return agu
+    return Agu(agu.base + offset, agu.strides)
+
+
+@dataclass(frozen=True)
+class CommandBlock:
+    """One command template + the driver loop that re-issues it.
+
+    ``reps`` are the driver-side loop bounds (innermost first, may be empty);
+    ``rd0_step``/``rd1_step``/``wr_step`` give, per rep level, how far each
+    AGU's base moves between consecutive issues — exactly the software loop
+    of Table 2 made explicit.
+    """
+
+    template: NtxCommand
+    reps: tuple[int, ...] = ()
+    rd0_step: tuple[int, ...] = ()
+    rd1_step: tuple[int, ...] = ()
+    wr_step: tuple[int, ...] = ()
+    tag: str = ""
+    reads: tuple[str, ...] = ()  # region names streamed in
+    writes: tuple[str, ...] = ()  # region names streamed out
+    dma_bytes_in: float = 0.0  # per command (block read traffic / n_commands)
+    dma_bytes_out: float = 0.0
+    tile: Any = None  # tiling-plan metadata (core/tiling.py), if any
+
+    def __post_init__(self):
+        for steps in (self.rd0_step, self.rd1_step, self.wr_step):
+            if len(steps) != len(self.reps):
+                raise ValueError(
+                    f"AGU step list length {len(steps)} != reps {len(self.reps)}"
+                )
+
+    @property
+    def n_commands(self) -> int:
+        return math.prod(self.reps) if self.reps else 1
+
+    @property
+    def busy_cycles_per_command(self) -> int:
+        return self.template.busy_cycles
+
+    @property
+    def busy_cycles(self) -> int:
+        return self.n_commands * self.template.busy_cycles
+
+    @property
+    def is_staging(self) -> bool:
+        return self.template.opcode in ("copy", "memset")
+
+    def commands(self) -> Iterator[NtxCommand]:
+        """The concrete command stream the driver issues, in program order."""
+        t = self.template
+        if not self.reps:
+            yield t
+            return
+        idx = [0] * len(self.reps)
+        n = self.n_commands
+        for _ in range(n):
+            d0 = sum(i * s for i, s in zip(idx, self.rd0_step))
+            d1 = sum(i * s for i, s in zip(idx, self.rd1_step))
+            dw = sum(i * s for i, s in zip(idx, self.wr_step))
+            yield NtxCommand(
+                loops=t.loops,
+                opcode=t.opcode,
+                agu_rd0=_rebased(t.agu_rd0, d0),
+                agu_rd1=_rebased(t.agu_rd1, d1),
+                agu_wr=_rebased(t.agu_wr, dw),
+                init_level=t.init_level,
+                store_level=t.store_level,
+                init_value=t.init_value,
+            )
+            for lvl in range(len(self.reps)):  # odometer, innermost first
+                idx[lvl] += 1
+                if idx[lvl] < self.reps[lvl]:
+                    break
+                idx[lvl] = 0
+
+
+@dataclass
+class NtxProgram:
+    """An ordered command stream + its memory map: one lowered layer pass."""
+
+    name: str
+    blocks: list[CommandBlock]
+    regions: dict[str, TensorRegion]
+    design: DesignPoint = NTX_DESIGN
+    meta: dict[str, Any] = field(default_factory=dict)
+
+    # -- memory map ---------------------------------------------------------
+
+    @property
+    def memory_words(self) -> int:
+        return max((r.end for r in self.regions.values()), default=0)
+
+    def region(self, name: str) -> TensorRegion:
+        return self.regions[name]
+
+    def regions_of_kind(self, kind: str) -> list[TensorRegion]:
+        return [r for r in self.regions.values() if r.kind == kind]
+
+    # -- offload accounting (the Table 2 view) ------------------------------
+
+    @property
+    def n_offloads(self) -> int:
+        """Compute commands the driver issues (staging blits excluded)."""
+        return sum(b.n_commands for b in self.blocks if not b.is_staging)
+
+    @property
+    def n_staging_offloads(self) -> int:
+        return sum(b.n_commands for b in self.blocks if b.is_staging)
+
+    @property
+    def n_commands(self) -> int:
+        return sum(b.n_commands for b in self.blocks)
+
+    @property
+    def busy_cycles(self) -> int:
+        """Total datapath cycles (one loop iteration per cycle, §2.3)."""
+        return sum(b.busy_cycles for b in self.blocks)
+
+    @property
+    def busy_cycles_per_offload(self) -> int:
+        """Cycles of the dominant (first non-staging) command template."""
+        for b in self.blocks:
+            if not b.is_staging:
+                return b.busy_cycles_per_command
+        return 0
+
+    @property
+    def dma_bytes(self) -> float:
+        return sum(
+            (b.dma_bytes_in + b.dma_bytes_out) * b.n_commands for b in self.blocks
+        )
+
+    # -- command stream -----------------------------------------------------
+
+    def commands(self) -> Iterator[NtxCommand]:
+        for b in self.blocks:
+            yield from b.commands()
+
+    def command_dma_bytes(self) -> Iterator[float]:
+        """Per-command input DMA bytes, aligned with :meth:`commands`."""
+        for b in self.blocks:
+            for _ in range(b.n_commands):
+                yield b.dma_bytes_in
+
+    def summary(self) -> dict[str, Any]:
+        return {
+            "name": self.name,
+            "design": self.design.name,
+            "n_offloads": self.n_offloads,
+            "n_staging_offloads": self.n_staging_offloads,
+            "busy_cycles": self.busy_cycles,
+            "busy_cycles_per_offload": self.busy_cycles_per_offload,
+            "dma_bytes": self.dma_bytes,
+            "memory_words": self.memory_words,
+        }
+
+
+class RegionAllocator:
+    """Bump allocator laying regions out back to back in TCDM."""
+
+    def __init__(self):
+        self.regions: dict[str, TensorRegion] = {}
+        self._top = 0
+
+    def alloc(self, name: str, shape: tuple[int, ...], kind: str) -> TensorRegion:
+        if name in self.regions:
+            raise ValueError(f"region {name!r} already allocated")
+        r = TensorRegion(name, self._top, tuple(shape), kind)
+        self.regions[name] = r
+        self._top = r.end
+        return r

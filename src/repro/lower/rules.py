@@ -1,0 +1,644 @@
+"""Lowering rules: layer specs -> :class:`~repro.lower.ir.NtxProgram`.
+
+One rule per (layer type, pass). Every rule goes through the same loop-nest
+builder: order the iteration dims innermost-first as
+
+    reduction dims  ++  output dims                       (paper §2.5)
+
+give each AGU its per-dim element stride (eq. 1), and split the nest at the
+design point's hardware-loop budget — the inner dims become the command
+template, the outer dims become the driver's replication loops (Table 2's
+offload counts fall out of this split; :func:`repro.core.ntx.offload_count`
+is the closed form of the same arithmetic and the benchmarks assert the two
+agree). A design without an autonomous write-back AGU (NS) can offload at
+most the reduction dims: every output pixel is its own command.
+
+The conv backward rules are the paper's §3.2 decomposition realized at the
+command level: the weight gradient is one dense correlation block; the input
+gradient is s*s phase blocks, each a dense correlation of a zero-padded
+``dy`` with the (spatially flipped) filter-tap subset of that phase — the
+flip and the subset selection are pure AGU striding (negative strides), and
+the zero padding is staged in-band with ``memset``/``copy`` commands.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.core.ntx import MAX_LOOPS, Agu, NtxCommand
+from repro.core.tiling import plan_matmul_tiles, plan_stencil_tiles
+from repro.lower.ir import (
+    ELEM_BYTES,
+    CommandBlock,
+    DesignPoint,
+    NTX_DESIGN,
+    NtxProgram,
+    RegionAllocator,
+    TensorRegion,
+)
+
+PASSES = ("fwd", "dw", "dx")
+
+
+# ---------------------------------------------------------------------------
+# Layer specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MatmulSpec:
+    """C[m,n] = A[m,k] @ B[k,n] (row major). dw = A^T dY, dx = dY B^T."""
+
+    m: int
+    n: int
+    k: int
+
+
+@dataclass(frozen=True)
+class Conv2dSpec:
+    """One conv layer per image: NHWC x HWIO -> NHWC with N=1 (Table 2)."""
+
+    in_h: int
+    in_w: int
+    cin: int
+    kh: int
+    kw: int
+    cout: int
+    stride: int = 1
+    padding: int = 0
+
+    @property
+    def out_h(self) -> int:
+        return (self.in_h + 2 * self.padding - self.kh) // self.stride + 1
+
+    @property
+    def out_w(self) -> int:
+        return (self.in_w + 2 * self.padding - self.kw) // self.stride + 1
+
+    def conv_shape(self):
+        """The paper's Table 2 view of this layer (offload_count input)."""
+        from repro.core import ntx
+
+        return ntx.ConvShape(
+            kw=self.kw, kh=self.kh, cin=self.cin,
+            out_w=self.out_w, out_h=self.out_h, cout=self.cout,
+        )
+
+
+@dataclass(frozen=True)
+class MaxPool2dSpec:
+    in_h: int
+    in_w: int
+    c: int
+    window: int = 2
+    stride: int = 2
+
+    @property
+    def out_h(self) -> int:
+        return (self.in_h - self.window) // self.stride + 1
+
+    @property
+    def out_w(self) -> int:
+        return (self.in_w - self.window) // self.stride + 1
+
+
+@dataclass(frozen=True)
+class ReluSpec:
+    shape: tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+# ---------------------------------------------------------------------------
+# The shared loop-nest splitter
+# ---------------------------------------------------------------------------
+
+
+def _pad5(xs: tuple[int, ...], fill: int) -> tuple[int, ...]:
+    return tuple(xs) + (fill,) * (MAX_LOOPS - len(xs))
+
+
+def _nest_block(
+    sizes: tuple[int, ...],
+    n_red: int,
+    rd0: tuple[int, tuple[int, ...]],
+    rd1: tuple[int, tuple[int, ...]] | None,
+    wr: tuple[int, tuple[int, ...]],
+    design: DesignPoint,
+    *,
+    opcode: str = "mac",
+    tag: str,
+    reads: tuple[TensorRegion, ...],
+    writes: tuple[TensorRegion, ...],
+    init_value: float = 0.0,
+    tile=None,
+) -> CommandBlock:
+    """Split an iteration nest at the design point's hardware-loop budget.
+
+    ``sizes`` is the full nest innermost-first (reduction dims leading);
+    ``rd0``/``rd1``/``wr`` are (base, per-dim element strides) over the same
+    ordering. Dims beyond the budget become driver replication loops.
+    """
+    usable = min(design.hw_loops, len(sizes))
+    if not design.autonomous_writeback:
+        usable = min(usable, n_red)
+    if usable < n_red:
+        raise NotImplementedError(
+            f"{tag}: {n_red} reduction dims exceed the {design.name} design's "
+            f"{usable} offloadable loops — the driver would have to accumulate"
+        )
+
+    def split(agu):
+        if agu is None:
+            return None, ()
+        base, strides = agu
+        hw = Agu(base, _pad5(tuple(strides[:usable]), 0))
+        return hw, tuple(strides[usable:])
+
+    a0, s0 = split(rd0)
+    a1, s1 = split(rd1)
+    aw, sw = split(wr)
+    template = NtxCommand(
+        loops=_pad5(tuple(sizes[:usable]), 1),
+        opcode=opcode,
+        agu_rd0=a0,
+        agu_rd1=a1,
+        agu_wr=aw,
+        init_level=n_red,
+        store_level=n_red,
+        init_value=init_value,
+    )
+    reps = tuple(sizes[usable:])
+    n_cmds = math.prod(reps) if reps else 1
+    bytes_in = sum(r.bytes for r in reads) / n_cmds
+    bytes_out = sum(r.bytes for r in writes) / n_cmds
+    return CommandBlock(
+        template=template,
+        reps=reps,
+        rd0_step=s0,
+        rd1_step=s1 if rd1 is not None else (0,) * len(reps),
+        wr_step=sw,
+        tag=tag,
+        reads=tuple(r.name for r in reads),
+        writes=tuple(r.name for r in writes),
+        dma_bytes_in=bytes_in,
+        dma_bytes_out=bytes_out,
+        tile=tile,
+    )
+
+
+# ---------------------------------------------------------------------------
+# In-band staging blits (zero padding as memset + copy commands)
+# ---------------------------------------------------------------------------
+
+
+def _memset_block(dst: TensorRegion, value: float = 0.0) -> CommandBlock:
+    return CommandBlock(
+        template=NtxCommand(
+            loops=(dst.size, 1, 1, 1, 1),
+            opcode="memset",
+            agu_rd0=Agu(dst.base, (0,) * MAX_LOOPS),
+            agu_wr=Agu(dst.base, _pad5((1,), 0)),
+            init_level=0,
+            store_level=0,
+            init_value=value,
+        ),
+        tag=f"memset:{dst.name}",
+        writes=(dst.name,),
+        dma_bytes_out=float(dst.bytes),
+    )
+
+
+def _copy_block(
+    src: TensorRegion,
+    dst: TensorRegion,
+    *,
+    rows: int,
+    row_elems: int,
+    src_row_stride: int,
+    dst_row_stride: int,
+    src_off: int = 0,
+    dst_off: int = 0,
+    tag: str = "",
+) -> CommandBlock:
+    return CommandBlock(
+        template=NtxCommand(
+            loops=(row_elems, rows, 1, 1, 1),
+            opcode="copy",
+            agu_rd0=Agu(src.base + src_off, _pad5((1, src_row_stride), 0)),
+            agu_wr=Agu(dst.base + dst_off, _pad5((1, dst_row_stride), 0)),
+            init_level=0,
+            store_level=0,
+        ),
+        tag=tag or f"copy:{src.name}->{dst.name}",
+        reads=(src.name,),
+        writes=(dst.name,),
+        dma_bytes_in=float(rows * row_elems * ELEM_BYTES),
+        dma_bytes_out=float(rows * row_elems * ELEM_BYTES),
+    )
+
+
+def _padded_plane(
+    alloc: RegionAllocator,
+    src: TensorRegion,
+    *,
+    h: int,
+    w: int,
+    c: int,
+    pad: int,
+    name: str,
+) -> tuple[TensorRegion, list[CommandBlock]]:
+    """Zero-padded copy of an (h, w, c) plane, staged with memset + copy."""
+    if pad == 0:
+        return src, []
+    hp, wp = h + 2 * pad, w + 2 * pad
+    dst = alloc.alloc(name, (hp, wp, c), "scratch")
+    blocks = [
+        _memset_block(dst),
+        _copy_block(
+            src,
+            dst,
+            rows=h,
+            row_elems=w * c,
+            src_row_stride=w * c,
+            dst_row_stride=wp * c,
+            dst_off=(pad * wp + pad) * c,
+        ),
+    ]
+    return dst, blocks
+
+
+# ---------------------------------------------------------------------------
+# Matmul rules (fwd / dw / dx)
+# ---------------------------------------------------------------------------
+
+
+def matmul_nest(
+    m: int, n: int, k: int, pass_: str, a_base: int, b_base: int, c_base: int
+):
+    """(sizes, n_red, rd0, rd1, wr) for one matmul pass at explicit bases.
+
+    ``a``/``b``/``c`` are the *roles* of the three operands for the pass:
+    fwd reads (A, B) writes C; dw reads (A, dY) writes dW; dx reads (dY, B)
+    writes dX. Transposes are pure AGU striding — no data movement.
+    """
+    if pass_ == "fwd":
+        # C[i2,i1] += A[i2,i0] * B[i0,i1];  dims (k, n, m)
+        return (
+            (k, n, m), 1,
+            (a_base, (1, 0, k)),
+            (b_base, (n, 1, 0)),
+            (c_base, (0, 1, n)),
+        )
+    if pass_ == "dw":
+        # dW[i2,i1] += A[i0,i2] * dY[i0,i1];  dims (m, n, k)
+        return (
+            (m, n, k), 1,
+            (a_base, (k, 0, 1)),
+            (b_base, (n, 1, 0)),
+            (c_base, (0, 1, n)),
+        )
+    if pass_ == "dx":
+        # dX[i2,i1] += dY[i2,i0] * B[i1,i0];  dims (n, k, m)
+        return (
+            (n, k, m), 1,
+            (a_base, (1, 0, n)),
+            (b_base, (1, n, 0)),
+            (c_base, (0, 1, k)),
+        )
+    raise ValueError(f"unknown matmul pass {pass_!r}; expected one of {PASSES}")
+
+
+def matmul_template(
+    m: int, n: int, k: int, a_base: int, b_base: int, c_base: int
+) -> NtxCommand:
+    """The single-command NTX matmul at explicit TCDM bases (fwd pass).
+
+    This is what :func:`repro.core.ntx.matmul_command` delegates to.
+    """
+    sizes, n_red, rd0, rd1, wr = matmul_nest(m, n, k, "fwd", a_base, b_base, c_base)
+    return NtxCommand(
+        loops=_pad5(sizes, 1),
+        opcode="mac",
+        agu_rd0=Agu(rd0[0], _pad5(rd0[1], 0)),
+        agu_rd1=Agu(rd1[0], _pad5(rd1[1], 0)),
+        agu_wr=Agu(wr[0], _pad5(wr[1], 0)),
+        init_level=n_red,
+        store_level=n_red,
+    )
+
+
+def _lower_matmul(spec: MatmulSpec, pass_: str, design: DesignPoint) -> NtxProgram:
+    m, n, k = spec.m, spec.n, spec.k
+    alloc = RegionAllocator()
+    if pass_ == "fwd":
+        ra = alloc.alloc("a", (m, k), "input")
+        rb = alloc.alloc("b", (k, n), "param")
+        rc = alloc.alloc("c", (m, n), "output")
+    elif pass_ == "dw":
+        ra = alloc.alloc("a", (m, k), "input")
+        rb = alloc.alloc("dy", (m, n), "input")
+        rc = alloc.alloc("dw", (k, n), "output")
+    elif pass_ == "dx":
+        ra = alloc.alloc("dy", (m, n), "input")
+        rb = alloc.alloc("b", (k, n), "param")
+        rc = alloc.alloc("dx", (m, k), "output")
+    else:
+        raise ValueError(f"unknown matmul pass {pass_!r}; expected one of {PASSES}")
+    sizes, n_red, rd0, rd1, wr = matmul_nest(m, n, k, pass_, ra.base, rb.base, rc.base)
+    plan = plan_matmul_tiles(m, n, k, in_dtype_bytes=ELEM_BYTES)
+    block = _nest_block(
+        sizes, n_red, rd0, rd1, wr, design,
+        tag=f"matmul:{pass_}", reads=(ra, rb), writes=(rc,), tile=plan,
+    )
+    return NtxProgram(
+        name=f"matmul{m}x{n}x{k}:{pass_}",
+        blocks=[block],
+        regions=alloc.regions,
+        design=design,
+        meta={"spec": spec, "pass": pass_, "plan": plan},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Conv2d rules (fwd / dw / dx)
+# ---------------------------------------------------------------------------
+
+
+def _conv_plan(spec: Conv2dSpec):
+    return plan_stencil_tiles(
+        spec.out_h, spec.out_w, spec.cin, spec.cout, spec.kh, spec.kw,
+        dtype_bytes=ELEM_BYTES,
+    )
+
+
+def _lower_conv_fwd(spec: Conv2dSpec, design: DesignPoint) -> NtxProgram:
+    s, p = spec.stride, spec.padding
+    oh, ow = spec.out_h, spec.out_w
+    alloc = RegionAllocator()
+    rx = alloc.alloc("x", (spec.in_h, spec.in_w, spec.cin), "input")
+    rw = alloc.alloc("w", (spec.kh, spec.kw, spec.cin, spec.cout), "param")
+    ry = alloc.alloc("y", (oh, ow, spec.cout), "output")
+    xp, staging = _padded_plane(
+        alloc, rx, h=spec.in_h, w=spec.in_w, c=spec.cin, pad=p, name="x_pad"
+    )
+    iw = spec.in_w + 2 * p  # padded row pitch
+    cin, kw, kh, cout = spec.cin, spec.kw, spec.kh, spec.cout
+    block = _nest_block(
+        (cin, kw, kh, ow, oh, cout), 3,
+        (xp.base, (1, cin, iw * cin, s * cin, s * iw * cin, 0)),
+        (rw.base, (cout, cin * cout, kw * cin * cout, 0, 0, 1)),
+        (ry.base, (0, 0, 0, cout, ow * cout, 1)),
+        design,
+        tag="conv2d:fwd", reads=(xp, rw), writes=(ry,), tile=_conv_plan(spec),
+    )
+    return NtxProgram(
+        name=f"conv{spec.kh}x{spec.kw}x{cin}->{oh}x{ow}x{cout}:fwd",
+        blocks=staging + [block],
+        regions=alloc.regions,
+        design=design,
+        meta={"spec": spec, "pass": "fwd", "plan": block.tile},
+    )
+
+
+def conv2d_fwd_template(
+    in_h: int, in_w: int, cin: int, kh: int, kw: int, cout: int,
+    x_base: int, w_base: int, y_base: int, stride: int = 1,
+) -> NtxCommand:
+    """The NTX conv-forward command template at explicit TCDM bases.
+
+    With ``cout=1`` this is exactly the single-output-channel command of
+    :func:`repro.core.ntx.conv2d_command` (HWI-contiguous weights, one output
+    plane) — the thin wrapper there delegates here.
+    """
+    oh = (in_h - kh) // stride + 1
+    ow = (in_w - kw) // stride + 1
+    return NtxCommand(
+        loops=(cin, kw, kh, ow, oh),
+        opcode="mac",
+        agu_rd0=Agu(x_base, (1, cin, in_w * cin, stride * cin, stride * in_w * cin)),
+        agu_rd1=Agu(w_base, (cout, cin * cout, kw * cin * cout, 0, 0)),
+        agu_wr=Agu(y_base, (0, 0, 0, cout, ow * cout)),
+        init_level=3,
+        store_level=3,
+    )
+
+
+def _lower_conv_dw(spec: Conv2dSpec, design: DesignPoint) -> NtxProgram:
+    s, p = spec.stride, spec.padding
+    oh, ow = spec.out_h, spec.out_w
+    alloc = RegionAllocator()
+    rx = alloc.alloc("x", (spec.in_h, spec.in_w, spec.cin), "input")
+    rdy = alloc.alloc("dy", (oh, ow, spec.cout), "input")
+    rdw = alloc.alloc("dw", (spec.kh, spec.kw, spec.cin, spec.cout), "output")
+    xp, staging = _padded_plane(
+        alloc, rx, h=spec.in_h, w=spec.in_w, c=spec.cin, pad=p, name="x_pad"
+    )
+    iw = spec.in_w + 2 * p
+    cin, kw, kh, cout = spec.cin, spec.kw, spec.kh, spec.cout
+    # dW[u,v,ci,co] += x_pad[s*ohi+u, s*owi+v, ci] * dy[ohi, owi, co]
+    # dims innermost-first: (owi, ohi | ci, v, u, co)
+    block = _nest_block(
+        (ow, oh, cin, kw, kh, cout), 2,
+        (xp.base, (s * cin, s * iw * cin, 1, cin, iw * cin, 0)),
+        (rdy.base, (cout, ow * cout, 0, 0, 0, 1)),
+        (rdw.base, (0, 0, cout, cin * cout, kw * cin * cout, 1)),
+        design,
+        tag="conv2d:dw", reads=(xp, rdy), writes=(rdw,), tile=_conv_plan(spec),
+    )
+    return NtxProgram(
+        name=f"conv{kh}x{kw}x{cin}->{oh}x{ow}x{cout}:dw",
+        blocks=staging + [block],
+        regions=alloc.regions,
+        design=design,
+        meta={"spec": spec, "pass": "dw", "plan": block.tile},
+    )
+
+
+def _lower_conv_dx(spec: Conv2dSpec, design: DesignPoint) -> NtxProgram:
+    """§3.2 / Fig. 6: s*s dense phase convolutions over zero-padded dy.
+
+    Phase (a, b) collects the input pixels (i, j) with (i+p) % s == a etc.;
+    only the filter taps congruent to the phase ever touch them, so each
+    phase is a *dense* stride-1 correlation — constant MACs per pixel, one
+    command block per phase (driver reps over cin). The tap subset and the
+    spatial flip are encoded as negative AGU strides into the original
+    weights; the zero padding of dy is staged in-band (memset + copy).
+    """
+    s, p = spec.stride, spec.padding
+    oh, ow = spec.out_h, spec.out_w
+    xh, xw = spec.in_h, spec.in_w
+    cin, kw, kh, cout = spec.cin, spec.kw, spec.kh, spec.cout
+    alloc = RegionAllocator()
+    rdy = alloc.alloc("dy", (oh, ow, cout), "input")
+    rw = alloc.alloc("w", (kh, kw, cin, cout), "param")
+    rdx = alloc.alloc("dx", (xh, xw, cin), "output")
+
+    blocks: list[CommandBlock] = []
+    n_phases = 0
+    for a in range(s):
+        ta = len(range(a, kh, s))
+        if ta == 0:
+            continue
+        for b in range(s):
+            tb = len(range(b, kw, s))
+            if tb == 0:
+                continue
+            i0 = (a - p) % s
+            j0 = (b - p) % s
+            na = len(range(i0, xh, s))
+            nb = len(range(j0, xw, s))
+            if na == 0 or nb == 0:
+                continue
+            ii0 = (i0 + p - a) // s
+            jj0 = (j0 + p - b) // s
+            # dy staged zero-padded: taps reach ta-1 rows above the first dy
+            # row and the last phase pixel reaches ii0 + na - 1 + ta - 1.
+            pt, pl = ta - 1, tb - 1
+            hp = max(pt + oh, ii0 + na + ta - 1)
+            wp = max(pl + ow, jj0 + nb + tb - 1)
+            if (hp, wp) == (oh, ow):
+                dyp, staging = rdy, []
+            else:
+                dyp = alloc.alloc(f"dy_pad{a}{b}", (hp, wp, cout), "scratch")
+                staging = [
+                    _memset_block(dyp),
+                    _copy_block(
+                        rdy, dyp,
+                        rows=oh, row_elems=ow * cout,
+                        src_row_stride=ow * cout, dst_row_stride=wp * cout,
+                        dst_off=(pt * wp + pl) * cout,
+                        tag=f"copy:dy->dy_pad{a}{b}",
+                    ),
+                ]
+            blocks += staging
+            # dx[i0+s*qi, j0+s*qj, ci] +=
+            #   dy_pad[ii0+qi+ti, jj0+qj+tj, co] * w[a+s*(ta-1-ti), b+s*(tb-1-tj), ci, co]
+            # dims innermost-first: (co, tj, ti | qj, qi, ci)
+            u0 = a + s * (ta - 1)
+            v0 = b + s * (tb - 1)
+            blocks.append(
+                _nest_block(
+                    (cout, tb, ta, nb, na, cin), 3,
+                    (
+                        # dy_pad row r holds dy row r - pt; phase pixel qi
+                        # reads rows (ii0 + qi) + ti of the padded plane.
+                        dyp.base + (ii0 * wp + jj0) * cout,
+                        (1, cout, wp * cout, cout, wp * cout, 0),
+                    ),
+                    (
+                        rw.base + (u0 * kw + v0) * cin * cout,
+                        (1, -s * cin * cout, -s * kw * cin * cout, 0, 0, cout),
+                    ),
+                    (
+                        rdx.base + (i0 * xw + j0) * cin,
+                        (0, 0, 0, s * cin, s * xw * cin, 1),
+                    ),
+                    design,
+                    tag=f"conv2d:dx[{a},{b}]",
+                    reads=(dyp, rw), writes=(rdx,), tile=_conv_plan(spec),
+                )
+            )
+            n_phases += 1
+    return NtxProgram(
+        name=f"conv{kh}x{kw}x{cin}->{oh}x{ow}x{cout}:dx",
+        blocks=blocks,
+        regions=alloc.regions,
+        design=design,
+        meta={"spec": spec, "pass": "dx", "n_phases": n_phases,
+              "plan": _conv_plan(spec)},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pooling / ReLU rules
+# ---------------------------------------------------------------------------
+
+
+def _lower_maxpool(spec: MaxPool2dSpec, design: DesignPoint) -> NtxProgram:
+    s, ww = spec.stride, spec.window
+    oh, ow, c = spec.out_h, spec.out_w, spec.c
+    iw = spec.in_w
+    alloc = RegionAllocator()
+    rx = alloc.alloc("x", (spec.in_h, spec.in_w, c), "input")
+    ry = alloc.alloc("y", (oh, ow, c), "output")
+    # y[i3,i2,i4] = max over (i1,i0) of x[s*i3+i1, s*i2+i0, i4]
+    block = _nest_block(
+        (ww, ww, ow, oh, c), 2,
+        (rx.base, (c, iw * c, s * c, s * iw * c, 1)),
+        None,
+        (ry.base, (0, 0, c, ow * c, 1)),
+        design,
+        opcode="vmax",
+        tag="maxpool:fwd", reads=(rx,), writes=(ry,),
+    )
+    return NtxProgram(
+        name=f"maxpool{ww}x{ww}s{s}:{oh}x{ow}x{c}:fwd",
+        blocks=[block],
+        regions=alloc.regions,
+        design=design,
+        meta={"spec": spec, "pass": "fwd"},
+    )
+
+
+def _lower_relu(spec: ReluSpec, design: DesignPoint) -> NtxProgram:
+    alloc = RegionAllocator()
+    rx = alloc.alloc("x", spec.shape, "input")
+    ry = alloc.alloc("y", spec.shape, "output")
+    block = _nest_block(
+        (spec.size,), 0,
+        (rx.base, (1,)),
+        None,
+        (ry.base, (1,)),
+        design,
+        opcode="relu",
+        tag="relu:fwd", reads=(rx,), writes=(ry,),
+    )
+    return NtxProgram(
+        name=f"relu{spec.size}:fwd",
+        blocks=[block],
+        regions=alloc.regions,
+        design=design,
+        meta={"spec": spec, "pass": "fwd"},
+    )
+
+
+# ---------------------------------------------------------------------------
+# The entry point
+# ---------------------------------------------------------------------------
+
+
+def lower(spec, pass_: str = "fwd", *, design: DesignPoint = NTX_DESIGN) -> NtxProgram:
+    """Lower one layer spec + pass to an :class:`NtxProgram`."""
+    if isinstance(spec, MatmulSpec):
+        return _lower_matmul(spec, pass_, design)
+    if isinstance(spec, Conv2dSpec):
+        if pass_ == "fwd":
+            return _lower_conv_fwd(spec, design)
+        if pass_ == "dw":
+            return _lower_conv_dw(spec, design)
+        if pass_ == "dx":
+            return _lower_conv_dx(spec, design)
+        raise ValueError(f"unknown conv pass {pass_!r}; expected one of {PASSES}")
+    if isinstance(spec, MaxPool2dSpec):
+        if pass_ != "fwd":
+            raise NotImplementedError("pooling backward is not lowered yet")
+        return _lower_maxpool(spec, design)
+    if isinstance(spec, ReluSpec):
+        if pass_ != "fwd":
+            raise NotImplementedError("relu backward is not lowered yet")
+        return _lower_relu(spec, design)
+    raise TypeError(f"no lowering rule for {type(spec).__name__}")
+
+
+def lower_layer(spec, *, design: DesignPoint = NTX_DESIGN) -> dict[str, NtxProgram]:
+    """All training passes of one layer: {'fwd': ..., 'dw': ..., 'dx': ...}.
+
+    Pooling/ReLU only have a forward lowering so far.
+    """
+    if isinstance(spec, (MaxPool2dSpec, ReluSpec)):
+        return {"fwd": lower(spec, "fwd", design=design)}
+    return {p: lower(spec, p, design=design) for p in PASSES}

@@ -262,6 +262,19 @@ class MultiClusterScheduler:
             traces.append(trace)
         return ScheduleResult(cluster_traces=traces, timeline=timeline)
 
+    def schedule_program(self, program) -> ScheduleResult:
+        """Simulate a lowered :class:`repro.lower.NtxProgram`.
+
+        The command stream and the per-command DMA byte counts both come
+        from the program — this is the timing-executor entry point
+        (:func:`repro.lower.executors.run_timing` wraps it with a size
+        guard).
+        """
+        return self.schedule(
+            list(program.commands()),
+            bytes_per_command=list(program.command_dma_bytes()),
+        )
+
 
 # ---------------------------------------------------------------------------
 # Event-driven counterpart of the analytical model (eqs. 4-11)
