@@ -1,7 +1,7 @@
 """Offload-runtime benchmarks: queued vs synchronous, overlap, cross-checks.
 
-Five benchmarks over :mod:`repro.runtime` in the same (rows, summary) shape
-as :mod:`benchmarks.tables`:
+Benchmarks over :mod:`repro.runtime` in the same (rows, summary) shape as
+:mod:`benchmarks.tables`:
 
   * ``offload_overhead``  — the §2.2 claim: command queues cut the modeled
     offload overhead (cycles engines sit idle around each command) vs a
@@ -18,17 +18,32 @@ as :mod:`benchmarks.tables`:
     ``repro.lower``) vs the closed-form Table 2 arithmetic
     (``ntx.offload_count``) for every CONV_LAYERS layer at both design
     points, plus fwd+dW+dX training totals from the same lowering.
+  * ``timing_engine``     — the block-replicated steady-state fast path vs
+    the full event-driven engine: exact cycle agreement on capped-size
+    controls, plus the wall-clock speedup.
+  * ``mesh_sweep``        — §V / eqs. (14)-(21): mesh-of-HMCs training
+    parallel efficiency across 1-64 cubes, with the per-image time driven
+    by the block-replicated timing engine over full fwd+dW+dX lowered CNN
+    programs (the NS design point exceeds 1e6 commands per image).
+  * ``pallas_plan_cache`` — repeated ``run_pallas`` calls on one spec hit
+    the jitted-plan cache: zero retraces after warmup, per-call overhead
+    >= 5x below the uncached (retrace-every-call) path.
 
 All command streams come from the unified lowering pipeline
 (``repro.lower.lower``) — the benchmarks consume NtxPrograms, not hand-built
 commands.
 
 Standalone: ``PYTHONPATH=src python -m benchmarks.offload_bench`` — also
-writes a chrome://tracing timeline to ``artifacts/offload_trace.json``.
-``--smoke`` runs a single small workload per benchmark (the CI drift check).
+writes a chrome://tracing timeline to ``artifacts/offload_trace.json`` and a
+machine-readable ``artifacts/BENCH_offload.json``. ``--smoke`` runs a single
+small workload per benchmark (the CI drift check) and enforces the wall-time
+budget recorded in ``benchmarks/bench_baseline.json`` (refresh with
+``--update-baseline``).
 """
 
 from __future__ import annotations
+
+import time
 
 from repro.core import ntx
 from repro.lower import MatmulSpec, NS_DESIGN, NTX_DESIGN, lower, lower_layer
@@ -196,21 +211,217 @@ def lowering_crosscheck(networks=None):
     }
 
 
+def timing_engine(cases=None):
+    """Block-replicated fast path vs the event-driven engine (capped-size
+    controls): cycle counts must match exactly, and the fast path must win
+    the wall clock by a growing margin as programs get bigger."""
+    from repro.lower import run_timing
+
+    cases = cases or [
+        ("1x1x512_ns_fwd", lower(CONV_LAYERS["googlenet"][3], "fwd",
+                                 design=NS_DESIGN)),
+        ("1x1x256_ns_fwd", lower(CONV_LAYERS["googlenet"][2], "fwd",
+                                 design=NS_DESIGN)),
+        ("3x3x64_ntx_dw", lower(CONV_LAYERS["googlenet"][1], "dw",
+                                design=NTX_DESIGN)),
+    ]
+    rows = []
+    all_match = True
+    speedups = []
+    for label, prog in cases:
+        t0 = time.perf_counter()
+        ev = run_timing(prog, n_clusters=4, engine="event")
+        t_ev = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        bl = run_timing(prog, n_clusters=4, engine="block")
+        t_bl = time.perf_counter() - t0
+        se, sb = ev.summary(), bl.summary()
+        match = all(se[k] == sb[k] for k in se if k != "elided_commands")
+        all_match &= match
+        sp = t_ev / max(t_bl, 1e-9)
+        speedups.append(sp)
+        rows.append((label, prog.n_commands, t_ev * 1e3, t_bl * 1e3, sp, match))
+    return rows, {
+        "exact_match": all_match,
+        "max_speedup": max(speedups),
+        "mean_speedup": sum(speedups) / len(speedups),
+    }
+
+
+def mesh_sweep(sides=(1, 2, 4, 8), network="googlenet", batch=512,
+               n_clusters=16, f_ntx=1.5e9):
+    """§V / eqs. (14)-(21): mesh-of-HMCs training sweep, simulation-driven.
+
+    The per-image time comes from the block-replicated timing engine over
+    the *full* fwd+dW+dX lowered programs of the network's conv layers at
+    both design points (the NS-design set exceeds 1e6 commands per image),
+    with compute cycles derated by the calibrated eta_c*eta_net exactly as
+    the analytical model does, and each program refined by
+    ``partition_program`` so one layer fills all clusters x engines (§3.1).
+    Parallel efficiency from the paper's mesh-update equations is then
+    cross-checked against ``ntx_model.mesh`` fed with the analytical cube
+    time for the same (MACs, bytes) workload: the two must agree within 10%
+    and stay above the paper's 95% across 1-64 HMCs.
+    """
+    from repro.lower import run_timing
+
+    eta = scheduler.ETA_COMPUTE * scheduler.ETA_NET
+    parts = n_clusters * scheduler.ENGINES_PER_CLUSTER
+    weight_bytes = WORKLOADS[network].param_mb * 1e6
+    per_design = {}
+    for dname, design in (("ntx", NTX_DESIGN), ("ns", NS_DESIGN)):
+        cycles = 0
+        macs = 0.0
+        byts = 0.0
+        ncmds = 0
+        for spec in CONV_LAYERS[network]:
+            for prog in lower_layer(spec, design=design).values():
+                part = scheduler.partition_program(prog, parts)
+                res = run_timing(
+                    part, n_clusters=n_clusters, f_ntx=f_ntx, engine="block",
+                    exec_cycles=lambda c: c.busy_cycles / eta,
+                )
+                cycles += res.total_cycles
+                macs += prog.busy_cycles
+                byts += prog.dma_bytes
+                ncmds += prog.n_commands
+        t_sim = cycles / f_ntx
+        t_model = M.cube(
+            M.Kernel(macs=macs, bytes_total=byts), n_clusters, f_ntx, "28nm"
+        ).time
+        per_design[dname] = (t_sim, t_model, ncmds)
+    rows = []
+    errs = []
+    min_eff = {}
+    for dname, (t_sim, t_model, ncmds) in per_design.items():
+        for side in sides:
+            sim = M.mesh(side, batch, t_image=t_sim, weight_bytes=weight_bytes)
+            mod = M.mesh(side, batch, t_image=t_model, weight_bytes=weight_bytes)
+            rel = abs(sim.parallel_eff - mod.parallel_eff) / mod.parallel_eff
+            errs.append(rel)
+            min_eff[dname] = min(min_eff.get(dname, 1.0), sim.parallel_eff)
+            rows.append((f"{dname}@{side * side}hmc", ncmds,
+                         sim.parallel_eff, mod.parallel_eff, rel, sim.speedup))
+    return rows, {
+        "ns_program_commands": per_design["ns"][2],
+        "t_image_sim_ms_ntx": per_design["ntx"][0] * 1e3,
+        "t_image_model_ms_ntx": per_design["ntx"][1] * 1e3,
+        "ntx_min_parallel_eff": min_eff["ntx"],
+        "ns_min_parallel_eff": min_eff["ns"],
+        "max_parallel_eff_rel_err": max(errs),
+        "parallel_eff_above_95pct": min(min_eff.values()) > 0.95,
+        "agrees_with_model_within_10pct": max(errs) < 0.10,
+    }
+
+
+def pallas_plan_cache(n_warm=5):
+    """Repeated ``run_pallas`` on one spec: the jitted-plan cache must give
+    zero retraces after warmup and >= 5x lower per-call overhead than the
+    uncached (fresh cache, retrace every call) path. Also drives one whole
+    fwd+dW+dX chain (``workloads.PALLAS_CHAIN``) through
+    ``run_pallas_network`` twice and checks the second pass is retrace-free.
+    """
+    import jax
+    import numpy as np
+
+    from repro.lower import Conv2dSpec, PlanCache, run_pallas, run_pallas_network
+    from repro.lower.executors import _resolve_interpret
+
+    from benchmarks.workloads import PALLAS_CHAIN
+
+    rng = np.random.RandomState(0)
+    spec = MatmulSpec(32, 32, 32)
+    prog = lower(spec, "fwd")
+    a = rng.randn(32, 32).astype(np.float32)
+    b = rng.randn(32, 32).astype(np.float32)
+
+    cache = PlanCache()
+    t0 = time.perf_counter()
+    jax.block_until_ready(run_pallas(prog, {"a": a, "b": b}, cache=cache)["c"])
+    cold = time.perf_counter() - t0
+    warm_times = []
+    for _ in range(n_warm):
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            run_pallas(prog, {"a": a, "b": b}, cache=cache)["c"]
+        )
+        warm_times.append(time.perf_counter() - t0)
+    warm = min(warm_times)
+    plan = cache.get(spec, "fwd", "ntx", _resolve_interpret(None))
+    retraces = plan.traces - 1
+
+    # the no-cache strawman: a fresh PlanCache per call retraces every time
+    t0 = time.perf_counter()
+    jax.block_until_ready(
+        run_pallas(prog, {"a": a, "b": b}, cache=PlanCache())["c"]
+    )
+    uncached = time.perf_counter() - t0
+
+    reduction = uncached / max(warm, 1e-9)
+
+    # whole-network chain: fwd+dW+dX through cached plans, twice
+    net_cache = PlanCache()
+    chain = PALLAS_CHAIN
+    x = rng.randn(16, 16, 3).astype(np.float32)
+    params = [
+        rng.randn(s.kh, s.kw, s.cin, s.cout).astype(np.float32)
+        if isinstance(s, Conv2dSpec) else None
+        for s in chain
+    ]
+    t0 = time.perf_counter()
+    jax.block_until_ready(run_pallas_network(chain, x, params,
+                                             cache=net_cache)["y"])
+    net_cold = time.perf_counter() - t0
+    traces_warm = sum(p.traces for p in net_cache._plans.values())
+    t0 = time.perf_counter()
+    jax.block_until_ready(run_pallas_network(chain, x, params,
+                                             cache=net_cache)["y"])
+    net_warm = time.perf_counter() - t0
+    net_retraces = sum(p.traces for p in net_cache._plans.values()) - traces_warm
+
+    rows = [
+        ("cold_compile", cold * 1e3),
+        ("warm_cached", warm * 1e3),
+        ("uncached_per_call", uncached * 1e3),
+        ("network_cold", net_cold * 1e3),
+        ("network_warm", net_warm * 1e3),
+    ]
+    return rows, {
+        "overhead_reduction": reduction,
+        "retraces_after_warmup": retraces,
+        "zero_retraces": retraces == 0 and net_retraces == 0,
+        "cached_5x": reduction >= 5.0,
+        "cache_hits": cache.hits,
+        "network_plans": len(net_cache),
+        "network_speedup": net_cold / max(net_warm, 1e-9),
+    }
+
+
 ALL = {
     "offload_overhead": offload_overhead,
     "queue_depth_sweep": queue_depth_sweep,
     "overlap_sweep": overlap_sweep,
     "model_crosscheck": model_crosscheck,
     "lowering_crosscheck": lowering_crosscheck,
+    "timing_engine": timing_engine,
+    "mesh_sweep": mesh_sweep,
+    "pallas_plan_cache": pallas_plan_cache,
 }
 
 # One small workload per benchmark — the CI smoke lane's model/simulator
 # drift check (seconds, not minutes). model_crosscheck is pure arithmetic,
-# so the full sweep stays in.
+# so the full sweep stays in; mesh_sweep rides on the block-replicated fast
+# path, so even its 2.4M-command NS programs fit the smoke budget.
 SMOKE = {
     "offload_overhead": lambda: offload_overhead(layers=TABLE2_LAYERS[3:]),
     "model_crosscheck": model_crosscheck,
     "lowering_crosscheck": lambda: lowering_crosscheck(networks=["googlenet"]),
+    "timing_engine": lambda: timing_engine(cases=[
+        ("1x1x512_ns_fwd", lower(CONV_LAYERS["googlenet"][3], "fwd",
+                                 design=NS_DESIGN)),
+    ]),
+    "mesh_sweep": mesh_sweep,
+    "pallas_plan_cache": pallas_plan_cache,
 }
 
 # Acceptance gates: summary keys that must be truthy for the run (and the CI
@@ -221,6 +432,9 @@ GATES = {
     "overlap_sweep": ("all_overlap_efficiency_near_1",),
     "model_crosscheck": ("agrees_within_10pct",),
     "lowering_crosscheck": ("all_counts_match_closed_form",),
+    "timing_engine": ("exact_match",),
+    "mesh_sweep": ("parallel_eff_above_95pct", "agrees_with_model_within_10pct"),
+    "pallas_plan_cache": ("zero_retraces", "cached_5x"),
 }
 
 
@@ -239,28 +453,86 @@ def export_demo_trace(path="artifacts/offload_trace.json") -> str:
     return path
 
 
+def write_bench_json(results: dict, path="artifacts/BENCH_offload.json") -> str:
+    """Machine-readable per-benchmark wall time + modeled cycles/ratios.
+
+    ``results`` maps benchmark name -> {"wall_s": float, "summary": {...},
+    "rows": [...]}; the file is what CI uploads and what cross-PR perf
+    tracking diffs.
+    """
+    import json
+    import os
+
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    payload = {
+        "benchmarks": results,
+        "total_wall_s": sum(r["wall_s"] for r in results.values()),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+BASELINE_PATH = "benchmarks/bench_baseline.json"
+
+
+def check_budget(total_wall_s: float, update: bool = False) -> str | None:
+    """Smoke-lane timing budget: fail when the suite exceeds 2x the recorded
+    baseline (catches perf regressions in the simulators themselves).
+    Returns an error string, or None when within budget."""
+    import json
+    import os
+
+    if update:
+        with open(BASELINE_PATH, "w") as f:
+            json.dump({"smoke_wall_s": round(total_wall_s, 3)}, f, indent=1)
+        return None
+    if not os.path.exists(BASELINE_PATH):
+        # a missing baseline must not silently disable the gate
+        return (f"{BASELINE_PATH} missing — record one with "
+                "`--smoke --update-baseline`")
+    with open(BASELINE_PATH) as f:
+        baseline = json.load(f)["smoke_wall_s"]
+    if total_wall_s > 2.0 * baseline:
+        return (f"smoke suite took {total_wall_s:.2f}s "
+                f"> 2x recorded baseline {baseline:.2f}s "
+                f"(refresh with --update-baseline if intentional)")
+    return None
+
+
 def main() -> None:
     import argparse
-    import time
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="one small workload per benchmark (CI drift check)")
+                    help="one small workload per benchmark (CI drift check; "
+                         "enforces the recorded wall-time budget)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="re-record benchmarks/bench_baseline.json from this "
+                         "run instead of enforcing it (implies --smoke: the "
+                         "baseline is the smoke suite's wall time)")
+    ap.add_argument("--json", default="artifacts/BENCH_offload.json",
+                    help="where to write the machine-readable results")
     args = ap.parse_args()
+    if args.update_baseline:
+        args.smoke = True  # the recorded budget is the smoke suite's
     suite = SMOKE if args.smoke else ALL
 
     details = []
     failed = []
+    results = {}
     for name, fn in suite.items():
         t0 = time.perf_counter()
         rows, summary = fn()
-        us = (time.perf_counter() - t0) * 1e6
+        wall = time.perf_counter() - t0
         derived = ";".join(
             f"{k}={v:.4g}" if isinstance(v, (int, float)) else f"{k}={v}"
             for k, v in summary.items()
         )
-        print(f"{name},{us:.0f},{derived}")
+        print(f"{name},{wall * 1e6:.0f},{derived}")
         details.append((name, rows, summary))
+        results[name] = {"wall_s": wall, "summary": summary,
+                         "rows": [list(r) for r in rows]}
         failed += [
             f"{name}:{key}" for key in GATES.get(name, ()) if not summary.get(key)
         ]
@@ -272,6 +544,12 @@ def main() -> None:
         for k, v in summary.items():
             print(f"   -> {k}: {v}")
     print("trace:", export_demo_trace())
+    print("json:", write_bench_json(results, args.json))
+    if args.smoke or args.update_baseline:
+        total = sum(r["wall_s"] for r in results.values())
+        err = check_budget(total, update=args.update_baseline)
+        if err:
+            failed.append(f"budget:{err}")
     if failed:
         raise SystemExit(f"acceptance gates failed: {', '.join(failed)}")
 

@@ -4,7 +4,9 @@
 One benchmark per paper table/figure (Tables 1/2/4/5, Figs 8/14/15+16) plus
 the kernel micro-benchmarks and the roofline reader over the dry-run
 artifacts. Output: ``name,us_per_call,derived`` CSV lines, followed by the
-detail blocks.
+detail blocks, plus a machine-readable ``artifacts/BENCH_offload.json``
+(per-benchmark wall time + modeled cycles + speedup ratios) so the perf
+trajectory is diffable across PRs.
 """
 
 from __future__ import annotations
@@ -13,38 +15,44 @@ import time
 from pathlib import Path
 
 
-def _run(name, fn, details):
+def _run(name, fn, details, results):
     t0 = time.perf_counter()
     rows, summary = fn()
-    us = (time.perf_counter() - t0) * 1e6
+    wall = time.perf_counter() - t0
     derived = ";".join(
         f"{k}={v:.4g}" if isinstance(v, (int, float)) else f"{k}={v}"
         for k, v in summary.items()
         if not isinstance(v, dict)
     )
-    print(f"{name},{us:.0f},{derived}")
+    print(f"{name},{wall * 1e6:.0f},{derived}")
     details.append((name, rows, summary))
+    results[name] = {"wall_s": wall, "summary": summary,
+                     "rows": [list(r) for r in rows]}
 
 
 def main() -> None:
     from benchmarks import kernels_bench, offload_bench, roofline, tables
 
     details: list = []
-    _run("table1_precision", tables.table1_precision, details)
-    _run("table2_offloads", tables.table2_offloads, details)
-    _run("table4_ns_vs_ntx", tables.table4_ns_vs_ntx, details)
-    _run("table5_efficiency", tables.table5_efficiency, details)
-    _run("fig8_vfs", tables.fig8_vfs, details)
-    _run("fig14_mesh_scaling", tables.fig14_mesh_scaling, details)
-    _run("fig15_16_datacenter", tables.fig15_16_datacenter, details)
+    results: dict = {}
+    _run("table1_precision", tables.table1_precision, details, results)
+    _run("table2_offloads", tables.table2_offloads, details, results)
+    _run("table4_ns_vs_ntx", tables.table4_ns_vs_ntx, details, results)
+    _run("table5_efficiency", tables.table5_efficiency, details, results)
+    _run("fig8_vfs", tables.fig8_vfs, details, results)
+    _run("fig14_mesh_scaling", tables.fig14_mesh_scaling, details, results)
+    _run("fig15_16_datacenter", tables.fig15_16_datacenter, details, results)
     for name, fn in offload_bench.ALL.items():
-        _run(name, fn, details)
+        _run(name, fn, details, results)
 
     for name, fn in kernels_bench.ALL.items():
         t0 = time.perf_counter()
         dt, gflops = fn()
-        us = (time.perf_counter() - t0) * 1e6
+        wall = time.perf_counter() - t0
         print(f"{name},{dt * 1e6:.0f},gflops={gflops:.2f}")
+        results[name] = {"wall_s": wall,
+                         "summary": {"us_per_call": dt * 1e6,
+                                     "gflops": gflops}}
 
     # roofline summary over dry-run artifacts (if present)
     if Path("artifacts/dryrun").exists():
@@ -69,6 +77,7 @@ def main() -> None:
             print("  ", *(f"{x:.4g}" if isinstance(x, float) else x for x in r))
         for k, v in summary.items():
             print(f"   -> {k}: {v}")
+    print("json:", offload_bench.write_bench_json(results))
 
 
 if __name__ == "__main__":

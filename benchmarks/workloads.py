@@ -20,7 +20,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from repro.lower import Conv2dSpec
+from repro.lower import Conv2dSpec, ReluSpec
 
 
 @dataclass(frozen=True)
@@ -102,6 +102,17 @@ CONV_LAYERS: dict[str, list[Conv2dSpec]] = {
         Conv2dSpec(14, 14, 256, 1, 1, 1024),
     ],
 }
+
+# A small shape-chained CNN (conv -> relu -> conv) for the whole-network
+# Pallas executor: ``run_pallas_network`` threads fwd+dW+dX through it via
+# cached plans, and ``offload_bench.pallas_plan_cache`` asserts zero
+# retraces after warmup. Callers supply the aligned params list themselves
+# (a weight array per conv entry, None for relu).
+PALLAS_CHAIN: list = [
+    Conv2dSpec(16, 16, 3, 3, 3, 8, padding=1),            # -> 16x16x8
+    ReluSpec((16, 16, 8)),
+    Conv2dSpec(16, 16, 8, 3, 3, 8, stride=2, padding=1),  # -> 8x8x8
+]
 
 # The paper's Table 2 GoogLeNet layers (label, spec) — the canonical rows
 # every offload benchmark and test crosschecks against offload_count().

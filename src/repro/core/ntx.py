@@ -28,7 +28,9 @@ pixels" — that is exactly the paper's C2 contribution transplanted.
 
 from __future__ import annotations
 
+import functools
 import math
+import warnings
 from dataclasses import dataclass, field
 from typing import Sequence
 
@@ -222,14 +224,29 @@ def _agu_span(agu: Agu, loops: Sequence[int]) -> tuple[int, int]:
     return lo, hi
 
 
-def _agu_grid(agu: Agu, loops: Sequence[int]) -> np.ndarray:
-    """All addresses, shaped (n4, n3, n2, n1, n0) so C-order == issue order."""
-    addr = np.int64(agu.base)
-    for j, (n, s) in enumerate(zip(loops, agu.strides)):
+@functools.lru_cache(maxsize=256)
+def _offset_grid(strides: tuple[int, ...], loops: tuple[int, ...]) -> np.ndarray:
+    """Base-relative AGU offsets, shaped (n4..n0) so C-order == issue order.
+
+    Cached on (strides, loops): a :class:`repro.lower.ir.CommandBlock`
+    re-issues one template thousands of times with only the AGU *bases*
+    rebased, so the offset lattice — the expensive part of the address grid
+    — is shared across every replica. The cached array is read-only; callers
+    get fresh arrays from :func:`_agu_grid`'s base addition.
+    """
+    addr = np.int64(0)
+    for j, (n, s) in enumerate(zip(loops, strides)):
         shape = [1] * MAX_LOOPS
         shape[MAX_LOOPS - 1 - j] = n
         addr = addr + (np.arange(n, dtype=np.int64) * s).reshape(shape)
-    return np.broadcast_to(addr, tuple(reversed(loops)))
+    grid = np.ascontiguousarray(np.broadcast_to(addr, tuple(reversed(loops))))
+    grid.setflags(write=False)
+    return grid
+
+
+def _agu_grid(agu: Agu, loops: Sequence[int]) -> np.ndarray:
+    """All addresses, shaped (n4, n3, n2, n1, n0) so C-order == issue order."""
+    return agu.base + _offset_grid(agu.strides, tuple(loops))
 
 
 def _spans_ok(cmd: NtxCommand, size: int, check_alias: bool = True) -> bool:
@@ -382,6 +399,12 @@ def matmul_command(
        lives in :func:`repro.lower.rules.matmul_template`; new code should
        go through :func:`repro.lower.lower` on a ``MatmulSpec``.
     """
+    warnings.warn(
+        "ntx.matmul_command is deprecated: use repro.lower.lower(MatmulSpec(...))"
+        " or repro.lower.rules.matmul_template for raw templates",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     from repro.lower.rules import matmul_template
 
     return matmul_template(m, n, k, a_base, b_base, c_base)
@@ -408,6 +431,12 @@ def conv2d_command(
        new code should go through :func:`repro.lower.lower` on a
        ``Conv2dSpec``, which also covers the dW/dX training passes.
     """
+    warnings.warn(
+        "ntx.conv2d_command is deprecated: use repro.lower.lower(Conv2dSpec(...))"
+        " or repro.lower.rules.conv2d_fwd_template for raw templates",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     from repro.lower.rules import conv2d_fwd_template
 
     return conv2d_fwd_template(

@@ -193,7 +193,7 @@ def offload_step_report(cfg: ModelConfig, seq: int, batch: int, *,
     the queue-level block maps the dominant forward GEMM onto per-cluster
     command streams to compare queued vs synchronous offload (§2.2).
     """
-    from repro.lower import MatmulSpec, lower_layer
+    from repro.lower import MatmulSpec, NS_DESIGN, lower_layer, run_timing
     from repro.models import flops
     from repro.runtime import scheduler as rt_sched
 
@@ -215,10 +215,32 @@ def offload_step_report(cfg: ModelConfig, seq: int, batch: int, *,
     layer_progs = {}
     for lname, spec in layer_specs.items():
         progs = layer_progs[lname] = lower_layer(spec)
+        # NS-vs-NTX cycle comparison from the timing executor: the NS design
+        # re-issues one command per output element (tokens x d_out commands —
+        # millions per layer), which only the block-replicated fast path can
+        # simulate; split each program over the clusters first (§3.1).
+        timed = {}
+        for design, prs in (("ntx", progs),
+                            ("ns", lower_layer(spec, design=NS_DESIGN))):
+            total = 0
+            for pr in prs.values():
+                # refine only coarse programs (the NTX single-command GEMMs);
+                # NS streams are already millions of fine-grained commands
+                want = n_clusters * rt_sched.ENGINES_PER_CLUSTER * queue_depth
+                if pr.n_commands < want:
+                    pr = rt_sched.partition_program(
+                        pr, -(-want // pr.n_commands)
+                    )
+                total += run_timing(pr, n_clusters=n_clusters, f_ntx=f_ntx,
+                                    engine="block").total_cycles
+            timed[design] = total
         layers[lname] = {
             "offloads": {p: pr.n_offloads for p, pr in progs.items()},
             "busy_cycles": {p: pr.busy_cycles for p, pr in progs.items()},
             "fwd_bwd_offloads": sum(pr.n_offloads for pr in progs.values()),
+            "fwd_bwd_cycles_timed": timed["ntx"],
+            "fwd_bwd_cycles_timed_ns": timed["ns"],
+            "ns_over_ntx_cycles": timed["ns"] / max(timed["ntx"], 1),
         }
 
     # queue-level view of the dominant GEMM: (tokens x d_ff x d_model)
@@ -383,7 +405,9 @@ def _cli():
                 for lname, info in v.items():
                     offs = info["offloads"]
                     print(f"    {lname}: fwd={offs['fwd']} dw={offs['dw']} "
-                          f"dx={offs['dx']} total={info['fwd_bwd_offloads']}")
+                          f"dx={offs['dx']} total={info['fwd_bwd_offloads']} "
+                          f"timed_cycles={info['fwd_bwd_cycles_timed']} "
+                          f"ns/ntx={info['ns_over_ntx_cycles']:.2f}x")
             else:
                 print(f"  {key}: {v:.4g}" if isinstance(v, float)
                       else f"  {key}: {v}")

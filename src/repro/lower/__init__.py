@@ -10,7 +10,14 @@ One lowering rule per layer type serves the interpreter, the timing model,
 and the TPU backend — see docs/architecture.md ("The lowering pipeline").
 """
 
-from repro.lower.executors import run_pallas, run_reference, run_timing
+from repro.lower.executors import (
+    PLAN_CACHE,
+    PlanCache,
+    run_pallas,
+    run_pallas_network,
+    run_reference,
+    run_timing,
+)
 from repro.lower.ir import (
     ELEM_BYTES,
     CommandBlock,
@@ -41,11 +48,14 @@ __all__ = [
     "NTX_DESIGN",
     "NtxProgram",
     "PASSES",
+    "PLAN_CACHE",
+    "PlanCache",
     "ReluSpec",
     "TensorRegion",
     "lower",
     "lower_layer",
     "run_pallas",
+    "run_pallas_network",
     "run_reference",
     "run_timing",
 ]

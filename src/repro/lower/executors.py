@@ -4,14 +4,18 @@
     numpy TCDM, run every command through
     :func:`repro.core.ntx.ntx_execute` (vectorized fast path by default),
     read the outputs back. Ground truth for the other two.
-  * :func:`run_timing` — the performance model: feed the exact command
-    stream + per-command DMA descriptors to
+  * :func:`run_timing` — the performance model: feed the block structure (or
+    the exact command stream) + per-command DMA descriptors to
     :class:`repro.runtime.scheduler.MultiClusterScheduler` and return its
-    event-driven :class:`ScheduleResult` (queues, back-pressure,
-    double-buffered DMA, chrome-trace timeline).
+    :class:`ScheduleResult`. Programs above ~50k commands take the
+    block-replicated steady-state path automatically — identical cycle
+    counts, O(blocks) wall time — so million-command NS-design convs are
+    cheap to time.
   * :func:`run_pallas` — the production backend: route the lowered layer to
     the Pallas kernels (:mod:`repro.kernels.streaming`,
-    :mod:`repro.kernels.ops`), so "one offload" becomes "one pallas_call".
+    :mod:`repro.kernels.ops`) through a process-wide :class:`PlanCache` of
+    jitted whole-pass executables, so "one offload" becomes "one cached
+    pallas_call" — zero retraces after warmup.
 
 All three consume the same lowered program — a new layer type needs one
 lowering rule, not three backend implementations.
@@ -24,11 +28,6 @@ import numpy as np
 from repro.core.ntx import ntx_execute
 from repro.lower.ir import NtxProgram
 from repro.lower.rules import Conv2dSpec, MatmulSpec, MaxPool2dSpec, ReluSpec
-
-# Keep timing runs bounded: materializing an NS-design program for a big conv
-# would enqueue ~1e6 commands; refuse rather than hang.
-MAX_TIMED_COMMANDS = 250_000
-
 
 # ---------------------------------------------------------------------------
 # 1. Reference executor (numpy TCDM + the ntx_execute interpreter)
@@ -68,7 +67,7 @@ def run_reference(
 
 
 # ---------------------------------------------------------------------------
-# 2. Timing executor (event-driven queue/DMA runtime)
+# 2. Timing executor (event-driven queue/DMA runtime, block fast path)
 # ---------------------------------------------------------------------------
 
 
@@ -78,43 +77,40 @@ def run_timing(
     n_clusters: int = 1,
     cluster=None,
     f_ntx: float = 1.5e9,
-    max_commands: int = MAX_TIMED_COMMANDS,
+    engine: str = "auto",
+    exec_cycles=None,
 ):
     """Simulate ``program`` on the offload runtime; returns a ScheduleResult.
 
     The command stream and the per-command input-DMA byte counts both come
     straight from the lowered program, so the timing model sees exactly what
-    the reference interpreter executes.
+    the reference interpreter executes. ``engine`` picks the simulation
+    strategy (``"auto"`` | ``"event"`` | ``"block"``): the block-replicated
+    steady-state path gives cycle counts identical to the event-driven
+    engine in O(blocks) time, so there is no program-size cap — NS-design
+    convs with millions of commands simulate in milliseconds.
+    ``exec_cycles`` optionally overrides per-command datapath cycles (must
+    not depend on AGU bases on the block path).
     """
     from repro.runtime import scheduler as rt_sched
 
-    n = program.n_commands
-    if n > max_commands:
-        raise ValueError(
-            f"program has {n} commands (> {max_commands}); partition or raise "
-            "max_commands explicitly"
-        )
     sched = rt_sched.MultiClusterScheduler(
         n_clusters=n_clusters, cluster=cluster, f_ntx=f_ntx
     )
-    return sched.schedule_program(program)
+    return sched.schedule_program(program, engine=engine, exec_cycles=exec_cycles)
 
 
 # ---------------------------------------------------------------------------
-# 3. Pallas executor (kernels/streaming.py + kernels/ops.py)
+# 3. Pallas executor (kernels/streaming.py + kernels/ops.py, plan cache)
 # ---------------------------------------------------------------------------
 
 
-def run_pallas(
-    program: NtxProgram,
-    inputs: dict[str, np.ndarray],
-    *,
-    interpret: bool | None = None,
-) -> dict[str, np.ndarray]:
-    """Execute the lowered layer through the Pallas kernels.
+def _plan_callable(spec, pass_: str, interpret: bool):
+    """Pure jax function dict[str, Array] -> dict[str, Array] for one plan.
 
-    ``interpret=None`` picks the Pallas interpreter off-TPU (CPU tests) and
-    the compiled kernel on TPU. Output dict mirrors :func:`run_reference`.
+    Shapes/strides are baked in from ``spec`` (hashable frozen dataclasses),
+    so one callable serves every invocation of that (spec, pass) — this is
+    what :class:`PlanCache` jits and keeps.
     """
     import jax
     import jax.numpy as jnp
@@ -122,80 +118,279 @@ def run_pallas(
     from repro.core import conv_decomp
     from repro.kernels import streaming
 
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-
-    spec = program.meta.get("spec")
-    pass_ = program.meta.get("pass", "fwd")
-    j = {k: jnp.asarray(np.asarray(v, np.float32)) for k, v in inputs.items()}
-
     if isinstance(spec, MatmulSpec):
         if pass_ == "fwd":
-            out = streaming.streaming_matmul(j["a"], j["b"], interpret=interpret)
-            return {"c": np.asarray(out)}
+            return lambda j: {
+                "c": streaming.streaming_matmul(j["a"], j["b"], interpret=interpret)
+            }
         if pass_ == "dw":
-            out = streaming.streaming_matmul(j["a"].T, j["dy"], interpret=interpret)
-            return {"dw": np.asarray(out)}
+            return lambda j: {
+                "dw": streaming.streaming_matmul(j["a"].T, j["dy"], interpret=interpret)
+            }
         if pass_ == "dx":
-            out = streaming.streaming_matmul(j["dy"], j["b"].T, interpret=interpret)
-            return {"dx": np.asarray(out)}
+            return lambda j: {
+                "dx": streaming.streaming_matmul(j["dy"], j["b"].T, interpret=interpret)
+            }
 
     if isinstance(spec, Conv2dSpec):
         s, p = spec.stride, spec.padding
         if pass_ == "fwd":
-            y = streaming.streaming_conv2d(
-                j["x"][None], j["w"], stride=s, padding=p, interpret=interpret
-            )
-            return {"y": np.asarray(y[0])}
+
+            def fwd(j):
+                y = streaming.streaming_conv2d(
+                    j["x"][None], j["w"], stride=s, padding=p, interpret=interpret
+                )
+                return {"y": y[0]}
+
+            return fwd
         if pass_ == "dw":
             # dW = cols(x)^T @ dy: the same im2col the forward kernel streams,
             # with the (oh*ow) output pixels as the contraction dim.
-            x = j["x"][None]
-            if p:
-                x = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
-            oh, ow = spec.out_h, spec.out_w
-            cols = jnp.concatenate(
-                [
-                    x[:, dh : dh + oh * s : s, dw : dw + ow * s : s, :]
-                    for dh in range(spec.kh)
-                    for dw in range(spec.kw)
-                ],
-                axis=-1,
-            ).reshape(oh * ow, spec.kh * spec.kw * spec.cin)
-            dyf = j["dy"].reshape(oh * ow, spec.cout)
-            dw_flat = streaming.streaming_matmul(cols.T, dyf, interpret=interpret)
-            return {
-                "dw": np.asarray(
-                    dw_flat.reshape(spec.kh, spec.kw, spec.cin, spec.cout)
+            def dw(j):
+                x = j["x"][None]
+                if p:
+                    xp = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
+                else:
+                    xp = x
+                oh, ow = spec.out_h, spec.out_w
+                cols = jnp.concatenate(
+                    [
+                        xp[:, dh : dh + oh * s : s, dw_ : dw_ + ow * s : s, :]
+                        for dh in range(spec.kh)
+                        for dw_ in range(spec.kw)
+                    ],
+                    axis=-1,
+                ).reshape(oh * ow, spec.kh * spec.kw * spec.cin)
+                dyf = j["dy"].reshape(oh * ow, spec.cout)
+                dw_flat = streaming.streaming_matmul(
+                    cols.T, dyf, interpret=interpret
                 )
-            }
+                return {
+                    "dw": dw_flat.reshape(spec.kh, spec.kw, spec.cin, spec.cout)
+                }
+
+            return dw
         if pass_ == "dx":
             # The §3.2 phase decomposition with the dense per-phase conv
             # routed through the streaming Pallas kernel.
-            def conv_fn(dy, w_ab, pads):
-                ph, pw = pads
-                dyp = jnp.pad(dy, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
-                return streaming.streaming_conv2d(
-                    dyp, w_ab, stride=1, padding=0, interpret=interpret
-                )
+            def dx(j):
+                def conv_fn(dy, w_ab, pads):
+                    ph, pw = pads
+                    dyp = jnp.pad(dy, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+                    return streaming.streaming_conv2d(
+                        dyp, w_ab, stride=1, padding=0, interpret=interpret
+                    )
 
-            dx = conv_decomp.conv2d_input_grad_decomposed(
-                j["dy"][None], j["w"], s, (spec.in_h, spec.in_w), p,
-                conv_fn=conv_fn,
-            )
-            return {"dx": np.asarray(dx[0])}
+                out = conv_decomp.conv2d_input_grad_decomposed(
+                    j["dy"][None], j["w"], s, (spec.in_h, spec.in_w), p,
+                    conv_fn=conv_fn,
+                )
+                return {"dx": out[0]}
+
+            return dx
 
     if isinstance(spec, MaxPool2dSpec):
-        x = j["x"]
-        w, s = spec.window, spec.stride
-        y = jax.lax.reduce_window(
-            x, -jnp.inf, jax.lax.max, (w, w, 1), (s, s, 1), "VALID"
-        )
-        return {"y": np.asarray(y)}
+        if pass_ == "fwd":
+            w, s = spec.window, spec.stride
+
+            def pool(j):
+                y = jax.lax.reduce_window(
+                    j["x"], -jnp.inf, jax.lax.max, (w, w, 1), (s, s, 1), "VALID"
+                )
+                return {"y": y}
+
+            return pool
 
     if isinstance(spec, ReluSpec):
-        return {"y": np.asarray(jnp.maximum(j["x"], 0.0))}
+        if pass_ == "fwd":
+            return lambda j: {"y": jnp.maximum(j["x"], 0.0)}
+        if pass_ == "dx":
+            # ReLU backward has no lowering rule (pure mask), but routing it
+            # through a cached plan keeps run_pallas_network retrace-free.
+            return lambda j: {"dx": jnp.where(j["x"] > 0.0, j["dy"], 0.0)}
 
     raise TypeError(
         f"no Pallas route for spec {type(spec).__name__} pass {pass_!r}"
     )
+
+
+class CompiledPlan:
+    """One jitted whole-pass executable plus its jax trace counter.
+
+    ``traces`` increments each time jax (re-)traces the underlying function
+    — after warmup on fixed shapes it must stay at 1, which the tests and
+    the ``pallas_plan_cache`` benchmark assert.
+    """
+
+    __slots__ = ("key", "fn", "traces", "calls")
+
+    def __init__(self, key):
+        self.key = key
+        self.fn = None
+        self.traces = 0
+        self.calls = 0
+
+    def __call__(self, inputs):
+        self.calls += 1
+        return self.fn(inputs)
+
+
+class PlanCache:
+    """Compiled-program cache for the Pallas executor.
+
+    Keyed by ``(spec, pass, design, interpret)`` — specs are frozen
+    dataclasses carrying every static shape/stride, so two programs lowered
+    from equal specs share one jitted executable. The cache is unbounded
+    (one entry per distinct layer shape in the process); :meth:`clear`
+    drops everything.
+    """
+
+    def __init__(self):
+        self._plans: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def clear(self) -> None:
+        self._plans.clear()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, spec, pass_: str, design: str, interpret: bool) -> CompiledPlan:
+        key = (spec, pass_, design, bool(interpret))
+        plan = self._plans.get(key)
+        if plan is not None:
+            self.hits += 1
+            return plan
+        self.misses += 1
+        import jax
+
+        plan = CompiledPlan(key)
+        raw = _plan_callable(spec, pass_, bool(interpret))
+
+        def counted(j):
+            plan.traces += 1
+            return raw(j)
+
+        plan.fn = jax.jit(counted)
+        self._plans[key] = plan
+        return plan
+
+
+#: Process-wide default cache; pass ``cache=`` to isolate (tests, benchmarks).
+PLAN_CACHE = PlanCache()
+
+
+def _resolve_interpret(interpret):
+    if interpret is not None:
+        return bool(interpret)
+    import jax
+
+    return jax.default_backend() != "tpu"
+
+
+def run_pallas(
+    program: NtxProgram,
+    inputs: dict,
+    *,
+    interpret: bool | None = None,
+    cache: PlanCache | None = None,
+):
+    """Execute the lowered layer through the cached Pallas plans.
+
+    ``interpret=None`` picks the Pallas interpreter off-TPU (CPU tests) and
+    the compiled kernel on TPU. Inputs may be numpy or ``jax.Array`` —
+    device arrays pass straight through (no host round trip) — and outputs
+    are ``jax.Array``s keyed like :func:`run_reference`'s output dict.
+    Repeated calls on equal specs reuse one jitted executable from
+    ``cache`` (default: the process-wide :data:`PLAN_CACHE`).
+    """
+    import jax.numpy as jnp
+
+    interpret = _resolve_interpret(interpret)
+    spec = program.meta.get("spec")
+    pass_ = program.meta.get("pass", "fwd")
+    if cache is None:
+        cache = PLAN_CACHE
+    plan = cache.get(spec, pass_, program.design.name, interpret)
+    j = {k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()}
+    return plan(j)
+
+
+def run_pallas_network(
+    specs,
+    x,
+    params,
+    dy=None,
+    *,
+    interpret: bool | None = None,
+    cache: PlanCache | None = None,
+    design: str = "ntx",
+):
+    """One whole fwd + dW + dX chain through cached plans — no per-layer
+    retrace.
+
+    ``specs`` is a shape-chained layer sequence (``Conv2dSpec`` /
+    ``MatmulSpec`` / ``ReluSpec`` / ``MaxPool2dSpec``); ``params`` is
+    aligned with it (weight array for conv/matmul, ``None`` otherwise).
+    The forward pass threads ``x`` through every layer; the backward pass
+    threads ``dy`` (default: ones over the final output) back, producing
+    the input gradient and one weight gradient per parameterized layer.
+    Every layer-pass executes through ``cache`` — after one warmup call,
+    repeated invocations with the same shapes trigger zero retraces.
+
+    Pooling layers are forward-only (no dX lowering yet): a chain that
+    contains one raises ``NotImplementedError`` when the backward pass is
+    requested, i.e. always — keep pools out of training chains for now.
+
+    Returns ``{"y": ..., "dx": ..., "dw": [per-layer grads or None]}``.
+    """
+    import jax.numpy as jnp
+
+    interpret = _resolve_interpret(interpret)
+    if cache is None:
+        cache = PLAN_CACHE
+    if len(specs) != len(params):
+        raise ValueError(f"{len(specs)} specs but {len(params)} param entries")
+
+    def plan(spec, pass_):
+        return cache.get(spec, pass_, design, interpret)
+
+    # forward: keep each layer's input for the backward pass
+    a = jnp.asarray(x, jnp.float32)
+    acts = []
+    for spec, w in zip(specs, params):
+        acts.append(a)
+        if isinstance(spec, MatmulSpec):
+            a = plan(spec, "fwd")({"a": a, "b": jnp.asarray(w, jnp.float32)})["c"]
+        elif isinstance(spec, Conv2dSpec):
+            a = plan(spec, "fwd")({"x": a, "w": jnp.asarray(w, jnp.float32)})["y"]
+        elif isinstance(spec, (ReluSpec, MaxPool2dSpec)):
+            a = plan(spec, "fwd")({"x": a})["y"]
+        else:
+            raise TypeError(f"no network route for {type(spec).__name__}")
+    y = a
+
+    # backward: dX chains in reverse, dW drops out per parameterized layer
+    g = jnp.ones_like(y) if dy is None else jnp.asarray(dy, jnp.float32)
+    dws: list = [None] * len(specs)
+    for idx in range(len(specs) - 1, -1, -1):
+        spec, w, a_in = specs[idx], params[idx], acts[idx]
+        if isinstance(spec, MatmulSpec):
+            wj = jnp.asarray(w, jnp.float32)
+            dws[idx] = plan(spec, "dw")({"a": a_in, "dy": g})["dw"]
+            g = plan(spec, "dx")({"dy": g, "b": wj})["dx"]
+        elif isinstance(spec, Conv2dSpec):
+            wj = jnp.asarray(w, jnp.float32)
+            dws[idx] = plan(spec, "dw")({"x": a_in, "dy": g})["dw"]
+            g = plan(spec, "dx")({"dy": g, "w": wj})["dx"]
+        elif isinstance(spec, ReluSpec):
+            g = plan(spec, "dx")({"x": a_in, "dy": g})["dx"]
+        else:
+            raise NotImplementedError(
+                f"{type(spec).__name__} has no backward lowering — "
+                "training chains must avoid pooling for now"
+            )
+    return {"y": y, "dx": g, "dw": dws}

@@ -222,6 +222,19 @@ class NtxProgram:
             for _ in range(b.n_commands):
                 yield b.dma_bytes_in
 
+    def block_segments(self) -> Iterator[tuple[NtxCommand, int, float]]:
+        """(template, n_commands, dma_bytes_in) per block, in program order.
+
+        Every command a block replicates shares the template's loop bounds
+        and AGU population (only bases are rebased) and the block's
+        per-command DMA bytes, so this stream describes the whole program to
+        the timing model without materializing commands — the contract the
+        block-replicated fast path of
+        :func:`repro.runtime.cmdqueue.simulate_offload_blocks` builds on.
+        """
+        for b in self.blocks:
+            yield b.template, b.n_commands, b.dma_bytes_in
+
     def summary(self) -> dict[str, Any]:
         return {
             "name": self.name,

@@ -24,9 +24,11 @@ commands are issued in program order per engine.
 
 from __future__ import annotations
 
+import bisect
 import math
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Sequence
+from typing import Callable, Iterable, Sequence
 
 from repro.core.ntx import MAX_LOOPS, NtxCommand
 
@@ -91,17 +93,21 @@ class CommandQueue:
             raise ValueError("queue depth must be >= 1")
         self.depth = depth
         self.records: list[QueueRecord] = []
+        self._issues: list[int] = []  # sorted copies of the record timestamps,
+        self._retires: list[int] = []  # so occupancy/free_at are O(log n)
 
     def occupancy(self, t: int) -> int:
-        return sum(1 for r in self.records if r.issue_t <= t < r.retire_t)
+        return bisect.bisect_right(self._issues, t) - bisect.bisect_right(
+            self._retires, t
+        )
 
     def free_at(self, t: int) -> int:
         """Earliest time >= t at which a new command may be issued."""
-        live = sorted(r.retire_t for r in self.records if r.retire_t > t)
-        if len(live) < self.depth:
+        live = len(self._retires) - bisect.bisect_right(self._retires, t)
+        if live < self.depth:
             return t
         # the oldest of the newest `depth` in-flight retires first
-        return live[-self.depth]
+        return self._retires[len(self._retires) - self.depth]
 
     def push(self, record: QueueRecord) -> None:
         if self.occupancy(record.issue_t) >= self.depth:
@@ -110,6 +116,8 @@ class CommandQueue:
                 f"t={record.issue_t}"
             )
         self.records.append(record)
+        bisect.insort(self._issues, record.issue_t)
+        bisect.insort(self._retires, record.retire_t)
 
 
 @dataclass(frozen=True)
@@ -143,6 +151,9 @@ class OffloadTrace:
     records: list[QueueRecord]
     queues: list[CommandQueue]
     stats: OffloadStats
+    # commands whose records were not materialized (block-replicated fast
+    # path, or the record cap): the stats still account for every command.
+    elided_commands: int = 0
 
 
 def simulate_offload(
@@ -252,6 +263,228 @@ def simulate_offload(
         overhead_cycles=overhead,
     )
     return OffloadTrace(records=records, queues=queues, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Block-replicated steady-state simulation
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BlockSegment:
+    """A run of ``count`` timing-identical commands (one CommandBlock's share).
+
+    Every command materialized from a :class:`repro.lower.ir.CommandBlock`
+    has the same loop bounds, the same AGU population, and the same
+    per-command input-DMA bytes — only the AGU *bases* differ between
+    replicas, and no timing quantity (:func:`program_cycles`,
+    ``busy_cycles``, transfer cycles) depends on a base. A segment therefore
+    describes a block's whole command stream to the timing model without
+    materializing it.
+    """
+
+    template: NtxCommand
+    count: int
+    dma_cycles: int = 0
+
+
+def simulate_offload_blocks(
+    segments: Iterable[BlockSegment],
+    *,
+    n_engines: int = 8,
+    queue_depth: int = 4,
+    sync: bool = False,
+    exec_cycles: Callable[[NtxCommand], float] | None = None,
+    dma_overlap: bool = True,
+    dma_buffers: int = 2,
+    max_records: int = 50_000,
+) -> OffloadTrace:
+    """Bit-exact :func:`simulate_offload` over block-replicated command runs.
+
+    Each segment is simulated event-by-event only until the queue/DMA
+    pipeline reaches **steady state** — one full engine round (``n_engines``
+    consecutive commands) advancing every live timestamp by the same delta —
+    after which the remaining rounds are replicated analytically. The update
+    rules are max-plus (``max()`` and ``+`` of per-segment constants), so a
+    uniformly shifted state reproduces a uniformly shifted round exactly:
+    the analytic tail is cycle-identical to what event-by-event simulation
+    would produce, and segment boundaries stitch on the exact carried state
+    (per-engine busy/DMA horizons, tile-buffer and queue-slot history).
+
+    ``exec_cycles`` must not depend on AGU bases (the default —
+    ``busy_cycles`` — never does). Stats match :func:`simulate_offload` on
+    the expanded stream bit for bit; records are materialized only up to
+    ``max_records``, ``elided_commands`` counts the rest, and fast-path
+    records carry the segment template rather than rebased AGU bases.
+
+    The per-command update rules below deliberately *duplicate* (rather
+    than share) :func:`simulate_offload`'s pipeline step: the two engines
+    are kept as independent implementations of the same contract so the
+    randomized exact-equality tests in ``tests/test_timing_fast.py`` check
+    one against the other instead of one implementation against itself.
+    Any behavioural change must be made in both and survives those tests.
+    """
+    exec_fn = exec_cycles or (lambda c: c.busy_cycles)
+    depth = 1 if sync else queue_depth
+    n_eng = n_engines
+    busy = [0] * n_eng
+    dma_busy = [0] * n_eng
+    exec_hist = [deque(maxlen=dma_buffers) for _ in range(n_eng)]
+    retire_hist = [deque(maxlen=depth) for _ in range(n_eng)]
+    queues = [CommandQueue(depth) for _ in range(n_eng)]
+    records: list[QueueRecord] = []
+
+    state = {
+        "t_driver": 0, "driver_busy": 0, "queue_stall": 0, "dma_stall": 0,
+        "exec_total": 0, "dma_total": 0, "n_commands": 0, "elided": 0,
+        "max_retire": 0, "i": 0,
+    }
+    per_engine_exec = [0] * n_eng
+
+    for seg in segments:
+        if seg.count <= 0:
+            continue
+        cmd = seg.template
+        prog = program_cycles(cmd)
+        ec = int(math.ceil(exec_fn(cmd)))
+        dc = int(math.ceil(seg.dma_cycles))
+        include_dma = dc > 0
+
+        def step():
+            s = state
+            e = s["i"] % n_eng
+            h = retire_hist[e]
+            t_driver = s["t_driver"]
+            # queue back-pressure (free_at over the last `depth` retires)
+            if len(h) == depth and h[0] > t_driver:
+                t_free = h[0]
+                s["queue_stall"] += t_free - t_driver
+            else:
+                t_free = t_driver
+            prog_start = t_free
+            issue_t = prog_start + prog
+            s["driver_busy"] += prog
+            if dc:
+                if dma_overlap:
+                    eh = exec_hist[e]
+                    slot_free = eh[0] if len(eh) == dma_buffers else 0
+                    dma_start = max(issue_t, dma_busy[e], slot_free)
+                else:
+                    dma_start = max(issue_t, busy[e])
+                dma_end = dma_start + dc
+                dma_busy[e] = dma_end
+            else:
+                dma_start = dma_end = issue_t
+            ready = busy[e] if busy[e] > issue_t else issue_t
+            exec_start = dma_end if dma_end > ready else ready
+            s["dma_stall"] += exec_start - ready
+            retire_t = exec_start + ec
+            busy[e] = retire_t
+            exec_hist[e].append(retire_t)
+            h.append(retire_t)
+            s["exec_total"] += ec
+            s["dma_total"] += dc
+            per_engine_exec[e] += ec
+            s["n_commands"] += 1
+            s["i"] += 1
+            if retire_t > s["max_retire"]:
+                s["max_retire"] = retire_t
+            if len(records) < max_records:
+                rec = QueueRecord(cmd, e, prog_start, issue_t, dma_start,
+                                  dma_end, exec_start, retire_t)
+                queues[e].push(rec)
+                records.append(rec)
+            else:
+                s["elided"] += 1
+            if sync:
+                s["t_driver"] = retire_t + SYNC_ROUNDTRIP_CYCLES
+                s["driver_busy"] += SYNC_ROUNDTRIP_CYCLES
+            else:
+                s["t_driver"] = issue_t
+
+        def signature():
+            sig = [state["t_driver"]]
+            sig += busy
+            if include_dma:
+                sig += dma_busy
+            for h in exec_hist:
+                sig.extend(h)
+            for h in retire_hist:
+                sig.extend(h)
+            return sig
+
+        remaining = seg.count
+        prev_sig = None
+        qs_mark, ds_mark = state["queue_stall"], state["dma_stall"]
+        qs_round = ds_round = 0
+        steady = False
+        delta = 0
+        while remaining >= n_eng:
+            for _ in range(n_eng):
+                step()
+            remaining -= n_eng
+            qs_round = state["queue_stall"] - qs_mark
+            ds_round = state["dma_stall"] - ds_mark
+            qs_mark, ds_mark = state["queue_stall"], state["dma_stall"]
+            sig = signature()
+            if prev_sig is not None and len(sig) == len(prev_sig):
+                delta = sig[0] - prev_sig[0]
+                if delta > 0 and all(
+                    a - b == delta for a, b in zip(sig, prev_sig)
+                ):
+                    steady = True
+                    break
+            prev_sig = sig
+
+        if steady and remaining >= n_eng:
+            rounds = remaining // n_eng
+            remaining -= rounds * n_eng
+            shift = rounds * delta
+            state["t_driver"] += shift
+            state["max_retire"] = max(
+                state["max_retire"], max(busy) + shift
+            )
+            state["queue_stall"] += rounds * qs_round
+            state["dma_stall"] += rounds * ds_round
+            state["driver_busy"] += rounds * n_eng * (
+                prog + (SYNC_ROUNDTRIP_CYCLES if sync else 0)
+            )
+            state["exec_total"] += rounds * n_eng * ec
+            state["dma_total"] += rounds * n_eng * dc
+            state["n_commands"] += rounds * n_eng
+            state["elided"] += rounds * n_eng
+            state["i"] += rounds * n_eng
+            for e in range(n_eng):
+                busy[e] += shift
+                per_engine_exec[e] += rounds * ec
+                if include_dma:
+                    dma_busy[e] += shift
+                exec_hist[e] = deque(
+                    (x + shift for x in exec_hist[e]), maxlen=dma_buffers
+                )
+                retire_hist[e] = deque(
+                    (x + shift for x in retire_hist[e]), maxlen=depth
+                )
+        while remaining > 0:
+            step()
+            remaining -= 1
+
+    total = state["max_retire"]
+    stats = OffloadStats(
+        n_commands=state["n_commands"],
+        n_engines=n_eng,
+        queue_depth=depth,
+        sync=sync,
+        total_cycles=total,
+        exec_cycles=state["exec_total"],
+        dma_cycles=state["dma_total"],
+        driver_cycles=state["driver_busy"],
+        dma_stall_cycles=state["dma_stall"],
+        queue_stall_cycles=state["queue_stall"],
+        overhead_cycles=total - max(per_engine_exec, default=0),
+    )
+    return OffloadTrace(records=records, queues=queues, stats=stats,
+                        elided_commands=state["elided"])
 
 
 def overhead_reduction(

@@ -22,6 +22,7 @@ a transfer) vs buffer stall (transfer waited on a free buffer).
 
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass
 from typing import Sequence
@@ -61,6 +62,13 @@ class Transfer:
     word_stride: int = 1
 
 
+@functools.lru_cache(maxsize=4096)
+def _transfer_cycles(num_bytes: float, word_stride: int,
+                     bytes_per_cycle: float, eta: float, banks: int) -> int:
+    eff = bytes_per_cycle * eta / bank_conflict_factor(word_stride, banks)
+    return int(math.ceil(num_bytes / eff))
+
+
 @dataclass(frozen=True)
 class DmaConfig:
     bytes_per_cycle: float = R_D_BYTES_PER_CYCLE
@@ -69,10 +77,11 @@ class DmaConfig:
     banks: int = TCDM_BANKS
 
     def transfer_cycles(self, t: Transfer) -> int:
-        eff = self.bytes_per_cycle * self.eta / bank_conflict_factor(
-            t.word_stride, self.banks
-        )
-        return int(math.ceil(t.num_bytes / eff))
+        # memoized: the event-driven scheduler evaluates this once per
+        # command, and block-replicated programs repeat a handful of
+        # (bytes, stride) pairs across hundreds of thousands of commands
+        return _transfer_cycles(t.num_bytes, t.word_stride,
+                                self.bytes_per_cycle, self.eta, self.banks)
 
     def capped(self, n_clusters: int, f_ntx: float) -> "DmaConfig":
         """This config with the per-cluster share of the vault crossbar."""

@@ -25,18 +25,28 @@ from __future__ import annotations
 
 import json
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Sequence
 
 from repro.core.ntx import Agu, NtxCommand
 from repro.runtime import dma as dma_mod
-from repro.runtime.cmdqueue import OffloadTrace, simulate_offload
+from repro.runtime.cmdqueue import (
+    BlockSegment,
+    OffloadTrace,
+    simulate_offload,
+    simulate_offload_blocks,
+)
 
 # Compute-side calibration, identical to benchmarks/ntx_model.py (pinned by a
 # test there): per-kernel NTX utilization and full-network derating.
 ETA_COMPUTE = 0.84
 ETA_NET = 0.855
 ENGINES_PER_CLUSTER = 8  # NTX co-processors per RISC-V driver (§2.1)
+
+# schedule_program(engine="auto"): programs above this command count take the
+# block-replicated steady-state path (identical cycle counts, O(blocks) time);
+# below it the full event-driven run keeps complete per-command traces.
+BLOCK_ENGINE_THRESHOLD = 50_000
 
 
 # ---------------------------------------------------------------------------
@@ -92,6 +102,46 @@ def partition_command(cmd: NtxCommand, parts: int) -> list[NtxCommand]:
         )
         start += sz
     return out
+
+
+def partition_program(program, parts: int):
+    """Refine a lowered program's blocks into up to ``parts`` template pieces.
+
+    Each block's command *template* is split along its outermost splittable
+    free loop (:func:`partition_command`, which refuses to tear accumulation
+    regions — such blocks stay whole); every piece keeps the block's driver
+    replication loops, so a block with ``n`` commands becomes up to
+    ``parts`` blocks of ``n`` commands each. Executing the refined program
+    is bit-identical to the original (the pieces partition each command's
+    iteration space), but the finer offload granularity is what lets one
+    layer fill many clusters x engines — §3.1's tiling applied at the
+    program level. Per-command DMA descriptors are scaled so total traffic
+    is preserved.
+    """
+    from repro.lower.ir import NtxProgram
+
+    new_blocks = []
+    for b in program.blocks:
+        try:
+            pieces = partition_command(b.template, parts)
+        except ValueError:
+            pieces = [b.template]
+        for p in pieces:
+            new_blocks.append(
+                replace(
+                    b,
+                    template=p,
+                    dma_bytes_in=b.dma_bytes_in / len(pieces),
+                    dma_bytes_out=b.dma_bytes_out / len(pieces),
+                )
+            )
+    return NtxProgram(
+        name=f"{program.name}:part{parts}",
+        blocks=new_blocks,
+        regions=program.regions,
+        design=program.design,
+        meta={**program.meta, "partitioned": parts},
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -188,6 +238,8 @@ class ScheduleResult:
                                       for t in self.cluster_traces),
             "overhead_cycles": sum(t.stats.overhead_cycles
                                    for t in self.cluster_traces),
+            "elided_commands": sum(t.elided_commands
+                                   for t in self.cluster_traces),
         }
 
 
@@ -216,6 +268,7 @@ class MultiClusterScheduler:
         commands: Sequence[NtxCommand] | Sequence[Sequence[NtxCommand]],
         *,
         bytes_per_command: Sequence[float] | None = None,
+        exec_cycles=None,
     ) -> ScheduleResult:
         """Simulate ``commands`` over the clusters.
 
@@ -254,6 +307,7 @@ class MultiClusterScheduler:
                 n_engines=self.cluster.n_engines,
                 queue_depth=self.cluster.queue_depth,
                 sync=self.cluster.sync,
+                exec_cycles=exec_cycles,
                 dma_cycles=dma_cycles,
                 dma_overlap=self.cluster.dma_overlap,
                 dma_buffers=self._dma.n_buffers,
@@ -262,18 +316,81 @@ class MultiClusterScheduler:
             traces.append(trace)
         return ScheduleResult(cluster_traces=traces, timeline=timeline)
 
-    def schedule_program(self, program) -> ScheduleResult:
+    def program_segments(self, program) -> list[list[BlockSegment]]:
+        """Per-cluster :class:`BlockSegment` lists for ``program``.
+
+        Reproduces exactly the round-robin deal of :meth:`schedule` — global
+        command ``i`` lands on cluster ``i % n_clusters`` at bucket position
+        ``i // n_clusters`` — without materializing a single command: each
+        block contributes one segment per cluster, sized by how many of the
+        block's replicas fall on that cluster.
+        """
+        segs: list[list[BlockSegment]] = [[] for _ in range(self.n_clusters)]
+        g = 0  # global index of the block's first command
+        for template, count, dma_bytes_in in program.block_segments():
+            dc = (
+                self._dma.transfer_cycles(dma_mod.Transfer(dma_bytes_in))
+                if dma_bytes_in
+                else 0
+            )
+            for c in range(self.n_clusters):
+                first = g + ((c - g) % self.n_clusters)
+                if first < g + count:
+                    share = (g + count - 1 - first) // self.n_clusters + 1
+                    segs[c].append(BlockSegment(template, share, dc))
+            g += count
+        return segs
+
+    def schedule_program(self, program, *, engine: str = "auto",
+                         exec_cycles=None) -> ScheduleResult:
         """Simulate a lowered :class:`repro.lower.NtxProgram`.
 
         The command stream and the per-command DMA byte counts both come
         from the program — this is the timing-executor entry point
-        (:func:`repro.lower.executors.run_timing` wraps it with a size
-        guard).
+        (:func:`repro.lower.executors.run_timing` wraps it).
+
+        ``engine`` selects the simulation strategy:
+
+          * ``"event"`` — materialize every command and run the full
+            event-driven simulation (complete per-command traces).
+          * ``"block"`` — the block-replicated steady-state fast path
+            (:func:`repro.runtime.cmdqueue.simulate_offload_blocks`):
+            identical cycle counts, O(blocks) instead of O(commands).
+          * ``"auto"`` — ``"block"`` above ``BLOCK_ENGINE_THRESHOLD``
+            commands, ``"event"`` below.
+
+        ``exec_cycles`` overrides per-command datapath cycles (e.g. an
+        eta-derated ``busy_cycles``); on the block path it must not depend
+        on AGU bases.
         """
-        return self.schedule(
-            list(program.commands()),
-            bytes_per_command=list(program.command_dma_bytes()),
-        )
+        if engine == "auto":
+            engine = (
+                "block" if program.n_commands > BLOCK_ENGINE_THRESHOLD
+                else "event"
+            )
+        if engine == "event":
+            return self.schedule(
+                list(program.commands()),
+                bytes_per_command=list(program.command_dma_bytes()),
+                exec_cycles=exec_cycles,
+            )
+        if engine != "block":
+            raise ValueError(f"unknown timing engine {engine!r}")
+        timeline = Timeline()
+        traces = []
+        for c, segs in enumerate(self.program_segments(program)):
+            trace = simulate_offload_blocks(
+                segs,
+                n_engines=self.cluster.n_engines,
+                queue_depth=self.cluster.queue_depth,
+                sync=self.cluster.sync,
+                exec_cycles=exec_cycles,
+                dma_overlap=self.cluster.dma_overlap,
+                dma_buffers=self._dma.n_buffers,
+            )
+            timeline.add_trace(c, trace)
+            traces.append(trace)
+        return ScheduleResult(cluster_traces=traces, timeline=timeline)
 
 
 # ---------------------------------------------------------------------------

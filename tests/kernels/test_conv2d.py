@@ -6,6 +6,7 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.conv2d import conv2d_ntx
+from repro.lower.rules import conv2d_fwd_template
 
 CASES = [
     # (n, h, w, cin, kh, kw, cout, stride)
@@ -40,7 +41,7 @@ def test_conv_matches_ntx_interpreter():
     mem = np.zeros(4000, np.float32)
     mem[: x.size] = x.ravel()
     mem[200 : 200 + w.size] = w.ravel()
-    cmd = ntx.conv2d_command(ih, iw, ci, kh, kw, 1, 0, 200, 300)
+    cmd = conv2d_fwd_template(ih, iw, ci, kh, kw, 1, 0, 200, 300)
     out = ntx.ntx_execute(cmd, mem)
     oh, ow = ih - kh + 1, iw - kw + 1
     want = out[300 : 300 + oh * ow].reshape(oh, ow)

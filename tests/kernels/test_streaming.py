@@ -6,6 +6,7 @@ import pytest
 
 from repro.core import ntx
 from repro.kernels import ref, streaming
+from repro.lower.rules import matmul_template
 
 SHAPES = [
     (128, 128, 128),
@@ -46,7 +47,7 @@ def test_streaming_matmul_matches_ntx_interpreter():
     mem = np.zeros(1000, np.float32)
     mem[: m * k] = a.ravel()
     mem[200 : 200 + k * n] = b.ravel()
-    cmd = ntx.matmul_command(m, n, k, 0, 200, 500)
+    cmd = matmul_template(m, n, k, 0, 200, 500)
     want = ntx.ntx_execute(cmd, mem)[500 : 500 + m * n].reshape(m, n)
     got = streaming.streaming_matmul(jnp.asarray(a), jnp.asarray(b), interpret=True)
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)

@@ -8,6 +8,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import ntx
+from repro.lower.rules import conv2d_fwd_template, matmul_template
 
 
 @settings(max_examples=50, deadline=None)
@@ -30,7 +31,7 @@ def test_interpreter_matmul(m, n, k):
     mem = np.zeros(500, np.float32)
     mem[: m * k] = a.ravel()
     mem[100 : 100 + k * n] = b.ravel()
-    cmd = ntx.matmul_command(m, n, k, 0, 100, 300)
+    cmd = matmul_template(m, n, k, 0, 100, 300)
     out = ntx.ntx_execute(cmd, mem)
     np.testing.assert_allclose(out[300 : 300 + m * n].reshape(m, n), a @ b, rtol=1e-5)
 
@@ -44,7 +45,7 @@ def test_interpreter_wide_beats_fpu():
     mem = np.zeros(3 * k + 10, np.float32)
     mem[:k] = a.ravel()
     mem[k : 2 * k] = b.ravel()
-    cmd = ntx.matmul_command(1, 1, k, 0, k, 3 * k)
+    cmd = matmul_template(1, 1, k, 0, k, 3 * k)
     ref = np.dot(a.astype(np.float64), b.astype(np.float64))[0, 0]
     wide = ntx.ntx_execute(cmd, mem, wide=True)[3 * k]
     fpu = ntx.ntx_execute(cmd, mem, wide=False)[3 * k]
@@ -74,7 +75,7 @@ def test_conv_command_matches_numpy():
     mem = np.zeros(2000, np.float32)
     mem[: x.size] = x.ravel()
     mem[500 : 500 + w.size] = w.ravel()
-    cmd = ntx.conv2d_command(ih, iw, ci, kh, kw, 1, 0, 500, 1000)
+    cmd = conv2d_fwd_template(ih, iw, ci, kh, kw, 1, 0, 500, 1000)
     out = ntx.ntx_execute(cmd, mem)
     oh, ow = ih - kh + 1, iw - kw + 1
     got = out[1000 : 1000 + oh * ow].reshape(oh, ow)
@@ -99,7 +100,7 @@ def test_command_semantics_match_pallas_matmul():
     mem = np.zeros(1000, np.float32)
     mem[: m * k] = a.ravel()
     mem[200 : 200 + k * n] = b.ravel()
-    cmd = ntx.matmul_command(m, n, k, 0, 200, 500)
+    cmd = matmul_template(m, n, k, 0, 200, 500)
     want = ntx.ntx_execute(cmd, mem)[500 : 500 + m * n].reshape(m, n)
     got = ops.matmul(jnp.asarray(a), jnp.asarray(b), backend="interpret")
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)

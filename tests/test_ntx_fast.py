@@ -15,6 +15,7 @@ import pytest
 
 from repro.core import ntx
 from repro.core.ntx import MAX_LOOPS, Agu, NtxCommand
+from repro.lower.rules import conv2d_fwd_template, matmul_template
 
 
 def _both(cmd, mem, wide=True):
@@ -26,7 +27,7 @@ def _both(cmd, mem, wide=True):
 def test_matmul_bit_identical_both_widths():
     rng = np.random.RandomState(0)
     mem = rng.randn(3 * 32 * 32 + 8).astype(np.float32)
-    cmd = ntx.matmul_command(32, 32, 32, 0, 32 * 32, 2 * 32 * 32)
+    cmd = matmul_template(32, 32, 32, 0, 32 * 32, 2 * 32 * 32)
     for wide in (True, False):
         slow, fast = _both(cmd, mem, wide=wide)
         np.testing.assert_array_equal(slow, fast)
@@ -38,7 +39,7 @@ def test_conv_command_bit_identical():
     mem = np.zeros(2000, np.float32)
     mem[: ih * iw * ci] = rng.randn(ih * iw * ci)
     mem[600 : 600 + kh * kw * ci] = rng.randn(kh * kw * ci)
-    cmd = ntx.conv2d_command(ih, iw, ci, kh, kw, 1, 0, 600, 1200)
+    cmd = conv2d_fwd_template(ih, iw, ci, kh, kw, 1, 0, 600, 1200)
     slow, fast = _both(cmd, mem)
     np.testing.assert_array_equal(slow, fast)
 
@@ -111,7 +112,7 @@ def test_fast_path_20x_on_64cube_matmul():
     matmul command, bit-identical results (measured ~100x)."""
     rng = np.random.RandomState(4)
     mem = rng.randn(3 * 64 * 64).astype(np.float32)
-    cmd = ntx.matmul_command(64, 64, 64, 0, 64 * 64, 2 * 64 * 64)
+    cmd = matmul_template(64, 64, 64, 0, 64 * 64, 2 * 64 * 64)
 
     t0 = time.perf_counter()
     slow = ntx.ntx_execute(cmd, mem, vectorize=False)
@@ -128,7 +129,7 @@ def test_fast_path_20x_on_64cube_matmul():
 def test_inplace_execution_mutates_and_matches():
     rng = np.random.RandomState(5)
     mem = rng.randn(200).astype(np.float32)
-    cmd = ntx.matmul_command(4, 5, 6, 0, 60, 120)
+    cmd = matmul_template(4, 5, 6, 0, 60, 120)
     copied = ntx.ntx_execute(cmd, mem)
     inplace = mem.copy()
     ret = ntx.ntx_execute(cmd, inplace, inplace=True)

@@ -10,6 +10,7 @@ import pytest
 
 from repro.core import ntx
 from repro.core.ntx import Agu, MAX_LOOPS, NtxCommand
+from repro.lower.rules import matmul_template
 
 
 def _agu(base, *strides):
@@ -135,7 +136,7 @@ def test_wide_false_rounds_every_fma():
     a = (rng.randn(k) * 10.0 ** rng.uniform(-3, 3, k)).astype(np.float32)
     b = rng.randn(k).astype(np.float32)
     mem = np.concatenate([a, b, np.zeros(1, np.float32)])
-    cmd = ntx.matmul_command(1, 1, k, 0, k, 2 * k)
+    cmd = matmul_template(1, 1, k, 0, k, 2 * k)
     ref = float(np.dot(a.astype(np.float64), b.astype(np.float64)))
     wide = float(ntx.ntx_execute(cmd, mem, wide=True)[2 * k])
     narrow = float(ntx.ntx_execute(cmd, mem, wide=False)[2 * k])

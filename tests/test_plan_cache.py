@@ -1,0 +1,155 @@
+"""Pallas plan cache: jitted whole-pass executables, zero retraces after
+warmup, device-array passthrough, and the whole-chain network executor.
+
+Trace counts are asserted through ``CompiledPlan.traces`` — a counter
+incremented inside the traced function, so it ticks exactly when jax
+(re-)traces. All runs use interpret mode on CPU; numerics are checked
+against the ``run_reference`` interpreter (itself oracle-checked in
+test_lower.py).
+"""
+
+import numpy as np
+import pytest
+
+from repro.lower import (
+    Conv2dSpec,
+    MatmulSpec,
+    PlanCache,
+    ReluSpec,
+    lower,
+    run_pallas,
+    run_pallas_network,
+    run_reference,
+)
+
+jnp = pytest.importorskip("jax.numpy")
+
+
+def _rand(rng, *shape):
+    return rng.randn(*shape).astype(np.float32)
+
+
+def test_repeated_calls_hit_cache_zero_retraces():
+    rng = np.random.RandomState(0)
+    m, n, k = 8, 6, 12
+    spec = MatmulSpec(m, n, k)
+    prog = lower(spec, "fwd")
+    a, b = _rand(rng, m, k), _rand(rng, k, n)
+    cache = PlanCache()
+    for _ in range(4):
+        out = run_pallas(prog, {"a": a, "b": b}, cache=cache)
+    np.testing.assert_allclose(np.asarray(out["c"]), a @ b, rtol=1e-4, atol=1e-4)
+    assert len(cache) == 1
+    assert cache.misses == 1 and cache.hits == 3
+    (plan,) = cache._plans.values()
+    assert plan.traces == 1, "retraced after warmup"
+    assert plan.calls == 4
+
+
+def test_equal_specs_share_one_plan():
+    """The key is the spec value, not the program object: two independently
+    lowered programs from equal specs reuse one executable."""
+    rng = np.random.RandomState(1)
+    spec = Conv2dSpec(8, 8, 3, 3, 3, 4, padding=1)
+    x, w = _rand(rng, 8, 8, 3), _rand(rng, 3, 3, 3, 4)
+    cache = PlanCache()
+    run_pallas(lower(spec, "fwd"), {"x": x, "w": w}, cache=cache)
+    run_pallas(lower(spec, "fwd"), {"x": x, "w": w}, cache=cache)
+    assert len(cache) == 1 and cache.hits == 1
+
+
+def test_jax_arrays_pass_through_and_return():
+    rng = np.random.RandomState(2)
+    spec = MatmulSpec(8, 8, 8)
+    prog = lower(spec, "fwd")
+    a = jnp.asarray(_rand(rng, 8, 8))
+    b = jnp.asarray(_rand(rng, 8, 8))
+    cache = PlanCache()
+    out = run_pallas(prog, {"a": a, "b": b}, cache=cache)
+    assert isinstance(out["c"], jnp.ndarray)  # jax.Array, no forced np copy
+    np.testing.assert_allclose(
+        np.asarray(out["c"]), np.asarray(a) @ np.asarray(b),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_all_passes_cached_and_match_reference():
+    rng = np.random.RandomState(3)
+    spec = Conv2dSpec(8, 8, 3, 3, 3, 4, stride=2, padding=1)
+    x = _rand(rng, spec.in_h, spec.in_w, spec.cin)
+    w = _rand(rng, spec.kh, spec.kw, spec.cin, spec.cout)
+    dy = _rand(rng, spec.out_h, spec.out_w, spec.cout)
+    cache = PlanCache()
+    cases = [
+        ("fwd", {"x": x, "w": w}, "y"),
+        ("dw", {"x": x, "dy": dy}, "dw"),
+        ("dx", {"dy": dy, "w": w}, "dx"),
+    ]
+    for pass_, ins, out_name in cases:
+        prog = lower(spec, pass_)
+        want = run_reference(prog, ins)[out_name]
+        got = run_pallas(prog, ins, cache=cache)[out_name]
+        got2 = run_pallas(prog, ins, cache=cache)[out_name]
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(got2))
+    assert len(cache) == 3
+    assert all(p.traces == 1 for p in cache._plans.values())
+
+
+def test_network_chain_fwd_dw_dx_no_per_layer_retrace():
+    """A conv-relu-conv training chain through cached plans: outputs match
+    the chained reference executors, and a second invocation triggers zero
+    new traces anywhere in the cache."""
+    rng = np.random.RandomState(4)
+    c1 = Conv2dSpec(10, 10, 3, 3, 3, 4, padding=1)
+    r1 = ReluSpec((10, 10, 4))
+    c2 = Conv2dSpec(10, 10, 4, 3, 3, 4, stride=2, padding=1)
+    x = _rand(rng, 10, 10, 3)
+    w1 = _rand(rng, 3, 3, 3, 4)
+    w2 = _rand(rng, 3, 3, 4, 4)
+    cache = PlanCache()
+    net = run_pallas_network([c1, r1, c2], x, [w1, None, w2], cache=cache)
+
+    # oracle: the reference interpreter, layer by layer
+    y1 = run_reference(lower(c1, "fwd"), {"x": x, "w": w1})["y"]
+    a1 = np.maximum(y1, 0)
+    y2 = run_reference(lower(c2, "fwd"), {"x": a1, "w": w2})["y"]
+    np.testing.assert_allclose(np.asarray(net["y"]), y2, rtol=1e-4, atol=1e-4)
+    dy = np.ones_like(y2)
+    dw2 = run_reference(lower(c2, "dw"), {"x": a1, "dy": dy})["dw"]
+    dx2 = run_reference(lower(c2, "dx"), {"dy": dy, "w": w2})["dx"]
+    g1 = dx2 * (y1 > 0)
+    dw1 = run_reference(lower(c1, "dw"), {"x": x, "dy": g1})["dw"]
+    dx1 = run_reference(lower(c1, "dx"), {"dy": g1, "w": w1})["dx"]
+    np.testing.assert_allclose(np.asarray(net["dw"][2]), dw2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(net["dw"][0]), dw1, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(net["dx"]), dx1, rtol=1e-3, atol=1e-4)
+    assert net["dw"][1] is None  # relu carries no params
+
+    traces = sum(p.traces for p in cache._plans.values())
+    net2 = run_pallas_network([c1, r1, c2], x, [w1, None, w2], cache=cache)
+    assert sum(p.traces for p in cache._plans.values()) == traces
+    np.testing.assert_array_equal(np.asarray(net["y"]), np.asarray(net2["y"]))
+
+
+def test_network_rejects_mismatched_params():
+    with pytest.raises(ValueError):
+        run_pallas_network([MatmulSpec(4, 4, 4)], np.zeros((4, 4)), [])
+
+
+def test_matmul_chain_through_network():
+    rng = np.random.RandomState(5)
+    s1, s2 = MatmulSpec(6, 10, 8), MatmulSpec(6, 4, 10)
+    x = _rand(rng, 6, 8)
+    w1, w2 = _rand(rng, 8, 10), _rand(rng, 10, 4)
+    cache = PlanCache()
+    net = run_pallas_network([s1, s2], x, [w1, w2], cache=cache)
+    y = (x @ w1) @ w2
+    np.testing.assert_allclose(np.asarray(net["y"]), y, rtol=1e-4, atol=1e-4)
+    dy = np.ones_like(y)
+    np.testing.assert_allclose(
+        np.asarray(net["dw"][1]), (x @ w1).T @ dy, rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(net["dx"]), (dy @ w2.T) @ w1.T, rtol=1e-4, atol=1e-4
+    )

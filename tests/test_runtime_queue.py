@@ -10,6 +10,7 @@ from repro.core import ntx
 from repro.runtime import cmdqueue, scheduler
 from repro.runtime.cmdqueue import CommandQueue, QueueFull, QueueRecord
 from repro.runtime.dma import DmaConfig, DmaEngine, Transfer, bank_conflict_factor
+from repro.lower.rules import matmul_template
 
 ROOT = str(Path(__file__).resolve().parents[1])
 if ROOT not in sys.path:  # for `import benchmarks` under bare `pytest`
@@ -17,7 +18,7 @@ if ROOT not in sys.path:  # for `import benchmarks` under bare `pytest`
 
 
 def _cmds(n, m=4, k=16):
-    return [ntx.matmul_command(m, m, k, 0, 100, 300) for _ in range(n)]
+    return [matmul_template(m, m, k, 0, 100, 300) for _ in range(n)]
 
 
 # ---------------------------------------------------------------------------
@@ -175,7 +176,7 @@ def test_partition_command_matches_whole_execution():
     mem = np.zeros(500, np.float32)
     mem[: m * k] = a.ravel()
     mem[100 : 100 + k * n] = b.ravel()
-    cmd = ntx.matmul_command(m, n, k, 0, 100, 300)
+    cmd = matmul_template(m, n, k, 0, 100, 300)
     want = ntx.ntx_execute(cmd, mem)
     for parts in (2, 3, 7, 12):
         got = mem
@@ -201,7 +202,7 @@ def test_partition_refuses_split_accumulations():
 
 
 def test_multicluster_schedule_and_trace(tmp_path):
-    cmd = ntx.matmul_command(64, 32, 32, 0, 10_000, 20_000)
+    cmd = matmul_template(64, 32, 32, 0, 10_000, 20_000)
     sched = scheduler.MultiClusterScheduler(n_clusters=4)
     buckets = sched.distribute(cmd)
     assert len(buckets) == 4 and all(len(b) == 1 for b in buckets)

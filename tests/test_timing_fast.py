@@ -1,0 +1,201 @@
+"""Block-replicated timing fast path: exact agreement with the event-driven
+engine, block-boundary stitching, and the wall-clock floor.
+
+The contract under test (see ``simulate_offload_blocks``): simulating a
+homogeneous command block event-by-event until one full engine round advances
+every live timestamp by the same delta, then replicating analytically, must
+produce *bit-identical* cycle stats to simulating every command — the update
+rules are max-plus, so a uniformly shifted state reproduces a uniformly
+shifted round. These tests drive randomized programs through both engines
+and require exact equality, then check the speed claims that justify
+removing the old ``MAX_TIMED_COMMANDS`` guard.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.ntx import Agu, NtxCommand
+from repro.lower import (
+    Conv2dSpec,
+    MatmulSpec,
+    NS_DESIGN,
+    NTX_DESIGN,
+    lower,
+    run_timing,
+)
+from repro.runtime import cmdqueue, scheduler
+from repro.runtime.cmdqueue import BlockSegment
+
+
+def _summaries_equal(a, b):
+    sa, sb = a.summary(), b.summary()
+    keys = set(sa) - {"elided_commands"}
+    return all(sa[k] == sb[k] for k in keys), {k: (sa[k], sb[k]) for k in keys}
+
+
+def _rand_template(rng):
+    loops = tuple(int(rng.randint(1, 6)) for _ in range(5))
+    return NtxCommand(
+        loops=loops,
+        opcode="mac",
+        agu_rd0=Agu(0, (1, 0, 0, 0, 0)),
+        agu_rd1=Agu(100, (1, 0, 0, 0, 0)) if rng.rand() < 0.7 else None,
+        agu_wr=Agu(200, (0, 1, 0, 0, 0)) if rng.rand() < 0.8 else None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Exactness: randomized segment streams, every config axis
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_randomized_segments_match_event_engine_exactly(seed):
+    rng = np.random.RandomState(seed)
+    for _ in range(6):
+        segs = [
+            BlockSegment(
+                _rand_template(rng),
+                int(rng.randint(1, 400)),
+                int(rng.choice([0, 3, 17, 80])),
+            )
+            for _ in range(rng.randint(1, 6))
+        ]
+        cmds = [s.template for s in segs for _ in range(s.count)]
+        dcs = [s.dma_cycles for s in segs for _ in range(s.count)]
+        kw = dict(
+            n_engines=int(rng.choice([1, 3, 8])),
+            queue_depth=int(rng.choice([1, 2, 4])),
+            sync=bool(rng.rand() < 0.2),
+            dma_overlap=bool(rng.rand() < 0.8),
+            dma_buffers=int(rng.choice([1, 2, 3])),
+        )
+        ev = cmdqueue.simulate_offload(cmds, dma_cycles=dcs, **kw)
+        bl = cmdqueue.simulate_offload_blocks(segs, **kw)
+        assert ev.stats == bl.stats, (kw, ev.stats, bl.stats)
+        assert bl.elided_commands + len(bl.records) == len(cmds)
+
+
+def test_block_boundaries_stitch_exactly():
+    """Segments whose counts are not multiples of the engine count shift the
+    round-robin phase at every boundary; the carried state must stitch."""
+    rng = np.random.RandomState(99)
+    segs = [
+        BlockSegment(_rand_template(rng), c, d)
+        for c, d in [(37, 11), (101, 0), (64, 25), (5, 7), (200, 3)]
+    ]
+    cmds = [s.template for s in segs for _ in range(s.count)]
+    dcs = [s.dma_cycles for s in segs for _ in range(s.count)]
+    for n_eng in (3, 8):
+        ev = cmdqueue.simulate_offload(
+            cmds, n_engines=n_eng, queue_depth=4, dma_cycles=dcs
+        )
+        bl = cmdqueue.simulate_offload_blocks(
+            segs, n_engines=n_eng, queue_depth=4
+        )
+        assert ev.stats == bl.stats
+
+
+# ---------------------------------------------------------------------------
+# Exactness at the program level (run_timing engine="block" vs "event")
+# ---------------------------------------------------------------------------
+
+
+PROGRAM_CASES = [
+    (Conv2dSpec(8, 8, 3, 3, 3, 4, padding=1), "fwd", NTX_DESIGN),
+    (Conv2dSpec(8, 8, 3, 3, 3, 4, stride=2, padding=1), "dx", NTX_DESIGN),
+    (Conv2dSpec(14, 14, 8, 3, 3, 6, padding=1), "fwd", NS_DESIGN),
+    (Conv2dSpec(9, 11, 2, 5, 4, 3, stride=3, padding=2), "dw", NS_DESIGN),
+    (MatmulSpec(30, 20, 10), "fwd", NS_DESIGN),
+    (MatmulSpec(16, 16, 16), "dw", NTX_DESIGN),
+]
+
+
+@pytest.mark.parametrize(
+    "spec,pass_,design",
+    PROGRAM_CASES,
+    ids=[f"{type(s).__name__}-{p}-{d.name}" for s, p, d in PROGRAM_CASES],
+)
+def test_program_block_engine_matches_event(spec, pass_, design):
+    prog = lower(spec, pass_, design=design)
+    for ncl in (1, 2, 4):
+        ev = run_timing(prog, n_clusters=ncl, engine="event")
+        bl = run_timing(prog, n_clusters=ncl, engine="block")
+        ok, diff = _summaries_equal(ev, bl)
+        assert ok, (spec, pass_, design.name, ncl, diff)
+
+
+def test_partitioned_program_block_engine_matches_event():
+    """mesh_sweep refines programs with partition_program first — the fast
+    path must stay exact over the refined block structure too."""
+    prog = lower(Conv2dSpec(12, 12, 4, 3, 3, 8, padding=1), "fwd")
+    part = scheduler.partition_program(prog, 16)
+    assert part.n_commands > prog.n_commands
+    ev = run_timing(part, n_clusters=2, engine="event")
+    bl = run_timing(part, n_clusters=2, engine="block")
+    ok, diff = _summaries_equal(ev, bl)
+    assert ok, diff
+
+
+def test_sync_cluster_config_matches_event():
+    prog = lower(Conv2dSpec(10, 10, 3, 3, 3, 4), "fwd", design=NS_DESIGN)
+    cl = scheduler.ClusterConfig(sync=True)
+    ev = run_timing(prog, n_clusters=2, cluster=cl, engine="event")
+    bl = run_timing(prog, n_clusters=2, cluster=cl, engine="block")
+    ok, diff = _summaries_equal(ev, bl)
+    assert ok, diff
+
+
+# ---------------------------------------------------------------------------
+# The size guard is gone; big programs are cheap
+# ---------------------------------------------------------------------------
+
+
+def test_max_timed_commands_guard_removed():
+    from repro.lower import executors
+
+    assert not hasattr(executors, "MAX_TIMED_COMMANDS")
+
+
+def test_million_command_ns_program_under_10s():
+    """Acceptance: a >= 1e6-command NS-design conv program times in < 10s."""
+    spec = Conv2dSpec(224, 224, 3, 7, 7, 64, stride=2, padding=3)
+    prog = lower(spec, "fwd", design=NS_DESIGN)
+    dw = lower(spec, "dw", design=NS_DESIGN)
+    assert prog.n_commands + dw.n_commands >= 800_000
+    t0 = time.perf_counter()
+    res = run_timing(prog, n_clusters=16)  # auto -> block
+    res2 = run_timing(dw, n_clusters=16)
+    wall = time.perf_counter() - t0
+    assert wall < 10.0, wall
+    assert res.summary()["n_commands"] == prog.n_commands
+    assert res2.summary()["n_commands"] == dw.n_commands
+    # the makespan cannot beat perfect parallelism over 16 clusters x 8
+    # engines nor the longest command
+    assert res.total_cycles >= prog.busy_cycles / (16 * 8)
+
+
+def test_wallclock_floor_20x_on_500k_commands():
+    """Acceptance: >= 20x over the event engine on a >= 500k-command stream,
+    with bit-identical stats."""
+    template = NtxCommand(
+        loops=(32, 4, 1, 1, 1),
+        opcode="mac",
+        agu_rd0=Agu(0, (1, 0, 0, 0, 0)),
+        agu_rd1=Agu(200, (1, 0, 0, 0, 0)),
+        agu_wr=Agu(400, (0, 1, 0, 0, 0)),
+    )
+    n = 500_000
+    seg = BlockSegment(template, n, dma_cycles=20)
+    t0 = time.perf_counter()
+    ev = cmdqueue.simulate_offload(
+        [template] * n, n_engines=8, queue_depth=4, dma_cycles=[20] * n
+    )
+    t_event = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    bl = cmdqueue.simulate_offload_blocks([seg], n_engines=8, queue_depth=4)
+    t_block = time.perf_counter() - t0
+    assert ev.stats == bl.stats
+    assert t_event / t_block >= 20.0, (t_event, t_block)
