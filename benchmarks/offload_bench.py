@@ -253,38 +253,38 @@ def mesh_sweep(sides=(1, 2, 4, 8), network="googlenet", batch=512,
     """§V / eqs. (14)-(21): mesh-of-HMCs training sweep, simulation-driven.
 
     The per-image time comes from the block-replicated timing engine over
-    the *full* fwd+dW+dX lowered programs of the network's conv layers at
-    both design points (the NS-design set exceeds 1e6 commands per image),
-    with compute cycles derated by the calibrated eta_c*eta_net exactly as
-    the analytical model does, and each program refined by
-    ``partition_program`` so one layer fills all clusters x engines (§3.1).
-    Parallel efficiency from the paper's mesh-update equations is then
-    cross-checked against ``ntx_model.mesh`` fed with the analytical cube
-    time for the same (MACs, bytes) workload: the two must agree within 10%
-    and stay above the paper's 95% across 1-64 HMCs.
+    ONE whole-train-step program per design point — the network-graph
+    compiler's fwd + loss-grad + dX/dW + SGD-update stream for
+    ``workloads.network_graph(network)`` (the NS-design program exceeds 1e7
+    commands per image) — with compute cycles derated by the calibrated
+    eta_c*eta_net exactly as the analytical model does, and the program
+    refined by ``partition_program`` so one layer fills all clusters x
+    engines (§3.1). Parallel efficiency from the paper's mesh-update
+    equations is then cross-checked against ``ntx_model.mesh`` fed with the
+    analytical cube time for the same (MACs, bytes) workload: the two must
+    agree within 10% and stay above the paper's 95% across 1-64 HMCs.
     """
-    from repro.lower import run_timing
+    from repro.lower import lower_training_step, run_timing
+
+    from benchmarks.workloads import network_graph
 
     eta = scheduler.ETA_COMPUTE * scheduler.ETA_NET
     parts = n_clusters * scheduler.ENGINES_PER_CLUSTER
     weight_bytes = WORKLOADS[network].param_mb * 1e6
+    graph = network_graph(network, batch=1)
     per_design = {}
     for dname, design in (("ntx", NTX_DESIGN), ("ns", NS_DESIGN)):
-        cycles = 0
-        macs = 0.0
-        byts = 0.0
-        ncmds = 0
-        for spec in CONV_LAYERS[network]:
-            for prog in lower_layer(spec, design=design).values():
-                part = scheduler.partition_program(prog, parts)
-                res = run_timing(
-                    part, n_clusters=n_clusters, f_ntx=f_ntx, engine="block",
-                    exec_cycles=lambda c: c.busy_cycles / eta,
-                )
-                cycles += res.total_cycles
-                macs += prog.busy_cycles
-                byts += prog.dma_bytes
-                ncmds += prog.n_commands
+        prog = lower_training_step(graph, design=design,
+                                   n_clusters=n_clusters)
+        part = scheduler.partition_program(prog, parts)
+        res = run_timing(
+            part, n_clusters=n_clusters, f_ntx=f_ntx, engine="block",
+            exec_cycles=lambda c: c.busy_cycles / eta,
+        )
+        cycles = res.total_cycles
+        macs = float(prog.busy_cycles)
+        byts = prog.dma_bytes
+        ncmds = prog.n_commands
         t_sim = cycles / f_ntx
         t_model = M.cube(
             M.Kernel(macs=macs, bytes_total=byts), n_clusters, f_ntx, "28nm"
@@ -318,16 +318,17 @@ def pallas_plan_cache(n_warm=5):
     """Repeated ``run_pallas`` on one spec: the jitted-plan cache must give
     zero retraces after warmup and >= 5x lower per-call overhead than the
     uncached (fresh cache, retrace every call) path. Also drives one whole
-    fwd+dW+dX chain (``workloads.PALLAS_CHAIN``) through
-    ``run_pallas_network`` twice and checks the second pass is retrace-free.
+    train-step program (``workloads.pallas_graph`` through
+    ``lower_training_step``) twice and checks the second step is
+    retrace-free — the graph executor's per-node plans all hit the cache.
     """
     import jax
     import numpy as np
 
-    from repro.lower import Conv2dSpec, PlanCache, run_pallas, run_pallas_network
+    from repro.lower import PlanCache, lower_training_step, run_pallas
     from repro.lower.executors import _resolve_interpret
 
-    from benchmarks.workloads import PALLAS_CHAIN
+    from benchmarks.workloads import pallas_graph
 
     rng = np.random.RandomState(0)
     spec = MatmulSpec(32, 32, 32)
@@ -359,23 +360,26 @@ def pallas_plan_cache(n_warm=5):
 
     reduction = uncached / max(warm, 1e-9)
 
-    # whole-network chain: fwd+dW+dX through cached plans, twice
+    # whole train step: one graph program through cached per-node plans
     net_cache = PlanCache()
-    chain = PALLAS_CHAIN
-    x = rng.randn(16, 16, 3).astype(np.float32)
-    params = [
-        rng.randn(s.kh, s.kw, s.cin, s.cout).astype(np.float32)
-        if isinstance(s, Conv2dSpec) else None
-        for s in chain
-    ]
+    graph = pallas_graph(batch=2)
+    net_prog = lower_training_step(graph)
+    params = graph.init_params(seed=0)
+    inputs = {
+        "x": rng.randn(2, 16, 16, 3).astype(np.float32),
+        "onehot": np.eye(10, dtype=np.float32)[rng.randint(0, 10, 2)],
+        **params,
+    }
     t0 = time.perf_counter()
-    jax.block_until_ready(run_pallas_network(chain, x, params,
-                                             cache=net_cache)["y"])
+    jax.block_until_ready(
+        run_pallas(net_prog, inputs, cache=net_cache)[graph.logits_edge]
+    )
     net_cold = time.perf_counter() - t0
     traces_warm = sum(p.traces for p in net_cache._plans.values())
     t0 = time.perf_counter()
-    jax.block_until_ready(run_pallas_network(chain, x, params,
-                                             cache=net_cache)["y"])
+    jax.block_until_ready(
+        run_pallas(net_prog, inputs, cache=net_cache)[graph.logits_edge]
+    )
     net_warm = time.perf_counter() - t0
     net_retraces = sum(p.traces for p in net_cache._plans.values()) - traces_warm
 
@@ -411,7 +415,8 @@ ALL = {
 # One small workload per benchmark — the CI smoke lane's model/simulator
 # drift check (seconds, not minutes). model_crosscheck is pure arithmetic,
 # so the full sweep stays in; mesh_sweep rides on the block-replicated fast
-# path, so even its 2.4M-command NS programs fit the smoke budget.
+# path, so even its 13.3M-command NS whole-train-step program fits the
+# smoke budget.
 SMOKE = {
     "offload_overhead": lambda: offload_overhead(layers=TABLE2_LAYERS[3:]),
     "model_crosscheck": model_crosscheck,

@@ -1,0 +1,123 @@
+"""Whole-train-step benchmark: one NtxProgram per step, end to end.
+
+Builds the paper's small CNN as a :class:`repro.lower.NetworkGraph`,
+compiles ONE whole-step program per design point, and reports
+
+  * per-step wall clock through ``run_pallas`` graph execution (interpret
+    mode off-TPU), with an enforced loss-decrease gate,
+  * the liveness allocator's ``peak_tcdm_bytes`` vs the design budget,
+  * command/offload counts and the block-engine modeled step cycles for
+    both the NTX and NS design points.
+
+Standalone::
+
+    PYTHONPATH=src python -m benchmarks.trainstep_bench [--steps 3]
+
+Writes ``artifacts/BENCH_trainstep.json`` (uploaded by the CI train-smoke
+lane alongside ``BENCH_offload.json``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+
+def trainstep_bench(steps: int = 3, batch: int = 4, img: int = 16,
+                    n_clusters: int = 16):
+    """Returns (rows, summary) like every other benchmark in this tree."""
+    from repro.lower import (
+        NS_DESIGN,
+        frequency_band_batches,
+        lower_training_step,
+        paper_cnn_graph,
+        run_timing,
+        train_graph,
+    )
+
+    graph = paper_cnn_graph(batch=batch, img=img, lr=0.05, momentum=0.9)
+    program = lower_training_step(graph, n_clusters=n_clusters)
+    ns_program = lower_training_step(graph, design=NS_DESIGN,
+                                     n_clusters=n_clusters)
+
+    batch_fn = frequency_band_batches(np.random.RandomState(0), batch, img,
+                                      graph.loss.classes)
+    res = train_graph(graph, steps, batch_fn, program=program,
+                      backend="pallas", params=graph.init_params(seed=0))
+    losses, walls = res["losses"], res["walls"]
+
+    timed = {
+        name: run_timing(p, n_clusters=n_clusters, engine="block").total_cycles
+        for name, p in (("ntx", program), ("ns", ns_program))
+    }
+    rows = [
+        ("per_step_wall_ms", *[w * 1e3 for w in walls]),
+        ("loss", *losses),
+        ("commands_ntx_vs_ns", program.n_commands, ns_program.n_commands),
+        ("step_cycles_ntx_vs_ns", timed["ntx"], timed["ns"]),
+        ("peak_tcdm_bytes", program.meta["peak_tcdm_bytes"],
+         program.meta["tcdm_budget_bytes"]),
+    ]
+    summary = {
+        "steps": steps,
+        "warm_step_wall_ms": min(walls) * 1e3,
+        "loss_first": losses[0],
+        "loss_last": losses[-1],
+        "loss_decreased": losses[-1] < losses[0],
+        "n_commands": program.n_commands,
+        "n_offloads": program.n_offloads,
+        "peak_tcdm_bytes": program.meta["peak_tcdm_bytes"],
+        "tcdm_budget_bytes": program.meta["tcdm_budget_bytes"],
+        "within_tcdm_budget":
+            program.meta["peak_tcdm_bytes"]
+            <= program.meta["tcdm_budget_bytes"],
+        "spilled_regions": len(program.meta["spilled"]),
+        "step_cycles_ntx": timed["ntx"],
+        "step_cycles_ns": timed["ns"],
+        "ns_over_ntx_cycles": timed["ns"] / max(timed["ntx"], 1),
+    }
+    return rows, summary
+
+
+GATES = ("loss_decreased", "within_tcdm_budget")
+
+
+def write_json(rows, summary, wall_s,
+               path: str = "artifacts/BENCH_trainstep.json") -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({
+            "wall_s": wall_s,
+            "summary": summary,
+            "rows": [list(r) for r in rows],
+        }, f, indent=1, default=str)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--img", type=int, default=16)
+    ap.add_argument("--json", default="artifacts/BENCH_trainstep.json")
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+    rows, summary = trainstep_bench(args.steps, args.batch, args.img)
+    wall = time.perf_counter() - t0
+    for r in rows:
+        print("  ", *(f"{x:.4g}" if isinstance(x, float) else x for x in r))
+    for k, v in summary.items():
+        print(f"   -> {k}: {v}")
+    print("json:", write_json(rows, summary, wall, args.json))
+    failed = [g for g in GATES if not summary.get(g)]
+    if failed:
+        raise SystemExit(f"train-step gates failed: {', '.join(failed)}")
+
+
+if __name__ == "__main__":
+    main()

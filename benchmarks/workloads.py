@@ -18,9 +18,9 @@ design points.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
-from repro.lower import Conv2dSpec, ReluSpec
+from repro.lower import Conv2dSpec, MatmulSpec, MaxPool2dSpec, NetworkGraph
 
 
 @dataclass(frozen=True)
@@ -103,16 +103,94 @@ CONV_LAYERS: dict[str, list[Conv2dSpec]] = {
     ],
 }
 
-# A small shape-chained CNN (conv -> relu -> conv) for the whole-network
-# Pallas executor: ``run_pallas_network`` threads fwd+dW+dX through it via
-# cached plans, and ``offload_bench.pallas_plan_cache`` asserts zero
-# retraces after warmup. Callers supply the aligned params list themselves
-# (a weight array per conv entry, None for relu).
-PALLAS_CHAIN: list = [
-    Conv2dSpec(16, 16, 3, 3, 3, 8, padding=1),            # -> 16x16x8
-    ReluSpec((16, 16, 8)),
-    Conv2dSpec(16, 16, 8, 3, 3, 8, stride=2, padding=1),  # -> 8x8x8
-]
+# ---------------------------------------------------------------------------
+# Whole-train-step graphs (repro.lower.graph): one NtxProgram per step.
+# ---------------------------------------------------------------------------
+
+
+def pallas_graph(batch: int = 2) -> NetworkGraph:
+    """A small conv->relu->conv->pool->fc training graph for the Pallas
+    plan-cache benchmark/tests: ``lower_training_step`` turns it into one
+    whole-step program, and repeated ``run_pallas`` calls must be
+    retrace-free after warmup."""
+    return NetworkGraph.sequential(
+        "pallas_chain", batch, (16, 16, 3),
+        [
+            ("c1", Conv2dSpec(16, 16, 3, 3, 3, 8, padding=1)),       # 16x16x8
+            ("r1", "relu"),
+            ("c2", Conv2dSpec(16, 16, 8, 3, 3, 8, stride=2, padding=1)),  # 8x8x8
+            ("r2", "relu"),
+            ("p1", MaxPool2dSpec(8, 8, 8)),                          # 4x4x8
+            ("fl", "flatten"),
+            ("fc", MatmulSpec(batch, 10, 4 * 4 * 8)),
+            ("fcb", "bias"),
+        ],
+        lr=0.05, momentum=0.9,
+    )
+
+
+def _googlenet_graph(batch: int, lr: float, momentum: float) -> NetworkGraph:
+    """A chained GoogLeNet trunk containing all four Table 2 rows verbatim
+    (stem -> pool -> 3x3 -> pool -> 3x3 -> 1x1 -> strided 3x3 -> 1x1 ->
+    pool -> fc), so whole-step programs reproduce the paper's per-layer
+    offload counts block-for-block."""
+    L = CONV_LAYERS["googlenet"]
+    return NetworkGraph.sequential(
+        "googlenet", batch, (224, 224, 3),
+        [
+            ("conv0", L[0]),                                  # Table 2 row 1
+            ("relu0", "relu"),
+            ("pool0", MaxPool2dSpec(112, 112, 64)),           # -> 56
+            ("conv1", L[1]),                                  # Table 2 row 2
+            ("relu1", "relu"),
+            ("pool1", MaxPool2dSpec(56, 56, 192)),            # -> 28
+            ("conv2", Conv2dSpec(28, 28, 192, 3, 3, 256, padding=1)),
+            ("relu2", "relu"),
+            ("conv3", L[2]),                                  # Table 2 row 3
+            ("relu3", "relu"),
+            ("conv4", Conv2dSpec(28, 28, 64, 3, 3, 512, stride=2, padding=1)),
+            ("relu4", "relu"),
+            ("conv5", L[3]),                                  # Table 2 row 4
+            ("relu5", "relu"),
+            ("pool2", MaxPool2dSpec(14, 14, 192)),            # -> 7
+            ("flat", "flatten"),
+            ("fc", MatmulSpec(batch, 10, 7 * 7 * 192)),
+        ],
+        lr=lr, momentum=momentum,
+    )
+
+
+def network_graph(name: str, batch: int = 1, *, lr: float = 0.05,
+                  momentum: float = 0.0) -> NetworkGraph:
+    """A whole-training-step :class:`NetworkGraph` per CNN.
+
+    GoogLeNet is the hand-chained trunk above (exact Table 2 rows); the
+    other CNNs chain their representative ``CONV_LAYERS`` geometries
+    (kernel/channel shapes kept, input extents re-derived so tensor edges
+    connect), interposing relu and trailing pool/flatten/fc — the whole-step
+    programs the mesh sweep and train-step benchmarks consume.
+    """
+    if name == "googlenet":
+        return _googlenet_graph(batch, lr, momentum)
+    specs = CONV_LAYERS[name]
+    cur = (specs[0].in_h, specs[0].in_w, specs[0].cin)
+    in_shape = cur
+    layers: list[tuple[str, object]] = []
+    for i, s in enumerate(specs):
+        s2 = replace(s, in_h=cur[0], in_w=cur[1], cin=cur[2])
+        layers.append((f"conv{i}", s2))
+        layers.append((f"relu{i}", "relu"))
+        cur = (s2.out_h, s2.out_w, s2.cout)
+    p = 0
+    while cur[0] >= 8 and cur[1] >= 8:
+        pool = MaxPool2dSpec(cur[0], cur[1], cur[2])
+        layers.append((f"pool{p}", pool))
+        cur = (pool.out_h, pool.out_w, pool.c)
+        p += 1
+    layers.append(("flat", "flatten"))
+    layers.append(("fc", MatmulSpec(batch, 10, cur[0] * cur[1] * cur[2])))
+    return NetworkGraph.sequential(name, batch, in_shape, layers,
+                                   lr=lr, momentum=momentum)
 
 # The paper's Table 2 GoogLeNet layers (label, spec) — the canonical rows
 # every offload benchmark and test crosschecks against offload_count().

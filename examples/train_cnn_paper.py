@@ -1,67 +1,73 @@
-"""The paper's own workload: train a small GoogLeNet-style CNN with the
-NTX machinery — conv layers run through the strided-conv-decomposition VJP
-(C4), the forward through the reference conv, the optimizer is plain SGD
-(the paper's algorithm).
+"""The paper's own workload: train a small GoogLeNet-style CNN.
+
+Two backends:
+
+  * ``--backend jax`` (default) — conv layers run through the strided-conv-
+    decomposition VJP (C4), the optimizer is plain SGD; this is the
+    pure-JAX training loop of earlier PRs.
+  * ``--backend ntx`` — the whole train step is ONE compiled
+    :class:`repro.lower.NtxProgram` (forward, softmax-CE gradient,
+    interleaved dX/dW, SGD+momentum update) produced by the network-graph
+    compiler and executed through the cached-plan Pallas backend. The loss
+    must decrease over >= 3 steps or the script exits non-zero (the CI
+    train-smoke lane runs exactly this).
+
+Quickstart (the graph-compiler API in five lines)::
+
+    from repro.lower import paper_cnn_graph, lower_training_step, train_graph
+    graph   = paper_cnn_graph(batch=8, img=32)     # conv/relu/pool/fc + loss
+    program = lower_training_step(graph)           # ONE NtxProgram per step
+    print(program.n_offloads, program.meta["peak_tcdm_bytes"])
+    result  = train_graph(graph, steps=3, batch_fn=my_batches)  # run_pallas
+
+Usage::
 
     PYTHONPATH=src python examples/train_cnn_paper.py --steps 40
+    PYTHONPATH=src python examples/train_cnn_paper.py --backend ntx --steps 3
 """
 
 import argparse
+import json
+import os
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.conv_decomp import conv2d_with_decomposed_vjp
-from repro.optim.optimizers import apply_updates, sgd
 
+def run_jax(args, rng):
+    import jax
+    import jax.numpy as jnp
 
-def init_cnn(rng, n_classes=10):
-    ks = jax.random.split(rng, 5)
-    # stem (stride 2, the paper's 7x7/2 shrunk) + two conv blocks + classifier
-    return {
-        "c1": jax.random.normal(ks[0], (5, 5, 3, 16)) * 0.1,
-        "c2": jax.random.normal(ks[1], (3, 3, 16, 32)) * 0.1,
-        "c3": jax.random.normal(ks[2], (3, 3, 32, 32)) * 0.1,
-        "fc": jax.random.normal(ks[3], (32, n_classes)) * 0.1,
-    }
+    from repro.core.conv_decomp import conv2d_with_decomposed_vjp
+    from repro.lower import frequency_band_batches
+    from repro.optim.optimizers import apply_updates, sgd
 
-
-def forward(params, x):
-    h = conv2d_with_decomposed_vjp(x, params["c1"], stride=2, padding=2)
-    h = jax.nn.relu(h)
-    h = conv2d_with_decomposed_vjp(h, params["c2"], stride=2, padding=1)
-    h = jax.nn.relu(h)
-    h = conv2d_with_decomposed_vjp(h, params["c3"], stride=1, padding=1)
-    h = jax.nn.relu(h)
-    h = h.mean(axis=(1, 2))  # GAP
-    return h @ params["fc"]
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=40)
-    ap.add_argument("--batch", type=int, default=16)
-    ap.add_argument("--img", type=int, default=32)
-    args = ap.parse_args()
-
-    rng = np.random.RandomState(0)
     n_classes = 10
-    params = init_cnn(jax.random.PRNGKey(0), n_classes)
+
+    def init_cnn(key):
+        ks = jax.random.split(key, 5)
+        # stem (stride 2, the paper's 7x7/2 shrunk) + two conv blocks + fc
+        return {
+            "c1": jax.random.normal(ks[0], (5, 5, 3, 16)) * 0.1,
+            "c2": jax.random.normal(ks[1], (3, 3, 16, 32)) * 0.1,
+            "c3": jax.random.normal(ks[2], (3, 3, 32, 32)) * 0.1,
+            "fc": jax.random.normal(ks[3], (32, n_classes)) * 0.1,
+        }
+
+    def forward(params, x):
+        h = conv2d_with_decomposed_vjp(x, params["c1"], stride=2, padding=2)
+        h = jax.nn.relu(h)
+        h = conv2d_with_decomposed_vjp(h, params["c2"], stride=2, padding=1)
+        h = jax.nn.relu(h)
+        h = conv2d_with_decomposed_vjp(h, params["c3"], stride=1, padding=1)
+        h = jax.nn.relu(h)
+        h = h.mean(axis=(1, 2))  # GAP
+        return h @ params["fc"]
+
+    params = init_cnn(jax.random.PRNGKey(0))
     opt = sgd(lr=0.05, momentum=0.9)
     opt_state = opt.init(params)
-
-    # synthetic separable image classes (class = dominant frequency band)
-    def make_batch():
-        y = rng.randint(0, n_classes, args.batch)
-        base = np.linspace(0, 3.14 * 4, args.img)
-        imgs = np.stack([
-            np.sin(base[None, :] * (1 + c)) * np.cos(base[:, None] * (1 + c))
-            for c in y
-        ])[..., None].repeat(3, axis=-1)
-        imgs += rng.randn(*imgs.shape) * 0.1
-        return jnp.asarray(imgs, jnp.float32), jnp.asarray(y)
+    batch_fn = frequency_band_batches(rng, args.batch, args.img, n_classes)
 
     @jax.jit
     def step(params, opt_state, x, y):
@@ -77,12 +83,95 @@ def main():
 
     t0 = time.time()
     for i in range(args.steps):
-        x, y = make_batch()
-        params, opt_state, loss = step(params, opt_state, x, y)
+        x, y = batch_fn(i)
+        params, opt_state, loss = step(
+            params, opt_state, jnp.asarray(x), jnp.asarray(y)
+        )
         if i % 5 == 0:
             print(f"step {i:3d}  loss={float(loss):.4f}")
     print(f"final loss={float(loss):.4f}  ({time.time() - t0:.1f}s) — "
           "backward pass ran through the paper's C4 decomposition")
+    return [float(loss)]
+
+
+def run_ntx(args, rng):
+    from repro.lower import (
+        frequency_band_batches,
+        lower_training_step,
+        paper_cnn_graph,
+        train_graph,
+    )
+
+    graph = paper_cnn_graph(
+        batch=args.batch, img=args.img, lr=0.05, momentum=0.9
+    )
+    program = lower_training_step(graph)
+    print(
+        f"train-step program: {len(program.blocks)} blocks, "
+        f"{program.n_commands} commands ({program.n_offloads} compute "
+        f"offloads), peak TCDM {program.meta['peak_tcdm_bytes']} B of "
+        f"{program.meta['tcdm_budget_bytes']} B budget, "
+        f"{len(program.meta['spilled'])} spilled regions"
+    )
+    batch_fn = frequency_band_batches(rng, args.batch, args.img, 10)
+    t_all = time.time()
+    res = train_graph(graph, args.steps, batch_fn, backend="pallas",
+                      program=program, params=graph.init_params(seed=0))
+    losses, walls = res["losses"], res["walls"]
+    for i, (loss, w) in enumerate(zip(losses, walls)):
+        print(f"step {i:3d}  loss={loss:.4f}  ({w*1e3:.0f} ms)")
+    wall = time.time() - t_all
+    print(f"final loss={losses[-1]:.4f}  ({wall:.1f}s) — whole step ran as "
+          "one NtxProgram through run_pallas graph execution")
+    if args.bench_json:
+        os.makedirs(os.path.dirname(args.bench_json) or ".", exist_ok=True)
+        with open(args.bench_json, "w") as f:
+            json.dump({
+                "backend": "ntx",
+                "steps": args.steps,
+                "per_step_wall_s": walls,
+                "warm_step_wall_s": min(walls),
+                "losses": losses,
+                "n_commands": program.n_commands,
+                "n_offloads": program.n_offloads,
+                "peak_tcdm_bytes": program.meta["peak_tcdm_bytes"],
+                "tcdm_budget_bytes": program.meta["tcdm_budget_bytes"],
+                "spilled_regions": len(program.meta["spilled"]),
+            }, f, indent=1)
+        print("bench json:", args.bench_json)
+    if args.steps >= 3 and not losses[-1] < losses[0]:
+        raise SystemExit(
+            f"NTX training did not decrease the loss: {losses[0]:.4f} -> "
+            f"{losses[-1]:.4f}"
+        )
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=None,
+                    help="default: 16 (jax) / 8 (ntx)")
+    ap.add_argument("--img", type=int, default=None,
+                    help="default: 32 (jax) / 16 (ntx)")
+    ap.add_argument("--backend", default="jax", choices=["jax", "ntx"],
+                    help="jax: plain autodiff training; ntx: one compiled "
+                         "NtxProgram per train step via run_pallas")
+    ap.add_argument("--bench-json", default="",
+                    help="ntx backend: where to write per-step wall/TCDM "
+                         "accounting (benchmarks/trainstep_bench.py is the "
+                         "canonical BENCH_trainstep.json writer)")
+    args = ap.parse_args()
+    if args.batch is None:
+        args.batch = 8 if args.backend == "ntx" else 16
+    if args.img is None:
+        args.img = 16 if args.backend == "ntx" else 32
+
+    rng = np.random.RandomState(0)
+    if args.backend == "ntx":
+        run_ntx(args, rng)
+    else:
+        run_jax(args, rng)
 
 
 if __name__ == "__main__":

@@ -30,14 +30,19 @@ from __future__ import annotations
 
 import functools
 import math
-import warnings
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Sequence
 
 import numpy as np
 
 MAX_LOOPS = 5
-_OPS = ("mac", "vadd", "vmul", "vmax", "vmin", "relu", "copy", "memset", "argmax")
+_OPS = (
+    "mac", "vadd", "vmul", "vmax", "vmin", "relu", "copy", "memset", "argmax",
+    # comparison / transcendental helpers of the PCS FPU (§2.3): the step
+    # function and >= mask feed the ReLU / max-pool backward mask patterns,
+    # exp and reciprocal feed the softmax-cross-entropy gradient lowering.
+    "sign", "cmpge", "vexp", "vrecip",
+)
 
 
 @dataclass(frozen=True)
@@ -186,6 +191,14 @@ def _execute_loops(cmd: NtxCommand, mem: np.ndarray, wide: bool) -> None:
                             acc = min(acc, acc_dtype(rd0)) if counter else acc_dtype(rd0)
                         elif cmd.opcode == "relu":
                             acc = acc_dtype(max(np.float32(0.0), rd0))
+                        elif cmd.opcode == "sign":
+                            acc = acc_dtype(1.0 if rd0 > 0 else 0.0)
+                        elif cmd.opcode == "cmpge":
+                            acc = acc_dtype(1.0 if rd0 >= rd1 else 0.0)
+                        elif cmd.opcode == "vexp":
+                            acc = acc_dtype(np.exp(rd0))
+                        elif cmd.opcode == "vrecip":
+                            acc = acc_dtype(np.float32(1.0) / rd0)
                         elif cmd.opcode == "copy":
                             acc = acc_dtype(rd0)
                         elif cmd.opcode == "memset":
@@ -269,12 +282,31 @@ def _spans_ok(cmd: NtxCommand, size: int, check_alias: bool = True) -> bool:
     return True
 
 
+# Streaming elementwise opcodes and their fp32 numpy forms. ``vexp`` may
+# differ from the scalar loop path by one ulp (numpy SIMD vs scalar libm);
+# every other entry is bit-identical.
+_ELEMENTWISE = {
+    "vadd": lambda a, b: a + b,
+    "vmul": lambda a, b: a * b,
+    "relu": lambda a, _: np.maximum(a, np.float32(0.0)),
+    "sign": lambda a, _: (a > 0).astype(np.float32),
+    "cmpge": lambda a, b: (a >= b).astype(np.float32),
+    "vexp": lambda a, _: np.exp(a),
+    "vrecip": lambda a, _: np.float32(1.0) / a,
+}
+
+
 def _execute_vectorized(cmd: NtxCommand, mem: np.ndarray, wide: bool) -> bool:
     """Try the affine-dense fast path; return False to fall back to loops."""
     if cmd.agu_wr is None:
         return False
-    # memset ignores the read values, so read/write aliasing is harmless.
-    if not _spans_ok(cmd, mem.size, check_alias=cmd.opcode != "memset"):
+    # memset ignores the read values, so read/write aliasing is harmless; an
+    # identity copy (read AGU == write AGU — the graph compiler's spill/fill
+    # DMA model) writes back exactly what it reads, so aliasing is fine too.
+    identity_copy = cmd.opcode == "copy" and cmd.agu_rd0 == cmd.agu_wr
+    if not _spans_ok(
+        cmd, mem.size, check_alias=cmd.opcode != "memset" and not identity_copy
+    ):
         return False
 
     if cmd.opcode == "memset" and cmd.store_level == 0:
@@ -290,6 +322,42 @@ def _execute_vectorized(cmd: NtxCommand, mem: np.ndarray, wide: bool) -> bool:
             return False
         ra = _agu_grid(cmd.agu_rd0, cmd.loops).ravel()
         mem[wa] = mem[ra]
+        return True
+
+    if cmd.opcode in _ELEMENTWISE and cmd.store_level == 0:
+        # Streaming elementwise ops overwrite the accumulator every iteration
+        # and store every iteration, so with unique write addresses the loop
+        # order is irrelevant and one gathered numpy expression is
+        # bit-identical (all ops round in fp32, same as the loop body).
+        wa = _agu_grid(cmd.agu_wr, cmd.loops).ravel()
+        if np.unique(wa).size != wa.size:
+            return False
+        v0 = mem[_agu_grid(cmd.agu_rd0, cmd.loops).ravel()]
+        v1 = None
+        if cmd.opcode in ("vadd", "vmul", "cmpge"):
+            if cmd.agu_rd1 is None:
+                return False
+            v1 = mem[_agu_grid(cmd.agu_rd1, cmd.loops).ravel()]
+        out = _ELEMENTWISE[cmd.opcode](v0, v1)
+        mem[wa] = out.astype(np.float32, copy=False)
+        return True
+
+    if cmd.opcode in ("vmax", "vmin"):
+        # Region reduce: like mac, requires init/store boundaries to
+        # coincide. min/max preserve fp32 values exactly, so the vectorized
+        # reduce is bit-identical to the sequential one.
+        lvl = cmd.init_level
+        if cmd.store_level != lvl or not 1 <= lvl <= MAX_LOOPS:
+            return False
+        red = math.prod(cmd.loops[:lvl])
+        outer = math.prod(cmd.loops[lvl:])
+        v0 = mem[_agu_grid(cmd.agu_rd0, cmd.loops).ravel()].reshape(outer, red)
+        wr = cmd.agu_wr
+        base = wr.base + sum((cmd.loops[j] - 1) * wr.strides[j] for j in range(lvl))
+        wa = _agu_grid(Agu(base, wr.strides), (1,) * lvl + cmd.loops[lvl:]).ravel()
+        if np.unique(wa).size != wa.size:
+            return False
+        mem[wa] = v0.max(axis=1) if cmd.opcode == "vmax" else v0.min(axis=1)
         return True
 
     if cmd.opcode == "mac":
@@ -383,62 +451,3 @@ def busy_cycles_per_offload(conv: ConvShape, hw_loops: int, autonomous_writeback
 # The two design points the paper compares (Table 2).
 NS_LOOPS = dict(hw_loops=3, autonomous_writeback=False)
 NTX_LOOPS = dict(hw_loops=5, autonomous_writeback=True)
-
-
-def matmul_command(
-    m: int,
-    n: int,
-    k: int,
-    a_base: int,
-    b_base: int,
-    c_base: int,
-) -> NtxCommand:
-    """Build the NtxCommand for a row-major (m,k)x(k,n)->(m,n) matmul.
-
-    .. deprecated:: Thin wrapper kept for compatibility — the lowering rule
-       lives in :func:`repro.lower.rules.matmul_template`; new code should
-       go through :func:`repro.lower.lower` on a ``MatmulSpec``.
-    """
-    warnings.warn(
-        "ntx.matmul_command is deprecated: use repro.lower.lower(MatmulSpec(...))"
-        " or repro.lower.rules.matmul_template for raw templates",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    from repro.lower.rules import matmul_template
-
-    return matmul_template(m, n, k, a_base, b_base, c_base)
-
-
-def conv2d_command(
-    in_h: int,
-    in_w: int,
-    cin: int,
-    kh: int,
-    kw: int,
-    cout_tile: int,
-    x_base: int,
-    w_base: int,
-    y_base: int,
-) -> NtxCommand:
-    """NtxCommand for a VALID 2-D convolution tile, NHWC x HWIO -> NHWC.
-
-    One command covers a full output plane for one output channel (HWI-
-    contiguous weights) — the paper's "many output pixels per offload".
-
-    .. deprecated:: Thin wrapper kept for compatibility — the lowering rule
-       lives in :func:`repro.lower.rules.conv2d_fwd_template` (``cout=1``);
-       new code should go through :func:`repro.lower.lower` on a
-       ``Conv2dSpec``, which also covers the dW/dX training passes.
-    """
-    warnings.warn(
-        "ntx.conv2d_command is deprecated: use repro.lower.lower(Conv2dSpec(...))"
-        " or repro.lower.rules.conv2d_fwd_template for raw templates",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    from repro.lower.rules import conv2d_fwd_template
-
-    return conv2d_fwd_template(
-        in_h, in_w, cin, kh, kw, 1, x_base, w_base, y_base, stride=1
-    )

@@ -146,7 +146,8 @@ def streaming_conv2d(
     """NHWC x HWIO conv as an im2col streaming matmul (the paper's conv map).
 
     The (kh, kw, cin) reduction dims flatten into the streamed K axis —
-    the same loop order :func:`repro.core.ntx.conv2d_command` gives the AGUs.
+    the same loop order :func:`repro.lower.rules.conv2d_fwd_template` gives
+    the AGUs.
     """
     n, h, wid, cin = x.shape
     kh, kw, _, cout = w.shape

@@ -328,6 +328,44 @@ def batch_shardings(batch_struct, cfg, mesh, dp_axes, seq_axis=None, batch_size=
 # ---------------------------------------------------------------------------
 
 
+def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
+                lr: float = 0.05, momentum: float = 0.9,
+                interpret: bool | None = None) -> dict:
+    """The ``--backend ntx`` mode: train the paper's small CNN end-to-end
+    with every step one compiled :class:`repro.lower.NtxProgram` executed
+    through ``run_pallas`` graph execution (cached per-node plans).
+
+    Returns the :func:`repro.lower.train_graph` result dict (program,
+    params, losses, per-step walls).
+    """
+    import numpy as np
+
+    from repro.lower import (
+        frequency_band_batches,
+        lower_training_step,
+        paper_cnn_graph,
+        train_graph,
+    )
+
+    graph = paper_cnn_graph(batch=batch, img=img, lr=lr, momentum=momentum)
+    program = lower_training_step(graph, n_clusters=n_clusters)
+    print(f"ntx train-step program: {len(program.blocks)} blocks, "
+          f"{program.n_commands} commands, "
+          f"peak TCDM {program.meta['peak_tcdm_bytes']} / "
+          f"{program.meta['tcdm_budget_bytes']} B "
+          f"({len(program.meta['spilled'])} spilled)")
+    batch_fn = frequency_band_batches(np.random.RandomState(0), batch, img,
+                                      graph.loss.classes)
+    res = train_graph(graph, steps, batch_fn, program=program,
+                      backend="pallas", interpret=interpret,
+                      params=graph.init_params(seed=0))
+    losses = res["losses"]
+    for i, (loss, w) in enumerate(zip(losses, res["walls"])):
+        print(f"step {i:5d} loss={loss:.4f} ({w*1e3:.0f} ms)", flush=True)
+    print(f"done: {steps} ntx steps, loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return res
+
+
 def _cli():
     import argparse
     import time
@@ -339,6 +377,12 @@ def _cli():
     from repro.runtime.supervisor import FailureInjector, Supervisor
 
     ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="xla", choices=["xla", "ntx"],
+                    help="xla: the LM training CLI below; ntx: train the "
+                         "paper's small CNN with one compiled NtxProgram "
+                         "per step (run_pallas graph execution)")
+    ap.add_argument("--img", type=int, default=16,
+                    help="ntx backend: CNN input image size")
     ap.add_argument("--arch", default="qwen1_5_0_5b")
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-scale config (CPU-friendly)")
@@ -360,6 +404,13 @@ def _cli():
     ap.add_argument("--offload-clusters", type=int, default=16)
     ap.add_argument("--queue-depth", type=int, default=4)
     args = ap.parse_args()
+
+    if args.backend == "ntx":
+        res = run_ntx_cnn(args.steps, args.batch, args.img,
+                          n_clusters=args.offload_clusters)
+        if len(res["losses"]) >= 3 and not res["losses"][-1] < res["losses"][0]:
+            raise SystemExit("ntx CNN training did not decrease the loss")
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:

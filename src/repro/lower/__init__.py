@@ -7,55 +7,89 @@
     outs = run_pallas(prog, {"dy": dy, "w": w})      # Pallas kernels
 
 One lowering rule per layer type serves the interpreter, the timing model,
-and the TPU backend — see docs/architecture.md ("The lowering pipeline").
+and the TPU backend. Above the per-layer rules sits the network-graph
+compiler (:mod:`repro.lower.graph`): a whole training step — forward, loss
+gradient, backward, SGD update — compiles to ONE NtxProgram with
+liveness-allocated TCDM, consumed unchanged by all three executors:
+
+    graph = paper_cnn_graph(batch=8)
+    prog  = lower_training_step(graph)         # one program per train step
+    outs  = run_pallas(prog, {"x": x, "onehot": y1h, **params})
+
+See docs/architecture.md ("The lowering pipeline", "The graph compiler").
 """
 
 from repro.lower.executors import (
+    BatchedSpec,
     PLAN_CACHE,
     PlanCache,
     run_pallas,
-    run_pallas_network,
     run_reference,
     run_timing,
+)
+from repro.lower.graph import (
+    GraphNode,
+    NetworkGraph,
+    frequency_band_batches,
+    lower_training_step,
+    paper_cnn_graph,
+    softmax_xent_loss,
+    train_graph,
 )
 from repro.lower.ir import (
     ELEM_BYTES,
     CommandBlock,
     DesignPoint,
+    LivenessAllocator,
     NS_DESIGN,
     NTX_DESIGN,
     NtxProgram,
+    RegionAllocator,
     TensorRegion,
 )
 from repro.lower.rules import (
+    BiasSpec,
     Conv2dSpec,
+    FlattenSpec,
     MatmulSpec,
     MaxPool2dSpec,
     PASSES,
     ReluSpec,
+    SgdUpdateSpec,
+    SoftmaxXentSpec,
     lower,
     lower_layer,
 )
 
 __all__ = [
     "ELEM_BYTES",
+    "BatchedSpec",
+    "BiasSpec",
     "CommandBlock",
     "Conv2dSpec",
     "DesignPoint",
+    "FlattenSpec",
+    "GraphNode",
+    "LivenessAllocator",
     "MatmulSpec",
     "MaxPool2dSpec",
     "NS_DESIGN",
     "NTX_DESIGN",
+    "NetworkGraph",
     "NtxProgram",
     "PASSES",
     "PLAN_CACHE",
     "PlanCache",
+    "RegionAllocator",
     "ReluSpec",
+    "SgdUpdateSpec",
+    "SoftmaxXentSpec",
     "TensorRegion",
+    "frequency_band_batches",
     "lower",
     "lower_layer",
-    "run_pallas",
-    "run_pallas_network",
-    "run_reference",
-    "run_timing",
+    "lower_training_step",
+    "paper_cnn_graph",
+    "softmax_xent_loss",
+    "train_graph",
 ]

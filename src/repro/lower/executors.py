@@ -25,9 +25,33 @@ from __future__ import annotations
 
 import numpy as np
 
+from dataclasses import dataclass
+
 from repro.core.ntx import ntx_execute
 from repro.lower.ir import NtxProgram
-from repro.lower.rules import Conv2dSpec, MatmulSpec, MaxPool2dSpec, ReluSpec
+from repro.lower.rules import (
+    BiasSpec,
+    Conv2dSpec,
+    FlattenSpec,
+    MatmulSpec,
+    MaxPool2dSpec,
+    ReluSpec,
+    SgdUpdateSpec,
+    SoftmaxXentSpec,
+)
+
+
+@dataclass(frozen=True)
+class BatchedSpec:
+    """A per-image spec vmapped over the leading batch axis.
+
+    The graph executor uses this as the plan-cache key for per-image layer
+    nodes (conv/pool) executing over a whole batch: parameters broadcast,
+    everything else maps over axis 0.
+    """
+
+    spec: object
+    batch: int
 
 # ---------------------------------------------------------------------------
 # 1. Reference executor (numpy TCDM + the ntx_execute interpreter)
@@ -190,24 +214,68 @@ def _plan_callable(spec, pass_: str, interpret: bool):
             return dx
 
     if isinstance(spec, MaxPool2dSpec):
+        w, s = spec.window, spec.stride
+
+        def pool_fwd(x):
+            return jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (w, w, 1), (s, s, 1), "VALID"
+            )
+
         if pass_ == "fwd":
-            w, s = spec.window, spec.stride
+            return lambda j: {"y": pool_fwd(j["x"])}
+        if pass_ == "dx":
 
-            def pool(j):
-                y = jax.lax.reduce_window(
-                    j["x"], -jnp.inf, jax.lax.max, (w, w, 1), (s, s, 1), "VALID"
-                )
-                return {"y": y}
+            def pool_dx(j):
+                _, vjp = jax.vjp(pool_fwd, j["x"])
+                return {"dx": vjp(j["dy"])[0]}
 
-            return pool
+            return pool_dx
 
     if isinstance(spec, ReluSpec):
         if pass_ == "fwd":
             return lambda j: {"y": jnp.maximum(j["x"], 0.0)}
         if pass_ == "dx":
-            # ReLU backward has no lowering rule (pure mask), but routing it
-            # through a cached plan keeps run_pallas_network retrace-free.
+            # the sign/select mask pattern of the lowering rule, in jnp
             return lambda j: {"dx": jnp.where(j["x"] > 0.0, j["dy"], 0.0)}
+
+    if isinstance(spec, BiasSpec):
+        if pass_ == "fwd":
+            return lambda j: {"y": j["x"] + j["b"][None, :]}
+        if pass_ == "dw":
+            return lambda j: {"db": j["dy"].sum(axis=0)}
+        if pass_ == "dx":
+            return lambda j: {"dx": j["dy"]}
+
+    if isinstance(spec, SoftmaxXentSpec):
+        if pass_ == "dx":
+            B = spec.batch
+
+            def xent_dx(j):
+                p = jax.nn.softmax(j["z"], axis=-1)
+                return {"dz": (p - j["onehot"]) / B}
+
+            return xent_dx
+
+    if isinstance(spec, SgdUpdateSpec):
+        if pass_ == "upd":
+            lr, mu = spec.lr, spec.momentum
+            if mu:
+
+                def upd_mom(j):
+                    v_new = mu * j["v"] + j["dw"]
+                    return {"v_new": v_new, "w_new": j["w"] - lr * v_new}
+
+                return upd_mom
+            return lambda j: {"w_new": j["w"] - lr * j["dw"]}
+
+    if isinstance(spec, BatchedSpec):
+        inner = _plan_callable(spec.spec, pass_, interpret)
+
+        def batched(j):
+            axes = {k: (None if k in ("w", "b") else 0) for k in j}
+            return jax.vmap(inner, in_axes=(axes,))(j)
+
+        return batched
 
     raise TypeError(
         f"no Pallas route for spec {type(spec).__name__} pass {pass_!r}"
@@ -310,87 +378,109 @@ def run_pallas(
     import jax.numpy as jnp
 
     interpret = _resolve_interpret(interpret)
-    spec = program.meta.get("spec")
-    pass_ = program.meta.get("pass", "fwd")
     if cache is None:
         cache = PLAN_CACHE
+    if program.meta.get("pass") == "train_step":
+        return _run_pallas_graph(program, inputs, interpret, cache)
+    spec = program.meta.get("spec")
+    pass_ = program.meta.get("pass", "fwd")
     plan = cache.get(spec, pass_, program.design.name, interpret)
     j = {k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()}
     return plan(j)
 
 
-def run_pallas_network(
-    specs,
-    x,
-    params,
-    dy=None,
-    *,
-    interpret: bool | None = None,
-    cache: PlanCache | None = None,
-    design: str = "ntx",
-):
-    """One whole fwd + dW + dX chain through cached plans — no per-layer
-    retrace.
+def _run_pallas_graph(program, inputs, interpret: bool, cache):
+    """Graph-driven Pallas execution of one whole-train-step program.
 
-    ``specs`` is a shape-chained layer sequence (``Conv2dSpec`` /
-    ``MatmulSpec`` / ``ReluSpec`` / ``MaxPool2dSpec``); ``params`` is
-    aligned with it (weight array for conv/matmul, ``None`` otherwise).
-    The forward pass threads ``x`` through every layer; the backward pass
-    threads ``dy`` (default: ones over the final output) back, producing
-    the input gradient and one weight gradient per parameterized layer.
-    Every layer-pass executes through ``cache`` — after one warmup call,
-    repeated invocations with the same shapes trigger zero retraces.
-
-    Pooling layers are forward-only (no dX lowering yet): a chain that
-    contains one raises ``NotImplementedError`` when the backward pass is
-    requested, i.e. always — keep pools out of training chains for now.
-
-    Returns ``{"y": ..., "dx": ..., "dw": [per-layer grads or None]}``.
+    Walks the :class:`repro.lower.graph.NetworkGraph` behind ``program`` in
+    the same fwd → loss grad → dW/update/dX schedule the command stream
+    encodes, executing every node pass through a cached per-node plan (the
+    same :class:`PlanCache` the per-layer executor uses; per-image nodes key
+    as :class:`BatchedSpec`). Outputs carry the program's output-region
+    names — logits, ``d_<param>`` (when kept), ``<param>_new`` and
+    ``v_<param>_new`` — so callers are executor-agnostic.
     """
     import jax.numpy as jnp
 
-    interpret = _resolve_interpret(interpret)
-    if cache is None:
-        cache = PLAN_CACHE
-    if len(specs) != len(params):
-        raise ValueError(f"{len(specs)} specs but {len(params)} param entries")
+    graph = program.meta["graph"]
+    B = graph.batch
+    design = program.design.name
+    keep_grads = program.meta.get("keep_grads", True)
+    j = {k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()}
 
     def plan(spec, pass_):
         return cache.get(spec, pass_, design, interpret)
 
-    # forward: keep each layer's input for the backward pass
-    a = jnp.asarray(x, jnp.float32)
-    acts = []
-    for spec, w in zip(specs, params):
-        acts.append(a)
-        if isinstance(spec, MatmulSpec):
-            a = plan(spec, "fwd")({"a": a, "b": jnp.asarray(w, jnp.float32)})["c"]
-        elif isinstance(spec, Conv2dSpec):
-            a = plan(spec, "fwd")({"x": a, "w": jnp.asarray(w, jnp.float32)})["y"]
-        elif isinstance(spec, (ReluSpec, MaxPool2dSpec)):
-            a = plan(spec, "fwd")({"x": a})["y"]
-        else:
-            raise TypeError(f"no network route for {type(spec).__name__}")
-    y = a
+    def bspec(spec):
+        return BatchedSpec(spec, B) if B > 1 else spec
 
-    # backward: dX chains in reverse, dW drops out per parameterized layer
-    g = jnp.ones_like(y) if dy is None else jnp.asarray(dy, jnp.float32)
-    dws: list = [None] * len(specs)
-    for idx in range(len(specs) - 1, -1, -1):
-        spec, w, a_in = specs[idx], params[idx], acts[idx]
-        if isinstance(spec, MatmulSpec):
-            wj = jnp.asarray(w, jnp.float32)
-            dws[idx] = plan(spec, "dw")({"a": a_in, "dy": g})["dw"]
-            g = plan(spec, "dx")({"dy": g, "b": wj})["dx"]
-        elif isinstance(spec, Conv2dSpec):
-            wj = jnp.asarray(w, jnp.float32)
-            dws[idx] = plan(spec, "dw")({"x": a_in, "dy": g})["dw"]
-            g = plan(spec, "dx")({"dy": g, "w": wj})["dx"]
-        elif isinstance(spec, ReluSpec):
-            g = plan(spec, "dx")({"x": a_in, "dy": g})["dx"]
+    # forward
+    acts = {graph.input_edge: j[graph.input_edge]}
+    for node in graph.nodes:
+        s, a = node.spec, acts[node.in_edge]
+        if isinstance(s, Conv2dSpec):
+            y = plan(bspec(s), "fwd")({"x": a, "w": j[node.param]})["y"]
+        elif isinstance(s, MatmulSpec):
+            y = plan(s, "fwd")({"a": a, "b": j[node.param]})["c"]
+        elif isinstance(s, BiasSpec):
+            y = plan(s, "fwd")({"x": a.reshape(s.rows, s.c), "b": j[node.param]})
+            y = y["y"].reshape(a.shape)
+        elif isinstance(s, ReluSpec):
+            whole = ReluSpec((B,) + tuple(s.shape)) if B > 1 else s
+            y = plan(whole, "fwd")({"x": a})["y"]
+        elif isinstance(s, MaxPool2dSpec):
+            y = plan(bspec(s), "fwd")({"x": a})["y"]
+        elif isinstance(s, FlattenSpec):
+            y = a.reshape((B, s.size) if B > 1 else (s.size,))
         else:
-            raise NotImplementedError(
-                f"{type(spec).__name__} has no backward lowering — "
-                "training chains must avoid pooling for now"
+            raise TypeError(f"no graph route for {type(s).__name__}")
+        acts[node.out_edge] = y
+
+    logits = acts[graph.logits_edge]
+    outs = {graph.logits_edge: logits}
+
+    # loss gradient
+    g = plan(graph.loss, "dx")(
+        {"z": logits, "onehot": j[graph.label_edge]}
+    )["dz"]
+
+    # backward: dW -> update -> dX per node, in reverse
+    for node in reversed(graph.nodes):
+        s, a_in = node.spec, acts[node.in_edge]
+        if node.param is not None:
+            p = node.param
+            if isinstance(s, Conv2dSpec):
+                dwv = plan(bspec(s), "dw")({"x": a_in, "dy": g})["dw"]
+                dw = dwv.sum(axis=0) if B > 1 else dwv
+            elif isinstance(s, MatmulSpec):
+                dw = plan(s, "dw")({"a": a_in, "dy": g})["dw"]
+            elif isinstance(s, BiasSpec):
+                dw = plan(s, "dw")({"dy": g.reshape(s.rows, s.c)})["db"]
+            else:
+                raise TypeError(f"no dW route for {type(s).__name__}")
+            if keep_grads:
+                outs[f"d_{p}"] = dw
+            u_spec = SgdUpdateSpec(
+                n=dw.size, lr=graph.lr, momentum=graph.momentum
             )
-    return {"y": y, "dx": g, "dw": dws}
+            u_in = {"w": j[p].reshape(-1), "dw": dw.reshape(-1)}
+            if graph.momentum:
+                u_in["v"] = j[f"v_{p}"].reshape(-1)
+            u = plan(u_spec, "upd")(u_in)
+            outs[f"{p}_new"] = u["w_new"].reshape(j[p].shape)
+            if graph.momentum:
+                outs[f"v_{p}_new"] = u["v_new"].reshape(j[p].shape)
+        if node.in_edge == graph.input_edge:
+            continue
+        if isinstance(s, Conv2dSpec):
+            g = plan(bspec(s), "dx")({"dy": g, "w": j[node.param]})["dx"]
+        elif isinstance(s, MatmulSpec):
+            g = plan(s, "dx")({"dy": g, "b": j[node.param]})["dx"]
+        elif isinstance(s, ReluSpec):
+            whole = ReluSpec((B,) + tuple(s.shape)) if B > 1 else s
+            g = plan(whole, "dx")({"x": a_in, "dy": g})["dx"]
+        elif isinstance(s, MaxPool2dSpec):
+            g = plan(bspec(s), "dx")({"x": a_in, "dy": g})["dx"]
+        elif isinstance(s, (FlattenSpec, BiasSpec)):
+            g = g.reshape(a_in.shape)
+    return outs

@@ -46,6 +46,12 @@ class DesignPoint:
     hw_loops: int
     n_agus: int
     autonomous_writeback: bool
+    # One cluster's scratchpad (§2.1): the TCDM budget a whole-step program's
+    # liveness allocator must fit into is this times the cluster count.
+    tcdm_bytes_per_cluster: int = 64 * 1024
+
+    def tcdm_budget_bytes(self, n_clusters: int) -> int:
+        return self.tcdm_bytes_per_cluster * n_clusters
 
 
 NS_DESIGN = DesignPoint("ns", hw_loops=3, n_agus=2, autonomous_writeback=False)
@@ -248,17 +254,157 @@ class NtxProgram:
         }
 
 
-class RegionAllocator:
-    """Bump allocator laying regions out back to back in TCDM."""
+#: Sentinel "lives until the end of the program" step index.
+LIVE_END = 1 << 62
 
-    def __init__(self):
+
+class LivenessAllocator:
+    """Liveness-based TCDM region allocator (interval coloring).
+
+    Regions carry a live interval ``[start, end]`` in *step* units (the graph
+    compiler's (node, pass) schedule positions). Allocation walks the steps
+    in order: space whose region died strictly before the new region's birth
+    is recycled first-fit; only when no gap fits does the watermark grow.
+    ``peak_tcdm_bytes`` is therefore the true high-water mark of the laid-out
+    program — two regions share addresses only when their live intervals are
+    disjoint.
+
+    When a ``budget_words`` is given (the design point's 64 KiB x clusters
+    TCDM) and neither a gap nor the remaining headroom fits, the region is
+    *spilled*: placed in the DRAM segment that starts at ``budget_words``,
+    recorded in :attr:`spilled` so the graph compiler can stage the extra
+    DMA traffic in-band. The flat-memory executors are oblivious — a spilled
+    region is just an address window above the TCDM watermark — which keeps
+    execution bit-identical while the timing model charges for the traffic.
+
+    With ``budget_words=None`` and whole-program lifetimes this degenerates
+    to the old back-to-back bump layout (see :class:`RegionAllocator`).
+    """
+
+    def __init__(self, budget_words: int | None = None):
+        self.budget_words = budget_words
         self.regions: dict[str, TensorRegion] = {}
-        self._top = 0
+        self.intervals: dict[str, tuple[int, int]] = {}
+        self.spilled: list[str] = []
+        self._live: list[list] = []  # [base, size, end] of live TCDM regions
+        self._gaps: list[list] = []  # [base, size], sorted by base
+        self._top = 0  # TCDM watermark (words)
+        self._peak = 0  # historical max watermark
+        self._dram_top = budget_words  # spill segment grows from the budget
 
-    def alloc(self, name: str, shape: tuple[int, ...], kind: str) -> TensorRegion:
+    # -- bookkeeping --------------------------------------------------------
+
+    @property
+    def peak_tcdm_words(self) -> int:
+        return self._peak
+
+    @property
+    def peak_tcdm_bytes(self) -> int:
+        return self._peak * ELEM_BYTES
+
+    def _expire(self, now: int) -> None:
+        keep = []
+        for rec in self._live:
+            if rec[2] < now:
+                self._gaps.append([rec[0], rec[1]])
+            else:
+                keep.append(rec)
+        self._live = keep
+        # coalesce adjacent gaps so first-fit sees maximal holes
+        self._gaps.sort()
+        merged: list[list] = []
+        for base, size in self._gaps:
+            if merged and merged[-1][0] + merged[-1][1] == base:
+                merged[-1][1] += size
+            else:
+                merged.append([base, size])
+        # a gap touching the watermark is headroom, not a hole
+        if merged and merged[-1][0] + merged[-1][1] == self._top:
+            self._top = merged.pop()[0]
+        self._gaps = merged
+
+    def _place(self, size: int) -> tuple[int, bool]:
+        """First-fit base address for ``size`` words; True when spilled."""
+        for gap in self._gaps:
+            if gap[1] >= size:
+                base = gap[0]
+                gap[0] += size
+                gap[1] -= size
+                if gap[1] == 0:
+                    self._gaps.remove(gap)
+                return base, False
+        if self.budget_words is None or self._top + size <= self.budget_words:
+            base = self._top
+            self._top += size
+            self._peak = max(self._peak, self._top)
+            return base, False
+        base = self._dram_top
+        self._dram_top += size
+        return base, True
+
+    # -- the public surface -------------------------------------------------
+
+    def alloc(
+        self,
+        name: str,
+        shape: tuple[int, ...],
+        kind: str,
+        *,
+        start: int = 0,
+        end: int = LIVE_END,
+    ) -> TensorRegion:
         if name in self.regions:
             raise ValueError(f"region {name!r} already allocated")
-        r = TensorRegion(name, self._top, tuple(shape), kind)
+        size = math.prod(shape)
+        self._expire(start)
+        base, spilled = self._place(size)
+        r = TensorRegion(name, base, tuple(shape), kind)
         self.regions[name] = r
-        self._top = r.end
+        self.intervals[name] = (start, end)
+        if spilled:
+            self.spilled.append(name)
+        else:
+            self._live.append([base, size, end])
         return r
+
+    def alias(
+        self, name: str, of: str, shape: tuple[int, ...], kind: str, *, end: int = LIVE_END
+    ) -> TensorRegion:
+        """A zero-copy view of an existing region (flatten nodes): same base,
+        new shape, and the underlying storage lives at least until ``end``."""
+        if name in self.regions:
+            raise ValueError(f"region {name!r} already allocated")
+        src = self.regions[of]
+        if math.prod(shape) != src.size:
+            raise ValueError(
+                f"alias {name!r} size {math.prod(shape)} != {of!r} size {src.size}"
+            )
+        r = TensorRegion(name, src.base, tuple(shape), kind)
+        self.regions[name] = r
+        s0, e0 = self.intervals[of]
+        self.intervals[of] = (s0, max(e0, end))
+        self.intervals[name] = (s0, end)
+        for rec in self._live:
+            if rec[0] == src.base and rec[1] == src.size:
+                rec[2] = max(rec[2], end)
+                break
+        return r
+
+
+class RegionAllocator:
+    """Bump allocator laying regions out back to back in TCDM.
+
+    Per-layer lowering keeps the historical behaviour — whole-program
+    lifetimes over an unbounded budget make :class:`LivenessAllocator`
+    degenerate to exactly the old bump layout.
+    """
+
+    def __init__(self):
+        self._liv = LivenessAllocator(budget_words=None)
+
+    @property
+    def regions(self) -> dict[str, TensorRegion]:
+        return self._liv.regions
+
+    def alloc(self, name: str, shape: tuple[int, ...], kind: str) -> TensorRegion:
+        return self._liv.alloc(name, shape, kind)

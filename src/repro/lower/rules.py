@@ -112,6 +112,56 @@ class ReluSpec:
         return math.prod(self.shape)
 
 
+@dataclass(frozen=True)
+class FlattenSpec:
+    """A zero-copy reshape to 1-D per item: only the graph compiler consumes
+    it (the output tensor aliases the input region — no commands)."""
+
+    in_shape: tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.in_shape)
+
+
+@dataclass(frozen=True)
+class BiasSpec:
+    """y[r, c] = x[r, c] + b[c] over ``rows`` broadcast rows (rows folds
+    batch and any spatial extent). db reduces dy over the rows."""
+
+    rows: int
+    c: int
+
+
+@dataclass(frozen=True)
+class SoftmaxXentSpec:
+    """Softmax-cross-entropy over (batch, classes) logits.
+
+    Only the gradient pass lowers (``dx``): dz = (softmax(z) - onehot) / B,
+    staged entirely in-band (max/exp/sum/recip command blocks). The scalar
+    loss value stays on the driver core — executors read it off the logits.
+    """
+
+    batch: int
+    classes: int
+
+
+@dataclass(frozen=True)
+class SgdUpdateSpec:
+    """SGD weight update over a flat parameter of ``n`` elements.
+
+    Plain SGD is one MAC block: w_new[i] = w[i]*1 + dW[i]*(-lr), the
+    two-term reduction streaming (w, dW) through rd0 and the (1, -lr)
+    coefficient pair through rd1. With ``momentum`` a second MAC block runs
+    first: v_new[i] = v[i]*mu + dW[i]*1, and the update reads v_new —
+    matching :func:`repro.optim.optimizers.sgd`.
+    """
+
+    n: int
+    lr: float
+    momentum: float = 0.0
+
+
 # ---------------------------------------------------------------------------
 # The shared loop-nest splitter
 # ---------------------------------------------------------------------------
@@ -209,6 +259,24 @@ def _memset_block(dst: TensorRegion, value: float = 0.0) -> CommandBlock:
         tag=f"memset:{dst.name}",
         writes=(dst.name,),
         dma_bytes_out=float(dst.bytes),
+    )
+
+
+def _memset_at(dst: TensorRegion, off: int, value: float) -> CommandBlock:
+    """Stage one scalar constant in-band (a single-element memset)."""
+    return CommandBlock(
+        template=NtxCommand(
+            loops=(1, 1, 1, 1, 1),
+            opcode="memset",
+            agu_rd0=Agu(dst.base + off, (0,) * MAX_LOOPS),
+            agu_wr=Agu(dst.base + off, (0,) * MAX_LOOPS),
+            init_level=0,
+            store_level=0,
+            init_value=value,
+        ),
+        tag=f"memset:{dst.name}[{off}]",
+        writes=(dst.name,),
+        dma_bytes_out=float(ELEM_BYTES),
     )
 
 
@@ -315,10 +383,7 @@ def matmul_nest(
 def matmul_template(
     m: int, n: int, k: int, a_base: int, b_base: int, c_base: int
 ) -> NtxCommand:
-    """The single-command NTX matmul at explicit TCDM bases (fwd pass).
-
-    This is what :func:`repro.core.ntx.matmul_command` delegates to.
-    """
+    """The single-command NTX matmul at explicit TCDM bases (fwd pass)."""
     sizes, n_red, rd0, rd1, wr = matmul_nest(m, n, k, "fwd", a_base, b_base, c_base)
     return NtxCommand(
         loops=_pad5(sizes, 1),
@@ -410,9 +475,8 @@ def conv2d_fwd_template(
 ) -> NtxCommand:
     """The NTX conv-forward command template at explicit TCDM bases.
 
-    With ``cout=1`` this is exactly the single-output-channel command of
-    :func:`repro.core.ntx.conv2d_command` (HWI-contiguous weights, one output
-    plane) — the thin wrapper there delegates here.
+    With ``cout=1`` this is the single-output-channel command (HWI-
+    contiguous weights, one full output plane per offload).
     """
     oh = (in_h - kh) // stride + 1
     ow = (in_w - kw) // stride + 1
@@ -606,13 +670,428 @@ def _lower_relu(spec: ReluSpec, design: DesignPoint) -> NtxProgram:
     )
 
 
+def relu_dx_blocks(
+    x: TensorRegion,
+    dy: TensorRegion,
+    mask: TensorRegion,
+    dx: TensorRegion,
+    design: DesignPoint,
+    *,
+    tag: str = "relu:dx",
+) -> list[CommandBlock]:
+    """dX = dY * (x > 0): the sign/select mask pattern at explicit regions.
+
+    Two streaming blocks: a ``sign`` pass turns the forward input into a
+    0/1 mask, a ``vmul`` pass gates the incoming gradient through it.
+    """
+    n = x.size
+    return [
+        _nest_block(
+            (n,), 0,
+            (x.base, (1,)), None, (mask.base, (1,)),
+            design, opcode="sign", tag=f"{tag}:mask",
+            reads=(x,), writes=(mask,),
+        ),
+        _nest_block(
+            (n,), 0,
+            (mask.base, (1,)), (dy.base, (1,)), (dx.base, (1,)),
+            design, opcode="vmul", tag=tag,
+            reads=(mask, dy), writes=(dx,),
+        ),
+    ]
+
+
+def _lower_relu_dx(spec: ReluSpec, design: DesignPoint) -> NtxProgram:
+    alloc = RegionAllocator()
+    rx = alloc.alloc("x", spec.shape, "input")
+    rdy = alloc.alloc("dy", spec.shape, "input")
+    rm = alloc.alloc("mask", spec.shape, "scratch")
+    rdx = alloc.alloc("dx", spec.shape, "output")
+    return NtxProgram(
+        name=f"relu{spec.size}:dx",
+        blocks=relu_dx_blocks(rx, rdy, rm, rdx, design),
+        regions=alloc.regions,
+        design=design,
+        meta={"spec": spec, "pass": "dx"},
+    )
+
+
+def maxpool_dx_blocks(
+    spec: MaxPool2dSpec,
+    x: TensorRegion,
+    y: TensorRegion,
+    dy: TensorRegion,
+    mask: TensorRegion,
+    dx: TensorRegion,
+    design: DesignPoint,
+    *,
+    tag: str = "maxpool:dx",
+) -> list[CommandBlock]:
+    """Max-pool backward as the argmax-mask scatter, staged per window tap.
+
+    For non-overlapping pooling every input pixel belongs to exactly one
+    window, so the scatter is affine: per window tap (a, b), a ``cmpge``
+    block recomputes the winner mask (x strided at the tap vs the pooled
+    max), and a ``vmul`` block routes dY through it into the strided dX
+    positions. The leading memset zeroes remainder pixels no window covers.
+    Ties route the gradient to every winning tap (the jnp oracle picks one;
+    with continuous inputs the two agree).
+    """
+    s, ww = spec.stride, spec.window
+    if ww != s:
+        raise NotImplementedError(
+            "maxpool dX lowers only for non-overlapping pooling "
+            f"(window == stride); got window={ww} stride={s}"
+        )
+    oh, ow, c = spec.out_h, spec.out_w, spec.c
+    iw = spec.in_w
+    blocks = [_memset_block(dx)]
+    for a in range(ww):
+        for b in range(ww):
+            off = (a * iw + b) * c
+            blocks.append(
+                _nest_block(
+                    (c, ow, oh), 0,
+                    (x.base + off, (1, s * c, s * iw * c)),
+                    (y.base, (1, c, ow * c)),
+                    (mask.base, (1, c, ow * c)),
+                    design, opcode="cmpge", tag=f"{tag}:mask[{a},{b}]",
+                    reads=(x, y), writes=(mask,),
+                )
+            )
+            blocks.append(
+                _nest_block(
+                    (c, ow, oh), 0,
+                    (mask.base, (1, c, ow * c)),
+                    (dy.base, (1, c, ow * c)),
+                    (dx.base + off, (1, s * c, s * iw * c)),
+                    design, opcode="vmul", tag=f"{tag}[{a},{b}]",
+                    reads=(mask, dy), writes=(dx,),
+                )
+            )
+    return blocks
+
+
+def _lower_maxpool_dx(spec: MaxPool2dSpec, design: DesignPoint) -> NtxProgram:
+    oh, ow, c = spec.out_h, spec.out_w, spec.c
+    alloc = RegionAllocator()
+    rx = alloc.alloc("x", (spec.in_h, spec.in_w, c), "input")
+    ry = alloc.alloc("y", (oh, ow, c), "input")
+    rdy = alloc.alloc("dy", (oh, ow, c), "input")
+    rm = alloc.alloc("mask", (oh, ow, c), "scratch")
+    rdx = alloc.alloc("dx", (spec.in_h, spec.in_w, c), "output")
+    return NtxProgram(
+        name=f"maxpool{spec.window}x{spec.window}s{spec.stride}:{oh}x{ow}x{c}:dx",
+        blocks=maxpool_dx_blocks(spec, rx, ry, rdy, rm, rdx, design),
+        regions=alloc.regions,
+        design=design,
+        meta={"spec": spec, "pass": "dx"},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Bias rules (fwd / dw / dx)
+# ---------------------------------------------------------------------------
+
+
+def _lower_bias(spec: BiasSpec, pass_: str, design: DesignPoint) -> NtxProgram:
+    rows, c = spec.rows, spec.c
+    alloc = RegionAllocator()
+    if pass_ == "fwd":
+        rx = alloc.alloc("x", (rows, c), "input")
+        rb = alloc.alloc("b", (c,), "param")
+        ry = alloc.alloc("y", (rows, c), "output")
+        blocks = [
+            _nest_block(
+                (c, rows), 0,
+                (rx.base, (1, c)), (rb.base, (1, 0)), (ry.base, (1, c)),
+                design, opcode="vadd", tag="bias:fwd",
+                reads=(rx, rb), writes=(ry,),
+            )
+        ]
+    elif pass_ == "dw":
+        rdy = alloc.alloc("dy", (rows, c), "input")
+        rone = alloc.alloc("one", (1,), "scratch")
+        rdb = alloc.alloc("db", (c,), "output")
+        blocks = [
+            _memset_at(rone, 0, 1.0),
+            # db[ch] = sum_rows dy[row, ch] — a MAC against the staged 1.0
+            _nest_block(
+                (rows, c), 1,
+                (rdy.base, (c, 1)), (rone.base, (0, 0)), (rdb.base, (0, 1)),
+                design, opcode="mac", tag="bias:dw",
+                reads=(rdy, rone), writes=(rdb,),
+            ),
+        ]
+    elif pass_ == "dx":
+        rdy = alloc.alloc("dy", (rows, c), "input")
+        rdx = alloc.alloc("dx", (rows, c), "output")
+        blocks = [
+            _nest_block(
+                (rows * c,), 0,
+                (rdy.base, (1,)), None, (rdx.base, (1,)),
+                design, opcode="copy", tag="bias:dx",
+                reads=(rdy,), writes=(rdx,),
+            )
+        ]
+    else:
+        raise ValueError(f"unknown bias pass {pass_!r}; expected one of {PASSES}")
+    return NtxProgram(
+        name=f"bias{rows}x{c}:{pass_}",
+        blocks=blocks,
+        regions=alloc.regions,
+        design=design,
+        meta={"spec": spec, "pass": pass_},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Softmax-cross-entropy gradient (the loss node's backward rule)
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent_grad_blocks(
+    spec: SoftmaxXentSpec,
+    z: TensorRegion,
+    onehot: TensorRegion,
+    dz: TensorRegion,
+    scratch: dict[str, TensorRegion],
+    design: DesignPoint,
+    *,
+    tag: str = "softmax_xent:dx",
+) -> list[CommandBlock]:
+    """dz = (softmax(z) - onehot) / B, staged entirely in-band.
+
+    ``scratch`` must hold regions ``m``/``negm``/``s``/``r`` shaped (B,),
+    ``zc``/``e``/``p``/``pb``/``ohb`` shaped (B, C), and a 4-element
+    ``consts`` region. The max-subtraction keeps exp in range exactly like
+    the numerically-stable jnp softmax.
+    """
+    B, C = spec.batch, spec.classes
+    m, negm = scratch["m"], scratch["negm"]
+    zc, e = scratch["zc"], scratch["e"]
+    s, r, p = scratch["s"], scratch["r"], scratch["p"]
+    pb, ohb = scratch["pb"], scratch["ohb"]
+    consts = scratch["consts"]
+    blocks = [
+        _memset_at(consts, 0, -1.0),
+        _memset_at(consts, 1, 1.0),
+        _memset_at(consts, 2, 1.0 / B),
+        _memset_at(consts, 3, -1.0 / B),
+        # m[b] = max_c z[b, c]
+        _nest_block(
+            (C, B), 1,
+            (z.base, (1, C)), None, (m.base, (0, 1)),
+            design, opcode="vmax", tag=f"{tag}:rowmax",
+            reads=(z,), writes=(m,),
+        ),
+        # negm = -m
+        _nest_block(
+            (B,), 0,
+            (m.base, (1,)), (consts.base + 0, (0,)), (negm.base, (1,)),
+            design, opcode="vmul", tag=f"{tag}:negmax",
+            reads=(m, consts), writes=(negm,),
+        ),
+        # zc[b, c] = z - m[b]
+        _nest_block(
+            (C, B), 0,
+            (z.base, (1, C)), (negm.base, (0, 1)), (zc.base, (1, C)),
+            design, opcode="vadd", tag=f"{tag}:shift",
+            reads=(z, negm), writes=(zc,),
+        ),
+        # e = exp(zc)
+        _nest_block(
+            (B * C,), 0,
+            (zc.base, (1,)), None, (e.base, (1,)),
+            design, opcode="vexp", tag=f"{tag}:exp",
+            reads=(zc,), writes=(e,),
+        ),
+        # s[b] = sum_c e[b, c]
+        _nest_block(
+            (C, B), 1,
+            (e.base, (1, C)), (consts.base + 1, (0, 0)), (s.base, (0, 1)),
+            design, opcode="mac", tag=f"{tag}:rowsum",
+            reads=(e, consts), writes=(s,),
+        ),
+        # r = 1 / s
+        _nest_block(
+            (B,), 0,
+            (s.base, (1,)), None, (r.base, (1,)),
+            design, opcode="vrecip", tag=f"{tag}:recip",
+            reads=(s,), writes=(r,),
+        ),
+        # p[b, c] = e * r[b]
+        _nest_block(
+            (C, B), 0,
+            (e.base, (1, C)), (r.base, (0, 1)), (p.base, (1, C)),
+            design, opcode="vmul", tag=f"{tag}:softmax",
+            reads=(e, r), writes=(p,),
+        ),
+        # dz = p/B - onehot/B
+        _nest_block(
+            (B * C,), 0,
+            (p.base, (1,)), (consts.base + 2, (0,)), (pb.base, (1,)),
+            design, opcode="vmul", tag=f"{tag}:scale_p",
+            reads=(p, consts), writes=(pb,),
+        ),
+        _nest_block(
+            (B * C,), 0,
+            (onehot.base, (1,)), (consts.base + 3, (0,)), (ohb.base, (1,)),
+            design, opcode="vmul", tag=f"{tag}:scale_onehot",
+            reads=(onehot, consts), writes=(ohb,),
+        ),
+        _nest_block(
+            (B * C,), 0,
+            (pb.base, (1,)), (ohb.base, (1,)), (dz.base, (1,)),
+            design, opcode="vadd", tag=tag,
+            reads=(pb, ohb), writes=(dz,),
+        ),
+    ]
+    return blocks
+
+
+def softmax_xent_scratch_shapes(spec: SoftmaxXentSpec) -> dict[str, tuple[int, ...]]:
+    """The scratch regions :func:`softmax_xent_grad_blocks` needs."""
+    B, C = spec.batch, spec.classes
+    return {
+        "m": (B,), "negm": (B,), "s": (B,), "r": (B,),
+        "zc": (B, C), "e": (B, C), "p": (B, C), "pb": (B, C), "ohb": (B, C),
+        "consts": (4,),
+    }
+
+
+def _lower_softmax_xent_grad(spec: SoftmaxXentSpec, design: DesignPoint) -> NtxProgram:
+    B, C = spec.batch, spec.classes
+    alloc = RegionAllocator()
+    rz = alloc.alloc("z", (B, C), "input")
+    roh = alloc.alloc("onehot", (B, C), "input")
+    rdz = alloc.alloc("dz", (B, C), "output")
+    scratch = {
+        name: alloc.alloc(name, shape, "scratch")
+        for name, shape in softmax_xent_scratch_shapes(spec).items()
+    }
+    return NtxProgram(
+        name=f"softmax_xent{B}x{C}:dx",
+        blocks=softmax_xent_grad_blocks(spec, rz, roh, rdz, scratch, design),
+        regions=alloc.regions,
+        design=design,
+        meta={"spec": spec, "pass": "dx"},
+    )
+
+
+# ---------------------------------------------------------------------------
+# SGD update rule (w <- w - lr * dW, optional momentum)
+# ---------------------------------------------------------------------------
+
+
+def _pair_mac_block(
+    src0: TensorRegion,
+    src1: TensorRegion,
+    coeffs: TensorRegion,
+    coeff_off: int,
+    dst: TensorRegion,
+    design: DesignPoint,
+    *,
+    tag: str,
+) -> CommandBlock:
+    """dst[i] = src0[i]*coeffs[off] + src1[i]*coeffs[off+1] as one MAC nest.
+
+    The two operands stream through rd0 via the cross-region base delta in
+    the reduction dim; the coefficient pair streams through rd1 with the
+    output-dim stride pinned to 0. NOT relocation-safe (the delta bakes the
+    final bases in) — emit only at final region addresses.
+    """
+    delta = src1.base - src0.base
+    return _nest_block(
+        (2, src0.size), 1,
+        (src0.base, (delta, 1)),
+        (coeffs.base + coeff_off, (1, 0)),
+        (dst.base, (0, 1)),
+        design, opcode="mac", tag=tag,
+        reads=(src0, src1, coeffs), writes=(dst,),
+    )
+
+
+def sgd_update_blocks(
+    spec: SgdUpdateSpec,
+    w: TensorRegion,
+    dw: TensorRegion,
+    w_new: TensorRegion,
+    consts: TensorRegion,
+    design: DesignPoint,
+    *,
+    v: TensorRegion | None = None,
+    v_new: TensorRegion | None = None,
+    tag: str = "sgd",
+) -> list[CommandBlock]:
+    """The weight-update MAC blocks (see :class:`SgdUpdateSpec`).
+
+    ``consts`` is 2 elements for plain SGD ((1, -lr)), 4 with momentum
+    ((mu, 1) then (1, -lr)).
+    """
+    lr, mu = spec.lr, spec.momentum
+    if mu:
+        if v is None or v_new is None:
+            raise ValueError("momentum update needs v and v_new regions")
+        return [
+            _memset_at(consts, 0, mu),
+            _memset_at(consts, 1, 1.0),
+            _memset_at(consts, 2, 1.0),
+            _memset_at(consts, 3, -lr),
+            _pair_mac_block(v, dw, consts, 0, v_new, design, tag=f"{tag}:momentum"),
+            _pair_mac_block(w, v_new, consts, 2, w_new, design, tag=f"{tag}:update"),
+        ]
+    return [
+        _memset_at(consts, 0, 1.0),
+        _memset_at(consts, 1, -lr),
+        _pair_mac_block(w, dw, consts, 0, w_new, design, tag=f"{tag}:update"),
+    ]
+
+
+def _lower_sgd_update(spec: SgdUpdateSpec, design: DesignPoint) -> NtxProgram:
+    n = spec.n
+    alloc = RegionAllocator()
+    rw = alloc.alloc("w", (n,), "param")
+    rdw = alloc.alloc("dw", (n,), "input")
+    rv = rvn = None
+    if spec.momentum:
+        rv = alloc.alloc("v", (n,), "param")
+        rvn = alloc.alloc("v_new", (n,), "output")
+    rc = alloc.alloc("consts", (4 if spec.momentum else 2,), "scratch")
+    rwn = alloc.alloc("w_new", (n,), "output")
+    return NtxProgram(
+        name=f"sgd{n}:upd",
+        blocks=sgd_update_blocks(spec, rw, rdw, rwn, rc, design, v=rv, v_new=rvn),
+        regions=alloc.regions,
+        design=design,
+        meta={"spec": spec, "pass": "upd"},
+    )
+
+
 # ---------------------------------------------------------------------------
 # The entry point
 # ---------------------------------------------------------------------------
 
 
 def lower(spec, pass_: str = "fwd", *, design: DesignPoint = NTX_DESIGN) -> NtxProgram:
-    """Lower one layer spec + pass to an :class:`NtxProgram`."""
+    """Lower one layer spec + pass to an :class:`NtxProgram`.
+
+    Supported (spec, pass) matrix::
+
+        MatmulSpec       fwd  dw  dx
+        Conv2dSpec       fwd  dw  dx
+        BiasSpec         fwd  dw  dx          (dw is the db reduction)
+        ReluSpec         fwd      dx          (no parameters -> no dw)
+        MaxPool2dSpec    fwd      dx          (dx only for window == stride)
+        SoftmaxXentSpec           dx          (the loss-gradient rule)
+        SgdUpdateSpec    upd                  (the weight-update rule)
+        FlattenSpec      (graph-only zero-copy view; never lowered alone)
+
+    Combinations outside the matrix raise: ``NotImplementedError`` when the
+    pass is meaningful but genuinely unsupported (overlapping-pool dX,
+    flatten standalone), ``ValueError`` when the pass name itself is
+    nonsensical for the spec (e.g. relu ``dw`` — no parameters exist).
+    """
     if isinstance(spec, MatmulSpec):
         return _lower_matmul(spec, pass_, design)
     if isinstance(spec, Conv2dSpec):
@@ -624,21 +1103,48 @@ def lower(spec, pass_: str = "fwd", *, design: DesignPoint = NTX_DESIGN) -> NtxP
             return _lower_conv_dx(spec, design)
         raise ValueError(f"unknown conv pass {pass_!r}; expected one of {PASSES}")
     if isinstance(spec, MaxPool2dSpec):
-        if pass_ != "fwd":
-            raise NotImplementedError("pooling backward is not lowered yet")
-        return _lower_maxpool(spec, design)
+        if pass_ == "fwd":
+            return _lower_maxpool(spec, design)
+        if pass_ == "dx":
+            return _lower_maxpool_dx(spec, design)  # window == stride only
+        raise ValueError(
+            f"maxpool has no {pass_!r} pass (no parameters); supported: fwd, dx"
+        )
     if isinstance(spec, ReluSpec):
-        if pass_ != "fwd":
-            raise NotImplementedError("relu backward is not lowered yet")
-        return _lower_relu(spec, design)
+        if pass_ == "fwd":
+            return _lower_relu(spec, design)
+        if pass_ == "dx":
+            return _lower_relu_dx(spec, design)
+        raise ValueError(
+            f"relu has no {pass_!r} pass (no parameters); supported: fwd, dx"
+        )
+    if isinstance(spec, BiasSpec):
+        return _lower_bias(spec, pass_, design)
+    if isinstance(spec, SoftmaxXentSpec):
+        if pass_ != "dx":
+            raise NotImplementedError(
+                "softmax-cross-entropy lowers only its gradient (pass 'dx'); "
+                "the scalar loss value is computed on the driver core"
+            )
+        return _lower_softmax_xent_grad(spec, design)
+    if isinstance(spec, SgdUpdateSpec):
+        if pass_ != "upd":
+            raise ValueError(f"sgd update only has the 'upd' pass, got {pass_!r}")
+        return _lower_sgd_update(spec, design)
+    if isinstance(spec, FlattenSpec):
+        raise NotImplementedError(
+            "flatten is a zero-copy view; only the graph compiler "
+            "(repro.lower.graph) consumes it, by aliasing regions"
+        )
     raise TypeError(f"no lowering rule for {type(spec).__name__}")
 
 
 def lower_layer(spec, *, design: DesignPoint = NTX_DESIGN) -> dict[str, NtxProgram]:
-    """All training passes of one layer: {'fwd': ..., 'dw': ..., 'dx': ...}.
+    """All training passes of one layer, keyed by pass name.
 
-    Pooling/ReLU only have a forward lowering so far.
+    Parameterized layers (matmul/conv/bias) get fwd+dw+dx; relu and
+    (non-overlapping) pooling get fwd+dx.
     """
     if isinstance(spec, (MaxPool2dSpec, ReluSpec)):
-        return {"fwd": lower(spec, "fwd", design=design)}
+        return {p: lower(spec, p, design=design) for p in ("fwd", "dx")}
     return {p: lower(spec, p, design=design) for p in PASSES}

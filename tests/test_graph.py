@@ -1,0 +1,234 @@
+"""The network-graph compiler: whole train-step NtxPrograms.
+
+Oracle is jax autodiff on the *same* model: the compiled step's logits,
+per-parameter gradients, and updated weights must match ``jax.grad`` +
+the SGD(+momentum) update to fp32 tolerance. The liveness allocator is
+checked for actual reuse (peak < bump layout) and for the no-aliasing
+invariant (regions overlapping in time never overlap in address), and all
+three executors must see the same command stream.
+"""
+
+import numpy as np
+import pytest
+
+from repro.lower import (
+    LivenessAllocator,
+    NS_DESIGN,
+    lower_training_step,
+    paper_cnn_graph,
+    run_reference,
+    run_timing,
+    softmax_xent_loss,
+    train_graph,
+)
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.kernels import ref  # noqa: E402
+
+
+def _batch(rng, b, img, n_classes=10):
+    x = rng.randn(b, img, img, 3).astype(np.float32)
+    labels = rng.randint(0, n_classes, b)
+    return x, labels, np.eye(n_classes, dtype=np.float32)[labels]
+
+
+def _jax_forward(graph, p, x):
+    """The paper CNN of ``paper_cnn_graph`` in plain jax (the oracle)."""
+    h = ref.conv2d_ref(x, p["w_c1"], stride=2, padding=2)
+    h = jax.nn.relu(h)
+    h = ref.conv2d_ref(h, p["w_c2"], stride=2, padding=1)
+    h = jax.nn.relu(h)
+    h = jax.lax.reduce_window(
+        h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+    h = h.reshape(x.shape[0], -1)
+    return h @ p["w_fc"] + p["b_fcb"][None, :]
+
+
+# ---------------------------------------------------------------------------
+# Whole-step oracle: gradients + updated weights vs jax.grad
+# ---------------------------------------------------------------------------
+
+
+def test_train_step_gradients_match_jax_grad():
+    graph = paper_cnn_graph(batch=2, img=8, lr=0.05, momentum=0.9)
+    prog = lower_training_step(graph)
+    rng = np.random.RandomState(0)
+    params = graph.init_params(seed=1)
+    x, labels, onehot = _batch(rng, 2, 8)
+    outs = run_reference(prog, {"x": x, "onehot": onehot, **params})
+
+    def loss_fn(p):
+        z = _jax_forward(graph, p, jnp.asarray(x))
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(z) * onehot, axis=1))
+
+    jp = {k: jnp.asarray(v) for k, v in params.items() if not k.startswith("v_")}
+    loss, grads = jax.value_and_grad(loss_fn)(jp)
+
+    # logits + host-side loss
+    z = _jax_forward(graph, jp, jnp.asarray(x))
+    np.testing.assert_allclose(
+        outs[graph.logits_edge], np.asarray(z), rtol=1e-4, atol=1e-5
+    )
+    assert softmax_xent_loss(outs[graph.logits_edge], labels) == pytest.approx(
+        float(loss), rel=1e-5
+    )
+
+    # per-parameter gradients, momentum, and the updated weights
+    for p in graph.param_shapes():
+        g = np.asarray(grads[p])
+        np.testing.assert_allclose(
+            outs[f"d_{p}"], g, rtol=1e-3, atol=1e-5, err_msg=p
+        )
+        v_new = graph.momentum * params[f"v_{p}"] + g
+        np.testing.assert_allclose(
+            outs[f"v_{p}_new"], v_new, rtol=1e-3, atol=1e-5, err_msg=p
+        )
+        np.testing.assert_allclose(
+            outs[f"{p}_new"], params[p] - graph.lr * v_new,
+            rtol=1e-3, atol=1e-5, err_msg=p,
+        )
+
+
+def test_train_step_plain_sgd_and_ns_design():
+    """No-momentum update + the NS design point produce the same numerics."""
+    graph = paper_cnn_graph(batch=2, img=8, lr=0.1, momentum=0.0)
+    rng = np.random.RandomState(1)
+    params = graph.init_params(seed=2)
+    x, _labels, onehot = _batch(rng, 2, 8)
+    inputs = {"x": x, "onehot": onehot, **params}
+    outs = run_reference(lower_training_step(graph), inputs)
+    ns_outs = run_reference(
+        lower_training_step(graph, design=NS_DESIGN), inputs
+    )
+    assert "v_w_c1_new" not in outs
+    for k in outs:
+        np.testing.assert_allclose(
+            ns_outs[k], outs[k], rtol=1e-5, atol=1e-6, err_msg=k
+        )
+    for p in graph.param_shapes():
+        np.testing.assert_allclose(
+            outs[f"{p}_new"], params[p] - 0.1 * outs[f"d_{p}"],
+            rtol=1e-5, atol=1e-6,
+        )
+
+
+# ---------------------------------------------------------------------------
+# One program, three executors, identical command streams
+# ---------------------------------------------------------------------------
+
+
+def test_all_executors_consume_one_program():
+    from repro.lower import PlanCache, run_pallas
+
+    graph = paper_cnn_graph(batch=2, img=8)
+    prog = lower_training_step(graph)
+    rng = np.random.RandomState(2)
+    params = graph.init_params(seed=3)
+    x, _labels, onehot = _batch(rng, 2, 8)
+    inputs = {"x": x, "onehot": onehot, **params}
+
+    want = run_reference(prog, inputs)
+    ev = run_timing(prog, n_clusters=2, engine="event").summary()
+    bl = run_timing(prog, n_clusters=2, engine="block").summary()
+    assert ev["n_commands"] == prog.n_commands == bl["n_commands"]
+    assert all(ev[k] == bl[k] for k in ev if k != "elided_commands")
+
+    got = run_pallas(prog, inputs, cache=PlanCache())
+    assert set(got) == set(want)
+    for k in want:
+        np.testing.assert_allclose(
+            np.asarray(got[k]), want[k], rtol=2e-3, atol=1e-5, err_msg=k
+        )
+
+
+def test_training_decreases_loss_reference_backend():
+    graph = paper_cnn_graph(batch=4, img=8, lr=0.1, momentum=0.9)
+    rng = np.random.RandomState(3)
+    y = rng.randint(0, 10, 4)
+    base = np.linspace(0, 3.14 * 4, 8)
+    imgs = np.stack([
+        np.sin(base[None, :] * (1 + c)) * np.cos(base[:, None] * (1 + c))
+        for c in y
+    ])[..., None].repeat(3, axis=-1).astype(np.float32)
+
+    res = train_graph(graph, 4, lambda _i: (imgs, y), backend="reference")
+    assert res["losses"][-1] < res["losses"][0], res["losses"]
+
+
+# ---------------------------------------------------------------------------
+# The liveness allocator
+# ---------------------------------------------------------------------------
+
+
+def test_liveness_reuse_beats_bump_allocation():
+    graph = paper_cnn_graph(batch=2, img=16)
+    prog = lower_training_step(graph)
+    peak = prog.meta["peak_tcdm_bytes"]
+    # bump layout = every distinct storage location laid out back to back
+    seen_bases = set()
+    bump = 0
+    for r in prog.regions.values():
+        if r.base not in seen_bases:
+            seen_bases.add(r.base)
+            bump += r.bytes
+    assert peak < bump, (peak, bump)
+    assert peak <= prog.meta["tcdm_budget_bytes"]
+
+
+def test_no_region_aliasing_across_live_intervals():
+    graph = paper_cnn_graph(batch=2, img=8)
+    prog = lower_training_step(graph)
+    intervals = prog.meta["intervals"]
+    regions = prog.regions
+    names = list(intervals)
+    for i, a in enumerate(names):
+        ra, (sa, ea) = regions[a], intervals[a]
+        for b in names[i + 1:]:
+            rb, (sb, eb) = regions[b], intervals[b]
+            overlap_time = not (ea < sb or eb < sa)
+            overlap_addr = not (ra.end <= rb.base or rb.end <= ra.base)
+            if overlap_time and overlap_addr:
+                # the only legal address sharing is an explicit alias view,
+                # which shares the full storage window exactly
+                assert ra.base == rb.base and ra.size == rb.size, (
+                    f"{a}{intervals[a]}@[{ra.base},{ra.end}) aliases "
+                    f"{b}{intervals[b]}@[{rb.base},{rb.end})"
+                )
+
+
+def test_allocator_spills_over_budget_and_execution_is_identical():
+    graph = paper_cnn_graph(batch=2, img=16)
+    full = lower_training_step(graph, n_clusters=16)
+    tiny = lower_training_step(graph, n_clusters=1)
+    assert not full.meta["spilled"]
+    assert tiny.meta["spilled"]
+    assert tiny.meta["peak_tcdm_bytes"] <= tiny.meta["tcdm_budget_bytes"]
+    spills = [b for b in tiny.blocks if b.tag.startswith(("spill:", "fill:"))]
+    assert spills and all(
+        b.dma_bytes_in + b.dma_bytes_out > 0 for b in spills
+    )
+    rng = np.random.RandomState(4)
+    params = graph.init_params(seed=4)
+    x, _labels, onehot = _batch(rng, 2, 16)
+    inputs = {"x": x, "onehot": onehot, **params}
+    a = run_reference(full, inputs)
+    b = run_reference(tiny, inputs)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+def test_liveness_allocator_unit():
+    l = LivenessAllocator(budget_words=100)
+    x = l.alloc("x", (40,), "input", start=0, end=2)
+    y = l.alloc("y", (30,), "scratch", start=1, end=3)
+    z = l.alloc("z", (35,), "scratch", start=3, end=5)
+    assert z.base == x.base  # x died at 2 -> its hole is recycled
+    assert l.peak_tcdm_words == 70
+    s = l.alloc("s", (50,), "scratch", start=3, end=4)  # nothing fits
+    assert "s" in l.spilled and s.base >= 100
+    assert y.base == 40  # live regions were never moved
+    f = l.alias("f", "z", (5, 7), "scratch", end=9)
+    assert f.base == z.base and f.size == z.size

@@ -272,19 +272,54 @@ def test_pallas_executor_conv_training_passes():
 
 
 # ---------------------------------------------------------------------------
-# Thin-wrapper compatibility (core/ntx.py builders == lowering rules)
+# Backward rules for parameter-free layers + the support matrix
 # ---------------------------------------------------------------------------
 
 
-def test_deprecated_builders_delegate_to_rules_and_warn():
-    from repro.lower.rules import conv2d_fwd_template, matmul_template
+def test_relu_dx_matches_mask():
+    rng = np.random.RandomState(8)
+    spec = ReluSpec((5, 6))
+    x, dy = _rand(rng, 5, 6), _rand(rng, 5, 6)
+    got = run_reference(lower(spec, "dx"), {"x": x, "dy": dy})["dx"]
+    np.testing.assert_array_equal(got, dy * (x > 0))
 
-    with pytest.warns(DeprecationWarning, match="matmul_command is deprecated"):
-        cmd = ntx.matmul_command(4, 5, 6, 0, 30, 60)
-    assert cmd == matmul_template(4, 5, 6, 0, 30, 60)
-    with pytest.warns(DeprecationWarning, match="conv2d_command is deprecated"):
-        cmd = ntx.conv2d_command(7, 8, 3, 3, 2, 1, 0, 500, 1000)
-    assert cmd == conv2d_fwd_template(7, 8, 3, 3, 2, 1, 0, 500, 1000)
+
+def test_maxpool_dx_matches_jax_vjp():
+    import jax
+
+    rng = np.random.RandomState(9)
+    spec = MaxPool2dSpec(6, 8, 3)
+    x = _rand(rng, 6, 8, 3)
+    dy = _rand(rng, spec.out_h, spec.out_w, 3)
+
+    def pool(xx):
+        return jax.lax.reduce_window(
+            xx, -jnp.inf, jax.lax.max, (2, 2, 1), (2, 2, 1), "VALID"
+        )
+
+    y, vjp = jax.vjp(pool, jnp.asarray(x))
+    want = np.asarray(vjp(jnp.asarray(dy))[0])
+    got = run_reference(
+        lower(spec, "dx"), {"x": x, "y": np.asarray(y), "dy": dy}
+    )["dx"]
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_lower_support_matrix_errors_are_precise():
+    # meaningful-but-unsupported combos -> NotImplementedError
+    with pytest.raises(NotImplementedError, match="window == stride"):
+        lower(MaxPool2dSpec(9, 9, 2, window=3, stride=2), "dx")
+    from repro.lower import FlattenSpec, SoftmaxXentSpec
+
+    with pytest.raises(NotImplementedError, match="zero-copy view"):
+        lower(FlattenSpec((4, 4, 2)))
+    with pytest.raises(NotImplementedError, match="driver core"):
+        lower(SoftmaxXentSpec(4, 10), "fwd")
+    # nonsensical pass names -> ValueError
+    with pytest.raises(ValueError, match="no parameters"):
+        lower(ReluSpec((4,)), "dw")
+    with pytest.raises(ValueError, match="no parameters"):
+        lower(MaxPool2dSpec(8, 8, 2), "dw")
 
 
 def test_program_dma_descriptors_cover_regions():

@@ -1,11 +1,11 @@
 """Pallas plan cache: jitted whole-pass executables, zero retraces after
-warmup, device-array passthrough, and the whole-chain network executor.
+warmup, device-array passthrough, and graph-driven whole-step execution.
 
 Trace counts are asserted through ``CompiledPlan.traces`` — a counter
 incremented inside the traced function, so it ticks exactly when jax
 (re-)traces. All runs use interpret mode on CPU; numerics are checked
 against the ``run_reference`` interpreter (itself oracle-checked in
-test_lower.py).
+test_lower.py / test_graph.py).
 """
 
 import numpy as np
@@ -14,11 +14,11 @@ import pytest
 from repro.lower import (
     Conv2dSpec,
     MatmulSpec,
+    NetworkGraph,
     PlanCache,
-    ReluSpec,
     lower,
+    lower_training_step,
     run_pallas,
-    run_pallas_network,
     run_reference,
 )
 
@@ -96,60 +96,56 @@ def test_all_passes_cached_and_match_reference():
     assert all(p.traces == 1 for p in cache._plans.values())
 
 
-def test_network_chain_fwd_dw_dx_no_per_layer_retrace():
-    """A conv-relu-conv training chain through cached plans: outputs match
-    the chained reference executors, and a second invocation triggers zero
-    new traces anywhere in the cache."""
+def test_graph_program_no_retrace_and_matches_reference():
+    """A whole train-step program through the graph-driven Pallas executor:
+    every output matches the reference interpreter, and a second invocation
+    triggers zero new traces anywhere in the cache."""
+    from benchmarks.workloads import pallas_graph
+
     rng = np.random.RandomState(4)
-    c1 = Conv2dSpec(10, 10, 3, 3, 3, 4, padding=1)
-    r1 = ReluSpec((10, 10, 4))
-    c2 = Conv2dSpec(10, 10, 4, 3, 3, 4, stride=2, padding=1)
-    x = _rand(rng, 10, 10, 3)
-    w1 = _rand(rng, 3, 3, 3, 4)
-    w2 = _rand(rng, 3, 3, 4, 4)
+    graph = pallas_graph(batch=2)
+    prog = lower_training_step(graph)
+    params = graph.init_params(seed=1)
+    inputs = {
+        "x": _rand(rng, 2, 16, 16, 3),
+        "onehot": np.eye(10, dtype=np.float32)[rng.randint(0, 10, 2)],
+        **params,
+    }
+    want = run_reference(prog, inputs)
     cache = PlanCache()
-    net = run_pallas_network([c1, r1, c2], x, [w1, None, w2], cache=cache)
-
-    # oracle: the reference interpreter, layer by layer
-    y1 = run_reference(lower(c1, "fwd"), {"x": x, "w": w1})["y"]
-    a1 = np.maximum(y1, 0)
-    y2 = run_reference(lower(c2, "fwd"), {"x": a1, "w": w2})["y"]
-    np.testing.assert_allclose(np.asarray(net["y"]), y2, rtol=1e-4, atol=1e-4)
-    dy = np.ones_like(y2)
-    dw2 = run_reference(lower(c2, "dw"), {"x": a1, "dy": dy})["dw"]
-    dx2 = run_reference(lower(c2, "dx"), {"dy": dy, "w": w2})["dx"]
-    g1 = dx2 * (y1 > 0)
-    dw1 = run_reference(lower(c1, "dw"), {"x": x, "dy": g1})["dw"]
-    dx1 = run_reference(lower(c1, "dx"), {"dy": g1, "w": w1})["dx"]
-    np.testing.assert_allclose(np.asarray(net["dw"][2]), dw2, rtol=1e-4, atol=1e-4)
-    np.testing.assert_allclose(np.asarray(net["dw"][0]), dw1, rtol=1e-3, atol=1e-4)
-    np.testing.assert_allclose(np.asarray(net["dx"]), dx1, rtol=1e-3, atol=1e-4)
-    assert net["dw"][1] is None  # relu carries no params
-
+    got = run_pallas(prog, inputs, cache=cache)
+    assert set(got) == set(want)
+    for k in want:
+        np.testing.assert_allclose(
+            np.asarray(got[k]), want[k], rtol=2e-3, atol=1e-5, err_msg=k
+        )
     traces = sum(p.traces for p in cache._plans.values())
-    net2 = run_pallas_network([c1, r1, c2], x, [w1, None, w2], cache=cache)
+    got2 = run_pallas(prog, inputs, cache=cache)
     assert sum(p.traces for p in cache._plans.values()) == traces
-    np.testing.assert_array_equal(np.asarray(net["y"]), np.asarray(net2["y"]))
+    np.testing.assert_array_equal(
+        np.asarray(got[graph.logits_edge]), np.asarray(got2[graph.logits_edge])
+    )
 
 
-def test_network_rejects_mismatched_params():
-    with pytest.raises(ValueError):
-        run_pallas_network([MatmulSpec(4, 4, 4)], np.zeros((4, 4)), [])
-
-
-def test_matmul_chain_through_network():
+def test_matmul_graph_through_plan_cache():
     rng = np.random.RandomState(5)
-    s1, s2 = MatmulSpec(6, 10, 8), MatmulSpec(6, 4, 10)
-    x = _rand(rng, 6, 8)
-    w1, w2 = _rand(rng, 8, 10), _rand(rng, 10, 4)
+    graph = NetworkGraph.sequential(
+        "mlp", 6, (8,),
+        [("l1", MatmulSpec(6, 10, 8)), ("r1", "relu"),
+         ("l2", MatmulSpec(6, 4, 10))],
+        lr=0.1,
+    )
+    prog = lower_training_step(graph)
+    params = graph.init_params(seed=2)
+    inputs = {
+        "x": _rand(rng, 6, 8),
+        "onehot": np.eye(4, dtype=np.float32)[rng.randint(0, 4, 6)],
+        **params,
+    }
+    want = run_reference(prog, inputs)
     cache = PlanCache()
-    net = run_pallas_network([s1, s2], x, [w1, w2], cache=cache)
-    y = (x @ w1) @ w2
-    np.testing.assert_allclose(np.asarray(net["y"]), y, rtol=1e-4, atol=1e-4)
-    dy = np.ones_like(y)
-    np.testing.assert_allclose(
-        np.asarray(net["dw"][1]), (x @ w1).T @ dy, rtol=1e-4, atol=1e-4
-    )
-    np.testing.assert_allclose(
-        np.asarray(net["dx"]), (dy @ w2.T) @ w1.T, rtol=1e-4, atol=1e-4
-    )
+    got = run_pallas(prog, inputs, cache=cache)
+    for k in want:
+        np.testing.assert_allclose(
+            np.asarray(got[k]), want[k], rtol=2e-3, atol=1e-5, err_msg=k
+        )
