@@ -1,0 +1,183 @@
+"""Per-metric benchmark regression gate over the ``BENCH_*.json`` artifacts.
+
+Replaces the old single-number "2x smoke wall budget": every benchmark
+artifact is diffed against ``benchmarks/bench_baseline.json`` metric by
+metric, a summary table goes to the job log, and any violation fails the
+run. Three metric kinds:
+
+  * ``wall``  — wall-clock seconds: one-sided, fails above
+    ``WALL_BUDGET x`` baseline (machine-speed tolerant; catches simulator
+    perf regressions, not CI-runner jitter).
+  * ``model`` — deterministic modeled floats (cycle-derived times,
+    efficiencies, ratios): two-sided ``MODEL_RTOL`` relative band — any
+    real drift between the analytical model, the timing engine, and the
+    lowering pipeline trips it.
+  * ``exact`` — integers (command counts, cycle totals, TCDM peaks): must
+    match the baseline bit for bit.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.check_regression FILE [FILE ...]
+    PYTHONPATH=src python -m benchmarks.check_regression --update FILE ...
+
+``--update`` re-records the baseline entries for the given files (run it
+after an intentional perf/model change and commit the result). Named files
+must exist — a missing artifact is a failure, not a silent pass.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from dataclasses import dataclass
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "bench_baseline.json")
+
+WALL_BUDGET = 2.5  # x baseline; CI runners are slower than dev boxes
+MODEL_RTOL = 1e-3  # deterministic floats: drift band (ulp-noise tolerant)
+
+
+@dataclass(frozen=True)
+class MetricSpec:
+    file: str  # artifact basename this metric comes from
+    path: str  # dot path inside the json ("summary.n_commands")
+    kind: str  # "wall" | "model" | "exact"
+
+
+#: Every metric the gate tracks. Keys into the baseline are
+#: ``"<file>:<path>"``.
+SPECS = [
+    # -- offload smoke suite (benchmarks.offload_bench --smoke) ------------
+    MetricSpec("BENCH_offload.json", "total_wall_s", "wall"),
+    MetricSpec("BENCH_offload.json",
+               "benchmarks.offload_overhead.summary.min_overhead_reduction",
+               "model"),
+    MetricSpec("BENCH_offload.json",
+               "benchmarks.model_crosscheck.summary.max_rel_err_uncapped",
+               "model"),
+    MetricSpec("BENCH_offload.json",
+               "benchmarks.lowering_crosscheck.summary."
+               "mean_train_to_infer_cycle_ratio", "model"),
+    MetricSpec("BENCH_offload.json",
+               "benchmarks.mesh_sweep.summary.t_image_sim_ms_ntx", "model"),
+    MetricSpec("BENCH_offload.json",
+               "benchmarks.mesh_sweep.summary.ntx_min_parallel_eff", "model"),
+    MetricSpec("BENCH_offload.json",
+               "benchmarks.mesh_sweep.summary.ns_program_commands", "exact"),
+    # -- executed mesh sweep (benchmarks.mesh_bench) -----------------------
+    MetricSpec("BENCH_mesh.json", "wall_s", "wall"),
+    MetricSpec("BENCH_mesh.json", "summary.min_parallel_eff", "model"),
+    MetricSpec("BENCH_mesh.json", "summary.max_model_rel_err", "model"),
+    MetricSpec("BENCH_mesh.json", "summary.shard_cycles_total", "exact"),
+    # -- whole-train-step bench (benchmarks.trainstep_bench) ---------------
+    MetricSpec("BENCH_trainstep.json", "wall_s", "wall"),
+    MetricSpec("BENCH_trainstep.json", "summary.n_commands", "exact"),
+    MetricSpec("BENCH_trainstep.json", "summary.peak_tcdm_bytes", "exact"),
+    MetricSpec("BENCH_trainstep.json", "summary.step_cycles_ntx", "exact"),
+    MetricSpec("BENCH_trainstep.json", "summary.step_cycles_ns", "exact"),
+]
+
+
+def _lookup(doc, path: str):
+    cur = doc
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise KeyError(path)
+        cur = cur[part]
+    return cur
+
+
+def _key(spec: MetricSpec) -> str:
+    return f"{spec.file}:{spec.path}"
+
+
+def load_baseline() -> dict:
+    if not os.path.exists(BASELINE_PATH):
+        return {"metrics": {}}
+    with open(BASELINE_PATH) as f:
+        return json.load(f)
+
+
+def check_file(path: str, baseline: dict, *, update: bool) -> list[str]:
+    """Check (or re-record) every tracked metric of one artifact.
+
+    Returns human-readable failure lines; prints the per-metric summary.
+    """
+    name = os.path.basename(path)
+    specs = [s for s in SPECS if s.file == name]
+    if not specs:
+        print(f"{name}: no tracked metrics (nothing to gate)")
+        return []
+    with open(path) as f:
+        doc = json.load(f)
+    metrics = baseline.setdefault("metrics", {})
+    failures: list[str] = []
+    print(f"== {name} ==")
+    for spec in specs:
+        key = _key(spec)
+        try:
+            cur = float(_lookup(doc, spec.path))
+        except KeyError:
+            failures.append(f"{key}: metric missing from artifact")
+            print(f"  MISSING  {spec.path}")
+            continue
+        if update:
+            metrics[key] = cur
+            print(f"  RECORD   {spec.path} = {cur:.6g}")
+            continue
+        base = metrics.get(key)
+        if base is None:
+            failures.append(f"{key}: no baseline recorded "
+                            f"(run check_regression --update)")
+            print(f"  NOBASE   {spec.path} = {cur:.6g}")
+            continue
+        base = float(base)
+        if spec.kind == "wall":
+            ok = cur <= WALL_BUDGET * base
+            detail = f"{cur:.3f}s vs {base:.3f}s (budget {WALL_BUDGET}x)"
+        elif spec.kind == "exact":
+            ok = cur == base
+            detail = f"{cur:.0f} vs {base:.0f}"
+        else:  # model
+            denom = max(abs(base), 1e-12)
+            rel = abs(cur - base) / denom
+            ok = rel <= MODEL_RTOL
+            detail = f"{cur:.6g} vs {base:.6g} (drift {rel:.2e})"
+        print(f"  {'ok' if ok else 'FAIL':8s}{spec.path}: {detail}")
+        if not ok:
+            failures.append(f"{key}: {detail}")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+",
+                    help="BENCH_*.json artifacts to gate (must exist)")
+    ap.add_argument("--update", action="store_true",
+                    help="re-record the baseline entries for these files")
+    args = ap.parse_args()
+
+    baseline = load_baseline()
+    failures: list[str] = []
+    for path in args.files:
+        if not os.path.exists(path):
+            failures.append(f"{path}: artifact missing")
+            print(f"{path}: MISSING (the producing benchmark did not run?)")
+            continue
+        failures += check_file(path, baseline, update=args.update)
+    if args.update:
+        with open(BASELINE_PATH, "w") as f:
+            json.dump(baseline, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"baseline updated: {BASELINE_PATH}")
+    if failures:
+        raise SystemExit(
+            "benchmark regression gate failed:\n  " + "\n  ".join(failures)
+        )
+    if not args.update:
+        print("regression gate: all tracked metrics within budget")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Executed mesh-of-HMCs training sweep: sharded programs, timed links.
+
+Where ``benchmarks/offload_bench.py::mesh_sweep`` feeds the paper's mesh
+*equations* with a simulated per-image time, this benchmark **executes** the
+mesh: :func:`repro.lower.shard_training_step` splits one whole-train-step
+GoogLeNet program into per-HMC shards plus the gradient-allreduce epilogue,
+the block-replicated timing engine times HMC 0's shard, and the weight
+exchange runs through the event-level link scheduler of
+:mod:`repro.runtime.mesh` (which lands on eqs. 14-15 exactly on the
+congestion-free embedding). Parallel efficiency comes out of those two
+timed components — and is cross-checked against ``ntx_model.mesh`` fed the
+same per-image time, which must agree within 1%.
+
+The sweep weak-scales the batch with the mesh exactly like Fig. 14 (more
+cubes -> more images per step), covering >= 4 mesh sizes that must all
+clear the paper's 95% parallel-efficiency bar.
+
+Standalone::
+
+    PYTHONPATH=src python -m benchmarks.mesh_bench
+
+Writes ``artifacts/BENCH_mesh.json`` (uploaded by the CI bench-smoke lane
+and diffed by ``benchmarks/check_regression.py``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from benchmarks import ntx_model as M
+
+#: (mesh side, global batch) — Fig. 14-style weak scaling; every batch
+#: divides evenly over its side**2 HMCs.
+CASES = ((2, 512), (4, 1024), (8, 4096), (16, 8192))
+
+EFF_FLOOR = 0.95  # the paper's §4.9 bar
+MODEL_TOL = 0.01  # executed vs ntx_model.mesh parallel efficiency
+
+
+def mesh_executed_sweep(cases=CASES, network="googlenet", n_clusters=16,
+                        f_ntx=1.5e9):
+    """One row per mesh size: executed vs modeled parallel efficiency."""
+    from repro.lower import lower_training_step, shard_training_step
+    from repro.runtime.mesh import (
+        MeshInterconnect,
+        expected_update_time,
+        time_mesh_step,
+    )
+
+    from benchmarks.workloads import network_graph
+
+    rows = []
+    effs = []
+    errs = []
+    cmds = {}
+    shard_cycles_total = 0
+    for side, batch in cases:
+        graph = network_graph(network, batch=batch)
+        sharded = shard_training_step(
+            graph, mesh_shape=(side, side), n_clusters=n_clusters
+        )
+        tm = time_mesh_step(sharded, n_clusters=n_clusters, f_ntx=f_ntx)
+        mod = M.mesh(side, batch, t_image=tm.t_image,
+                     weight_bytes=sharded.allreduce_bytes)
+        err = abs(tm.parallel_eff - mod.parallel_eff) / mod.parallel_eff
+        net = MeshInterconnect(side, side)
+        ring_ms = net.ring_allreduce_time(sharded.allreduce_bytes) * 1e3
+        upd_eq15 = expected_update_time(sharded.allreduce_bytes, side, side)
+        effs.append(tm.parallel_eff)
+        errs.append(err)
+        cmds[f"{side}x{side}"] = sharded.program.n_commands
+        shard_cycles_total += tm.shard_cycles
+        rows.append((
+            f"{side}x{side}/b{batch}", sharded.program.n_commands,
+            tm.t_shard * 1e3, tm.t_update * 1e3, ring_ms,
+            tm.parallel_eff, mod.parallel_eff, err,
+        ))
+        assert abs(tm.t_update - upd_eq15) < 1e-9, (
+            f"{side}x{side}: link schedule {tm.t_update} != eq. 15 {upd_eq15}"
+        )
+    return rows, {
+        "n_mesh_sizes": len(rows),
+        "min_parallel_eff": min(effs),
+        "max_model_rel_err": max(errs),
+        "shard_cycles_total": shard_cycles_total,
+        "parallel_eff_above_95pct": min(effs) >= EFF_FLOOR,
+        "within_1pct_of_model": max(errs) < MODEL_TOL,
+        "four_or_more_sizes": len(rows) >= 4,
+    }
+
+
+GATES = ("parallel_eff_above_95pct", "within_1pct_of_model",
+         "four_or_more_sizes")
+
+
+def write_json(rows, summary, wall_s,
+               path: str = "artifacts/BENCH_mesh.json") -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({
+            "wall_s": wall_s,
+            "summary": summary,
+            "rows": [list(r) for r in rows],
+            "columns": ["mesh/batch", "n_commands", "t_shard_ms",
+                        "t_update_ms", "t_ring_ms", "parallel_eff",
+                        "model_parallel_eff", "rel_err"],
+        }, f, indent=1, default=str)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--network", default="googlenet")
+    ap.add_argument("--json", default="artifacts/BENCH_mesh.json")
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+    rows, summary = mesh_executed_sweep(network=args.network)
+    wall = time.perf_counter() - t0
+    for r in rows:
+        print("  ", *(f"{x:.4g}" if isinstance(x, float) else x for x in r))
+    for k, v in summary.items():
+        print(f"   -> {k}: {v}")
+    print("json:", write_json(rows, summary, wall, args.json))
+    failed = [g for g in GATES if not summary.get(g)]
+    if failed:
+        raise SystemExit(f"mesh gates failed: {', '.join(failed)}")
+
+
+if __name__ == "__main__":
+    main()

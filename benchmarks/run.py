@@ -41,6 +41,7 @@ def main() -> None:
     _run("table5_efficiency", tables.table5_efficiency, details, results)
     _run("fig8_vfs", tables.fig8_vfs, details, results)
     _run("fig14_mesh_scaling", tables.fig14_mesh_scaling, details, results)
+    _run("fig14_mesh_executed", tables.fig14_mesh_executed, details, results)
     _run("fig15_16_datacenter", tables.fig15_16_datacenter, details, results)
     for name, fn in offload_bench.ALL.items():
         _run(name, fn, details, results)

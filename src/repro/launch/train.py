@@ -330,10 +330,18 @@ def batch_shardings(batch_struct, cfg, mesh, dp_axes, seq_axis=None, batch_size=
 
 def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
                 lr: float = 0.05, momentum: float = 0.9,
-                interpret: bool | None = None) -> dict:
+                interpret: bool | None = None,
+                mesh: str | None = None) -> dict:
     """The ``--backend ntx`` mode: train the paper's small CNN end-to-end
     with every step one compiled :class:`repro.lower.NtxProgram` executed
     through ``run_pallas`` graph execution (cached per-node plans).
+
+    With ``mesh="RxC"`` the step program is sharded across a mesh of HMCs
+    (:func:`repro.lower.shard_training_step`): ``run_pallas`` executes it
+    data-parallel via ``shard_map`` when enough jax devices exist (e.g.
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` for a 2x2 mesh
+    on CPU), and the modeled mesh timing (per-HMC shard program + eq. 14-15
+    link exchange) is printed alongside.
 
     Returns the :func:`repro.lower.train_graph` result dict (program,
     params, losses, per-step walls).
@@ -344,6 +352,7 @@ def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
         frequency_band_batches,
         lower_training_step,
         paper_cnn_graph,
+        shard_training_step,
         train_graph,
     )
 
@@ -354,6 +363,25 @@ def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
           f"peak TCDM {program.meta['peak_tcdm_bytes']} / "
           f"{program.meta['tcdm_budget_bytes']} B "
           f"({len(program.meta['spilled'])} spilled)")
+    if mesh is not None:
+        from repro.runtime.mesh import time_mesh_step
+
+        sharded = shard_training_step(graph, mesh_shape=mesh,
+                                      n_clusters=n_clusters, program=program)
+        program = sharded.program
+        n_dev = jax.device_count()
+        how = ("shard_map data-parallel" if n_dev >= sharded.n_hmcs
+               else f"single-device walk ({n_dev} jax device(s) "
+                    f"< {sharded.n_hmcs} HMCs)")
+        print(f"mesh {sharded.mesh_shape[0]}x{sharded.mesh_shape[1]}: "
+              f"{sharded.n_hmcs} HMCs x {sharded.shard_batch} images, "
+              f"{len(program.blocks)} blocks incl. allreduce epilogue; "
+              f"executing via {how}")
+        tm = time_mesh_step(sharded, n_clusters=n_clusters)
+        print(f"modeled mesh step: shard {tm.t_shard*1e3:.3f} ms + "
+              f"update {tm.t_update*1e3:.3f} ms "
+              f"-> speedup {tm.speedup:.2f}, "
+              f"parallel eff {tm.parallel_eff:.1%}")
     batch_fn = frequency_band_batches(np.random.RandomState(0), batch, img,
                                       graph.loss.classes)
     res = train_graph(graph, steps, batch_fn, program=program,
@@ -383,6 +411,11 @@ def _cli():
                          "per step (run_pallas graph execution)")
     ap.add_argument("--img", type=int, default=16,
                     help="ntx backend: CNN input image size")
+    ap.add_argument("--mesh", default=None, metavar="RxC",
+                    help="ntx backend: shard the train step across an RxC "
+                         "mesh of HMCs (batch must divide evenly); executes "
+                         "data-parallel via shard_map when enough jax "
+                         "devices exist and prints the modeled mesh timing")
     ap.add_argument("--arch", default="qwen1_5_0_5b")
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-scale config (CPU-friendly)")
@@ -407,7 +440,7 @@ def _cli():
 
     if args.backend == "ntx":
         res = run_ntx_cnn(args.steps, args.batch, args.img,
-                          n_clusters=args.offload_clusters)
+                          n_clusters=args.offload_clusters, mesh=args.mesh)
         if len(res["losses"]) >= 3 and not res["losses"][-1] < res["losses"][0]:
             raise SystemExit("ntx CNN training did not decrease the loss")
         return

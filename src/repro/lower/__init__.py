@@ -16,7 +16,16 @@ liveness-allocated TCDM, consumed unchanged by all three executors:
     prog  = lower_training_step(graph)         # one program per train step
     outs  = run_pallas(prog, {"x": x, "onehot": y1h, **params})
 
-See docs/architecture.md ("The lowering pipeline", "The graph compiler").
+Above that again sits mesh data parallelism (:mod:`repro.lower.mesh`): the
+compiled step shards across a mesh of HMCs with an explicit
+gradient-allreduce epilogue, bit-identical under ``run_reference`` and
+``shard_map``-parallel under ``run_pallas``:
+
+    sharded = shard_training_step(graph, mesh_shape=(2, 2))
+    outs    = run_pallas(sharded.program, inputs)   # psum allreduce
+
+See docs/architecture.md ("The lowering pipeline", "The graph compiler",
+"Mesh execution").
 """
 
 from repro.lower.executors import (
@@ -35,6 +44,11 @@ from repro.lower.graph import (
     paper_cnn_graph,
     softmax_xent_loss,
     train_graph,
+)
+from repro.lower.mesh import (
+    ShardedTrainStep,
+    parse_mesh,
+    shard_training_step,
 )
 from repro.lower.ir import (
     ELEM_BYTES,
@@ -83,9 +97,12 @@ __all__ = [
     "RegionAllocator",
     "ReluSpec",
     "SgdUpdateSpec",
+    "ShardedTrainStep",
     "SoftmaxXentSpec",
     "TensorRegion",
     "frequency_band_batches",
+    "parse_mesh",
+    "shard_training_step",
     "lower",
     "lower_layer",
     "lower_training_step",

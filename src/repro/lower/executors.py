@@ -381,6 +381,8 @@ def run_pallas(
     if cache is None:
         cache = PLAN_CACHE
     if program.meta.get("pass") == "train_step":
+        if "mesh" in program.meta:
+            return _run_pallas_graph_mesh(program, inputs, interpret, cache)
         return _run_pallas_graph(program, inputs, interpret, cache)
     spec = program.meta.get("spec")
     pass_ = program.meta.get("pass", "fwd")
@@ -403,7 +405,6 @@ def _run_pallas_graph(program, inputs, interpret: bool, cache):
     import jax.numpy as jnp
 
     graph = program.meta["graph"]
-    B = graph.batch
     design = program.design.name
     keep_grads = program.meta.get("keep_grads", True)
     j = {k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()}
@@ -411,8 +412,28 @@ def _run_pallas_graph(program, inputs, interpret: bool, cache):
     def plan(spec, pass_):
         return cache.get(spec, pass_, design, interpret)
 
+    return _graph_step_local(graph, j, plan, graph.batch,
+                             keep_grads=keep_grads)
+
+
+def _graph_step_local(graph, j, plan, B, *, keep_grads=True,
+                      grad_reduce=None, batched=None):
+    """One train step over ``B``-image arrays through cached per-node plans.
+
+    ``B`` is the batch the arrays actually carry — the graph's full batch
+    on the single-device path, the per-shard slice inside the mesh route's
+    ``shard_map`` body (where ``grad_reduce`` is the cross-shard psum that
+    realizes the gradient allreduce; the loss plan's 1/B_global scale makes
+    the psum a batch mean). ``batched`` forces a leading batch axis on the
+    activations even at ``B == 1`` — a mesh shard of one image still
+    carries its axis so the out-spec concatenation works. The walk mirrors
+    the command stream's fwd → loss grad → dW/update/dX schedule exactly.
+    """
+    reduce = grad_reduce or (lambda g: g)
+    batched = (B > 1) if batched is None else batched
+
     def bspec(spec):
-        return BatchedSpec(spec, B) if B > 1 else spec
+        return BatchedSpec(spec, B) if batched else spec
 
     # forward
     acts = {graph.input_edge: j[graph.input_edge]}
@@ -423,15 +444,15 @@ def _run_pallas_graph(program, inputs, interpret: bool, cache):
         elif isinstance(s, MatmulSpec):
             y = plan(s, "fwd")({"a": a, "b": j[node.param]})["c"]
         elif isinstance(s, BiasSpec):
-            y = plan(s, "fwd")({"x": a.reshape(s.rows, s.c), "b": j[node.param]})
+            y = plan(s, "fwd")({"x": a.reshape(-1, s.c), "b": j[node.param]})
             y = y["y"].reshape(a.shape)
         elif isinstance(s, ReluSpec):
-            whole = ReluSpec((B,) + tuple(s.shape)) if B > 1 else s
+            whole = ReluSpec((B,) + tuple(s.shape)) if batched else s
             y = plan(whole, "fwd")({"x": a})["y"]
         elif isinstance(s, MaxPool2dSpec):
             y = plan(bspec(s), "fwd")({"x": a})["y"]
         elif isinstance(s, FlattenSpec):
-            y = a.reshape((B, s.size) if B > 1 else (s.size,))
+            y = a.reshape((B, s.size) if batched else (s.size,))
         else:
             raise TypeError(f"no graph route for {type(s).__name__}")
         acts[node.out_edge] = y
@@ -451,13 +472,14 @@ def _run_pallas_graph(program, inputs, interpret: bool, cache):
             p = node.param
             if isinstance(s, Conv2dSpec):
                 dwv = plan(bspec(s), "dw")({"x": a_in, "dy": g})["dw"]
-                dw = dwv.sum(axis=0) if B > 1 else dwv
+                dw = dwv.sum(axis=0) if batched else dwv
             elif isinstance(s, MatmulSpec):
                 dw = plan(s, "dw")({"a": a_in, "dy": g})["dw"]
             elif isinstance(s, BiasSpec):
-                dw = plan(s, "dw")({"dy": g.reshape(s.rows, s.c)})["db"]
+                dw = plan(s, "dw")({"dy": g.reshape(-1, s.c)})["db"]
             else:
                 raise TypeError(f"no dW route for {type(s).__name__}")
+            dw = reduce(dw)
             if keep_grads:
                 outs[f"d_{p}"] = dw
             u_spec = SgdUpdateSpec(
@@ -477,10 +499,73 @@ def _run_pallas_graph(program, inputs, interpret: bool, cache):
         elif isinstance(s, MatmulSpec):
             g = plan(s, "dx")({"dy": g, "b": j[node.param]})["dx"]
         elif isinstance(s, ReluSpec):
-            whole = ReluSpec((B,) + tuple(s.shape)) if B > 1 else s
+            whole = ReluSpec((B,) + tuple(s.shape)) if batched else s
             g = plan(whole, "dx")({"x": a_in, "dy": g})["dx"]
         elif isinstance(s, MaxPool2dSpec):
             g = plan(bspec(s), "dx")({"x": a_in, "dy": g})["dx"]
         elif isinstance(s, (FlattenSpec, BiasSpec)):
             g = g.reshape(a_in.shape)
     return outs
+
+
+def _run_pallas_graph_mesh(program, inputs, interpret: bool, cache):
+    """Data-parallel execution of a mesh-sharded train-step program.
+
+    The batch shards over a ``(pod, data)`` jax device mesh shaped like the
+    HMC mesh (the same DP-axis convention as :mod:`repro.parallel.sharding`)
+    via ``shard_map``; each shard walks the graph on its slice through the
+    shared :class:`PlanCache`, and the gradient allreduce epilogue is a
+    cross-shard ``psum`` — a batch *mean* because the loss plan already
+    scales by 1 / B_global. Updated weights come back replicated, exactly
+    like the allgather of the command-level epilogue. With fewer jax
+    devices than HMCs the walk runs unsharded on the full batch — the same
+    numerics, minus the parallelism (the command-level program is
+    unaffected; only this executor degrades).
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    graph = program.meta["graph"]
+    mesh_meta = program.meta["mesh"]
+    rows, cols = mesh_meta["shape"]
+    n = mesh_meta["n_hmcs"]
+    B = graph.batch
+    design = program.design.name
+    keep_grads = program.meta.get("keep_grads", True)
+    j = {k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()}
+
+    def plan(spec, pass_):
+        return cache.get(spec, pass_, design, interpret)
+
+    if jax.device_count() < n:
+        return _graph_step_local(graph, j, plan, B, keep_grads=keep_grads)
+
+    dp_axes = ("pod", "data")
+    mesh = compat.make_mesh((rows, cols), dp_axes)
+    sharded_edges = {graph.input_edge, graph.label_edge}
+
+    def batch_spec(name):
+        return P(dp_axes) if name in sharded_edges else P()
+
+    in_specs = ({k: batch_spec(k) for k in j},)
+    out_specs = {graph.logits_edge: P(dp_axes)}
+    for p in graph.param_shapes():
+        out_specs[f"{p}_new"] = P()
+        if keep_grads:
+            out_specs[f"d_{p}"] = P()
+        if graph.momentum:
+            out_specs[f"v_{p}_new"] = P()
+
+    def per_shard(shard_j):
+        return _graph_step_local(
+            graph, shard_j, plan, B // n, keep_grads=keep_grads,
+            grad_reduce=lambda g: jax.lax.psum(g, dp_axes), batched=True,
+        )
+
+    return compat.shard_map(
+        per_shard, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        axis_names=set(dp_axes), check_vma=False,
+    )(j)

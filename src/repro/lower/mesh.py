@@ -1,0 +1,382 @@
+"""Mesh-of-HMCs data parallelism: shard a train-step program across cubes.
+
+The paper's §4.9 scales training past one HMC by replicating the cube and
+splitting the batch: every cube runs the same step on its shard of the
+images, then the weight update is exchanged over the serial links (eqs.
+14-21). :func:`shard_training_step` realizes that at the command level, on
+top of the PR-4 graph compiler: it takes ONE whole-train-step
+:class:`~repro.lower.ir.NtxProgram` and splits it into per-HMC shard
+programs plus an explicit gradient-allreduce epilogue, emitted as ordinary
+DMA/MAC :class:`~repro.lower.ir.CommandBlock`s.
+
+Bit-identity is the design invariant, and it holds *by construction* rather
+than by tolerance:
+
+  * **Batch-parallel blocks** (forward, dX, the per-image conv-dW replicas,
+    the loss-gradient stream) are split along the batch: either the
+    outermost driver replication level the graph compiler appended
+    (:func:`split_block_reps`) or the outermost template loop
+    (:func:`~repro.runtime.scheduler.partition_command`). Concatenating the
+    shard pieces in shard order reproduces the original command stream
+    exactly — same commands, same order, same accumulator roundings.
+  * **Cross-batch gradient reductions** (the conv batch-reduce MAC, the
+    matmul dW, the bias db) become the *reduce-scatter* phase: each is
+    split along its **output** dims into one chunk per HMC, so every chunk
+    keeps its full f64 accumulation over all B contributions in the
+    unsharded image order — one rounding per output element, exactly like
+    the unsharded command. Chunk c is owned by HMC c and reads the other
+    shards' per-image contributions across the mesh links.
+  * **The SGD update** splits the same way: HMC c updates the parameter
+    chunk it just reduced (the ZeRO-style sharded update of the paper's
+    systolic weight exchange), and an **allgather** epilogue of identity
+    ``copy`` blocks broadcasts every updated chunk back to the replicas —
+    semantically a no-op in the flat reference memory (read AGU == write
+    AGU), but carrying the link traffic the timing model charges.
+
+One deliberate deviation from the textbook gradient ring: the matmul-dW
+chunks read the batch-sharded *activations* across links (an activation
+gather) instead of pre-reduced gradient partials, because a per-shard
+partial sum would insert an extra fp32 rounding and break bit-identity.
+The timing model charges the §4.9 weight-update traffic (eqs. 14-15)
+either way; ``docs/architecture.md`` discusses the trade.
+
+The combined program (:attr:`ShardedTrainStep.program`) is consumed
+unchanged by ``run_reference``/``run_timing``; ``run_pallas`` routes it
+through a ``shard_map`` over a jax device mesh (see
+:mod:`repro.lower.executors`), and :mod:`repro.runtime.mesh` times the
+per-HMC shard programs plus the inter-HMC link schedule.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+
+from repro.core.ntx import Agu, NtxCommand
+from repro.lower.graph import NetworkGraph, lower_training_step
+from repro.lower.ir import (
+    ELEM_BYTES,
+    CommandBlock,
+    DesignPoint,
+    NTX_DESIGN,
+    NtxProgram,
+    TensorRegion,
+)
+
+#: Blocks whose template body is at most this many iterations are treated as
+#: driver-side staging (constant memsets, the 1.0 scalar) and replicated to
+#: every HMC instead of being assigned to one.
+_TINY_ITERS = 64
+
+#: hmc assignment sentinel: the block runs on every HMC (reference executes
+#: it once; the timing model charges it to each cube).
+ALL_HMCS = -1
+
+
+def parse_mesh(mesh: str | tuple[int, int]) -> tuple[int, int]:
+    """``"2x4"`` or ``(2, 4)`` -> (rows, cols)."""
+    if isinstance(mesh, str):
+        try:
+            r, c = (int(p) for p in mesh.lower().split("x"))
+        except ValueError as e:
+            raise ValueError(f"mesh spec {mesh!r} is not 'RxC'") from e
+        return r, c
+    r, c = mesh
+    return int(r), int(c)
+
+
+def _chunk_sizes(n: int, parts: int) -> list[int]:
+    """The contiguous chunk sizes :func:`partition_command` uses (remainder
+    spread over the first chunks) — shared so reduce/update/allgather agree
+    on ownership boundaries."""
+    parts = min(parts, n)
+    base, rem = divmod(n, parts)
+    return [base + (1 if p < rem else 0) for p in range(parts)]
+
+
+def _rebased(agu: Agu | None, delta: int) -> Agu | None:
+    if agu is None or delta == 0:
+        return agu
+    return Agu(agu.base + delta, agu.strides)
+
+
+def split_block_reps(block: CommandBlock, parts: int) -> list[CommandBlock]:
+    """Split a block's outermost driver replication level into ``parts``
+    contiguous runs (the batch loop the graph compiler appended).
+
+    Executing the pieces in order issues exactly the original command
+    stream: the outermost rep is the slowest odometer digit, so piece ``p``
+    covers a contiguous run of replica indices with the template rebased by
+    ``start * step`` per AGU — the same arithmetic
+    :meth:`CommandBlock.commands` performs.
+    """
+    n_out = block.reps[-1]
+    sizes = _chunk_sizes(n_out, parts)
+    out = []
+    start = 0
+    t = block.template
+    for sz in sizes:
+        d0 = start * block.rd0_step[-1]
+        d1 = start * block.rd1_step[-1]
+        dw = start * block.wr_step[-1]
+        out.append(
+            replace(
+                block,
+                template=NtxCommand(
+                    loops=t.loops,
+                    opcode=t.opcode,
+                    agu_rd0=_rebased(t.agu_rd0, d0),
+                    agu_rd1=_rebased(t.agu_rd1, d1),
+                    agu_wr=_rebased(t.agu_wr, dw),
+                    init_level=t.init_level,
+                    store_level=t.store_level,
+                    init_value=t.init_value,
+                ),
+                reps=block.reps[:-1] + (sz,),
+            )
+        )
+        start += sz
+    return out
+
+
+def split_block_template(block: CommandBlock, parts: int) -> list[CommandBlock]:
+    """Split a block along its template's outermost splittable loop —
+    :func:`~repro.runtime.scheduler.partition_command` with the block's
+    driver loops and block-level DMA totals carried over (traffic
+    preserved, like ``partition_program``). Blocks whose template refuses
+    to split (unit loops, accumulator spans) come back whole.
+
+    Shared by the batch sharding here and the coarse-block §3.1 refinement
+    of :mod:`repro.runtime.mesh` — one implementation of the
+    piece/DMA-division semantics.
+    """
+    from repro.runtime.scheduler import partition_command
+
+    try:
+        pieces = partition_command(block.template, parts)
+    except ValueError:
+        pieces = [block.template]
+    if len(pieces) == 1:
+        return [block]
+    return [
+        replace(
+            block,
+            template=p,
+            dma_bytes_in=block.dma_bytes_in / len(pieces),
+            dma_bytes_out=block.dma_bytes_out / len(pieces),
+        )
+        for p in pieces
+    ]
+
+
+def _bcast_block(
+    region: TensorRegion, start: int, size: int, owner: int, n_hmcs: int,
+    *, tag_prefix: str = "allgather",
+) -> CommandBlock:
+    """One allgather step: HMC ``owner`` broadcasts its updated chunk.
+
+    An identity copy (read AGU == write AGU) over the chunk — semantically
+    a no-op in the flat reference memory, but it occupies the engine for
+    one cycle per word and carries ``(n_hmcs - 1)`` chunk transfers of link
+    traffic, which :mod:`repro.runtime.mesh` schedules over the serial
+    links.
+    """
+    agu = Agu(region.base + start, (1, 0, 0, 0, 0))
+    return CommandBlock(
+        template=NtxCommand(
+            loops=(size, 1, 1, 1, 1),
+            opcode="copy",
+            agu_rd0=agu,
+            agu_wr=agu,
+            init_level=0,
+            store_level=0,
+        ),
+        tag=f"{tag_prefix}:{region.name}[{owner}]",
+        reads=(region.name,),
+        writes=(region.name,),
+        dma_bytes_out=float(size * ELEM_BYTES * max(n_hmcs - 1, 0)),
+    )
+
+
+@dataclass
+class ShardedTrainStep:
+    """One train step split across a mesh of HMCs.
+
+    ``program`` is the combined command stream (bit-identical to the
+    unsharded step under ``run_reference``); ``hmc_of_block[i]`` says which
+    cube issues ``program.blocks[i]`` (:data:`ALL_HMCS` = every cube).
+    """
+
+    graph: NetworkGraph
+    mesh_shape: tuple[int, int]
+    program: NtxProgram
+    base_program: NtxProgram
+    hmc_of_block: list[int]
+
+    @property
+    def n_hmcs(self) -> int:
+        return self.mesh_shape[0] * self.mesh_shape[1]
+
+    @property
+    def shard_batch(self) -> int:
+        return self.graph.batch // self.n_hmcs
+
+    @property
+    def allreduce_bytes(self) -> float:
+        """Bytes of parameters exchanged per update pass (eq. 14's W)."""
+        return float(sum(
+            math.prod(shape) * ELEM_BYTES
+            for shape in self.graph.param_shapes().values()
+        ))
+
+    def shard_program(self, hmc: int) -> NtxProgram:
+        """The command stream cube ``hmc`` issues (plus replicated staging).
+
+        All shards are structurally symmetric — timing one of them times
+        them all.
+        """
+        if not 0 <= hmc < self.n_hmcs:
+            raise ValueError(f"hmc {hmc} outside mesh {self.mesh_shape}")
+        blocks = [
+            b for b, h in zip(self.program.blocks, self.hmc_of_block)
+            if h == hmc or h == ALL_HMCS
+        ]
+        return NtxProgram(
+            name=f"{self.program.name}:hmc{hmc}",
+            blocks=blocks,
+            regions=self.program.regions,
+            design=self.program.design,
+            meta={**self.program.meta, "hmc": hmc},
+        )
+
+    def epilogue_blocks(self) -> list[tuple[int, CommandBlock]]:
+        """(hmc, block) pairs of the allreduce epilogue, in program order."""
+        out = []
+        for b, h in zip(self.program.blocks, self.hmc_of_block):
+            if b.tag.startswith(("allreduce:", "allgather:")):
+                out.append((h, b))
+        return out
+
+
+def shard_training_step(
+    graph: NetworkGraph,
+    *,
+    design: DesignPoint = NTX_DESIGN,
+    mesh_shape: str | tuple[int, int] = (2, 2),
+    n_clusters: int = 16,
+    keep_grads: bool = True,
+    program: NtxProgram | None = None,
+) -> ShardedTrainStep:
+    """Compile ``graph`` and split its train-step program across a mesh.
+
+    ``program`` optionally supplies the already-compiled unsharded step
+    (must come from ``lower_training_step(graph, ...)`` with the same
+    design). The batch must divide evenly over the mesh.
+
+    Block classification:
+
+      * blocks writing a ``d_<param>`` region are the gradient reductions —
+        split by output chunk (**reduce-scatter**, chunk c -> HMC c) and
+        re-tagged ``allreduce:reduce:...``;
+      * blocks writing ``<param>_new`` / ``v_<param>_new`` are the update —
+        split by the same chunks (owner updates what it reduced), with the
+        weight allgather appended after the parameter's last update piece;
+      * everything else splits along the batch (outermost rep level, else
+        the outermost template loop); unsplittable staging (constant
+        memsets) is replicated to every HMC.
+    """
+    rows, cols = parse_mesh(mesh_shape)
+    n = rows * cols
+    if n < 1:
+        raise ValueError(f"degenerate mesh {rows}x{cols}")
+    if graph.batch % n:
+        raise ValueError(
+            f"batch {graph.batch} does not divide over a {rows}x{cols} mesh"
+        )
+    if program is None:
+        program = lower_training_step(
+            graph, design=design, n_clusters=n_clusters, keep_grads=keep_grads
+        )
+
+    params = set(graph.param_shapes())
+    grad_regions = {f"d_{p}" for p in params}
+    new_regions = {f"{p}_new" for p in params} | {f"v_{p}_new" for p in params}
+    param_of_new = {f"{p}_new": p for p in params}
+
+    blocks: list[CommandBlock] = []
+    hmc_of: list[int] = []
+
+    def emit(piece: CommandBlock, hmc: int) -> None:
+        blocks.append(piece)
+        hmc_of.append(hmc)
+
+    def emit_split(pieces: list[CommandBlock], retag: str | None = None) -> None:
+        if len(pieces) == 1:
+            b = pieces[0]
+            tiny = b.template.total_iterations <= _TINY_ITERS and b.n_commands == 1
+            emit(b, ALL_HMCS if tiny else 0)
+            return
+        for i, b in enumerate(pieces):
+            if retag:
+                b = replace(b, tag=f"{retag}:{b.tag}[{i}]")
+            # pieces < n only when the split dim had fewer iterations than
+            # HMCs; owners then cover a prefix of the mesh.
+            emit(b, i % n)
+
+    def output_split(b: CommandBlock) -> list[CommandBlock]:
+        # Reduction/update blocks keep every reduction dim inside the
+        # template (the lowering enforces usable >= n_red), so any driver
+        # rep level is a pure output dim: rep-split and template-split are
+        # both contiguous output-chunk (reduce-scatter) splits.
+        return split_block_reps(b, n) if b.reps else split_block_template(b, n)
+
+    for block in program.blocks:
+        spillage = block.tag.startswith(("spill:", "fill:"))
+        is_reduce = not spillage and any(w in grad_regions for w in block.writes)
+        is_update = not spillage and any(w in new_regions for w in block.writes)
+        if is_reduce:
+            # cross-batch gradient reduction: output-chunk split ==
+            # reduce-scatter. (Batched conv per-image dW replica writes
+            # target the ``<node>.dwb`` staging region, not ``d_<param>``,
+            # and take the batch split below — they are shard-local.)
+            emit_split(output_split(block), retag="allreduce:reduce")
+            continue
+        if is_update:
+            emit_split(output_split(block), retag="allreduce:update")
+            # after the *parameter* update (not the momentum block), each
+            # owner broadcasts its updated chunk to the other replicas
+            wn = next((w for w in block.writes if w in param_of_new), None)
+            if wn is not None:
+                r = program.regions[wn]
+                start = 0
+                for c, sz in enumerate(_chunk_sizes(r.size, n)):
+                    if n > 1:
+                        emit(_bcast_block(r, start, sz, c, n), c)
+                    start += sz
+            continue
+        if block.reps:
+            emit_split(split_block_reps(block, n))
+        else:
+            emit_split(split_block_template(block, n))
+
+    combined = NtxProgram(
+        name=f"{program.name}:mesh{rows}x{cols}",
+        blocks=blocks,
+        regions=program.regions,
+        design=program.design,
+        meta={
+            **program.meta,
+            "mesh": {
+                "shape": (rows, cols),
+                "n_hmcs": n,
+                "shard_batch": graph.batch // n,
+            },
+        },
+    )
+    return ShardedTrainStep(
+        graph=graph,
+        mesh_shape=(rows, cols),
+        program=combined,
+        base_program=program,
+        hmc_of_block=hmc_of,
+    )

@@ -9,8 +9,12 @@ The asynchronous near-memory offload subsystem (paper §2.2/§3.1):
 - :mod:`repro.runtime.scheduler` — loop-nest partitioning across clusters,
   queue feeding, chrome-trace timelines, and the event-driven counterpart of
   the analytical model in ``benchmarks/ntx_model.py``.
+- :mod:`repro.runtime.mesh`      — the inter-HMC serial-link layer (§4.9):
+  per-link transfer scheduling with congestion, the 4-pass systolic weight
+  update (eqs. 14-15), and :func:`~repro.runtime.mesh.time_mesh_step` over
+  sharded train-step programs.
 - :mod:`repro.runtime.supervisor` — fault-tolerant training supervisor
   (imported lazily: it pulls in jax).
 """
 
-from repro.runtime import cmdqueue, dma, scheduler  # noqa: F401
+from repro.runtime import cmdqueue, dma, mesh, scheduler  # noqa: F401

@@ -1,0 +1,401 @@
+"""Inter-HMC interconnect model: the mesh's serial links (paper §4.9).
+
+One HMC talks to its four neighbours over 60 GB/s serial links; a weight
+update crosses the mesh as four directional systolic passes (reduce then
+broadcast along each axis), eqs. (14)-(15):
+
+    t_pass   = W / LINK_BW + n_side * HOP_LATENCY                   (14)
+    t_update = 4 * t_pass                                           (15)
+
+This module keeps the link layer explicit instead of closed-form:
+
+  * :class:`MeshInterconnect` — the RxC mesh of directed links with an
+    event-level :meth:`schedule`: transfers on the same link serialize
+    (ring-step congestion), disjoint links run concurrently, every hop
+    pays the cube-traversal latency. The systolic update and the chunked
+    ring allreduce are both built on it; on a congestion-free embedding
+    the systolic pass lands exactly on eq. (14), which is what keeps the
+    executed mesh efficiencies within a hair of ``ntx_model.mesh``.
+  * :func:`time_mesh_step` — one executed+timed mesh training step: the
+    per-HMC shard program (from
+    :func:`repro.lower.mesh.shard_training_step`) goes through the
+    block-replicated timing engine
+    (:meth:`~repro.runtime.scheduler.MultiClusterScheduler.schedule_program`
+    -> ``simulate_offload_blocks``), the gradient/weight exchange through
+    the link schedule.
+
+Calibration constants are numerically identical to
+``benchmarks/ntx_model.py`` (a test pins them); duplicated here because
+``src/`` never imports ``benchmarks/``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+# §4.9 link calibration — pinned against benchmarks/ntx_model.py by a test.
+LINK_BW = 60e9  # B/s per serial link
+HOP_LATENCY = 20e-6  # s per cube traversal (conservative)
+CUBE_POWER_MESH = 21.0  # W assumed during mesh compute
+P_LINKS = 8.0  # W, all four serial links
+
+
+@dataclass(frozen=True)
+class LinkTransfer:
+    """One point-to-point transfer over a single mesh link."""
+
+    link: tuple[tuple[int, int], tuple[int, int]]  # ((r, c) -> (r, c))
+    num_bytes: float
+    start: float = 0.0
+    tag: str = ""
+
+
+@dataclass(frozen=True)
+class ScheduledTransfer:
+    transfer: LinkTransfer
+    t0: float
+    t1: float
+
+    @property
+    def queued(self) -> float:
+        """Time spent waiting for the link (congestion)."""
+        return self.t0 - self.transfer.start
+
+
+@dataclass
+class LinkSchedule:
+    transfers: list[ScheduledTransfer] = field(default_factory=list)
+
+    @property
+    def makespan(self) -> float:
+        return max((t.t1 for t in self.transfers), default=0.0)
+
+    @property
+    def congestion_time(self) -> float:
+        return sum(t.queued for t in self.transfers)
+
+
+class MeshInterconnect:
+    """An RxC mesh of HMCs joined by directed nearest-neighbour links."""
+
+    def __init__(self, rows: int, cols: int, *,
+                 link_bw: float = LINK_BW, hop_latency: float = HOP_LATENCY):
+        if rows < 1 or cols < 1:
+            raise ValueError(f"degenerate mesh {rows}x{cols}")
+        self.rows = rows
+        self.cols = cols
+        self.link_bw = link_bw
+        self.hop_latency = hop_latency
+
+    @property
+    def n_hmcs(self) -> int:
+        return self.rows * self.cols
+
+    def _check_link(self, link) -> None:
+        (r0, c0), (r1, c1) = link
+        for r, c in ((r0, c0), (r1, c1)):
+            if not (0 <= r < self.rows and 0 <= c < self.cols):
+                raise ValueError(f"node {(r, c)} outside {self.rows}x{self.cols}")
+        if abs(r0 - r1) + abs(c0 - c1) != 1:
+            raise ValueError(f"{link} is not a nearest-neighbour link")
+
+    def transfer_time(self, num_bytes: float) -> float:
+        """Wire time of one transfer on one link, excluding the hop."""
+        return num_bytes / self.link_bw
+
+    # -- the event-level link scheduler -------------------------------------
+
+    def schedule(self, transfers: list[LinkTransfer]) -> LinkSchedule:
+        """Serialize per link, run links concurrently, charge one hop each.
+
+        Transfers are served per link in submission order once their
+        ``start`` time arrives — a transfer finding its link busy queues
+        behind the one in flight (ring-step congestion). Completion is
+        ``begin + hop_latency + bytes / link_bw`` (cut-through: the hop is
+        the first-word latency, the stream follows at the wire rate).
+        """
+        busy: dict[tuple, float] = {}
+        out = LinkSchedule()
+        for tr in transfers:
+            self._check_link(tr.link)
+            t0 = max(tr.start, busy.get(tr.link, 0.0))
+            t1 = t0 + self.hop_latency + self.transfer_time(tr.num_bytes)
+            busy[tr.link] = t1
+            out.transfers.append(ScheduledTransfer(tr, t0, t1))
+        return out
+
+    # -- the paper's systolic weight update (eqs. 14-15) ---------------------
+
+    def _pass_transfers(self, num_bytes: float, axis: int, reverse: bool,
+                        t0: float, tag: str) -> list[LinkTransfer]:
+        """One directional pass: every line of the mesh pipelines the full
+        array across its links, cut-through (link ``i`` starts one hop
+        after link ``i-1``, streaming concurrently). The last link of a
+        length-L line completes at ``t0 + L * hop + bytes / bw`` — eq. (14)
+        with that axis's extent as n_side.
+        """
+        out = []
+        n_lines = self.cols if axis == 0 else self.rows
+        length = self.rows if axis == 0 else self.cols
+        hops = range(length - 1)
+        for line in range(n_lines):
+            for i, h in enumerate(reversed(hops) if reverse else hops):
+                if axis == 0:
+                    a, b = (h, line), (h + 1, line)
+                else:
+                    a, b = (line, h), (line, h + 1)
+                if reverse:
+                    a, b = b, a
+                out.append(LinkTransfer(
+                    link=(a, b), num_bytes=num_bytes,
+                    start=t0 + (i + 1) * self.hop_latency,
+                    tag=f"{tag}:line{line}",
+                ))
+        return out
+
+    def systolic_update(self, weight_bytes: float) -> LinkSchedule:
+        """The 4-pass weight exchange: reduce then broadcast along each
+        axis, each pass streaming the full W bytes down every line.
+
+        On the congestion-free line embedding each pass takes
+        ``W / link_bw + L * hop_latency`` — eq. (14) with the axis extent
+        as n_side — and the passes serialize, so a square mesh lands
+        exactly on eq. (15); degenerate axes (extent 1) contribute no
+        pass. The schedule is built from individual
+        :class:`LinkTransfer`s, so a different embedding (or a busy mesh)
+        shows up as congestion, not as a changed formula.
+        """
+        transfers: list[LinkTransfer] = []
+        t0 = 0.0
+        for axis, reverse, tag in ((0, False, "reduce_v"), (1, False, "reduce_h"),
+                                   (1, True, "bcast_h"), (0, True, "bcast_v")):
+            length = self.rows if axis == 0 else self.cols
+            if length < 2:
+                continue
+            transfers += self._pass_transfers(weight_bytes, axis, reverse, t0, tag)
+            t0 += self.transfer_time(weight_bytes) + length * self.hop_latency
+        return self.schedule(transfers)
+
+    def update_time(self, weight_bytes: float) -> float:
+        """Eq. (15): the 4-pass systolic update, from the link schedule."""
+        if self.n_hmcs == 1:
+            return 0.0
+        return self.systolic_update(weight_bytes).makespan
+
+    # -- the chunked ring alternative ----------------------------------------
+
+    def ring_allreduce(self, num_bytes: float) -> LinkSchedule:
+        """Reduce-scatter + allgather over a boustrophedon ring embedding.
+
+        2(n-1) steps, each moving ``num_bytes / n`` per node; the snake
+        embedding uses every mesh link at most once per direction, so the
+        steps themselves are congestion-free and the schedule time is
+        ``2 (n-1) (num_bytes / (n * link_bw) + hop)``.
+        """
+        n = self.n_hmcs
+        if n == 1:
+            return LinkSchedule()
+        nodes = []
+        for r in range(self.rows):
+            cs = range(self.cols) if r % 2 == 0 else range(self.cols - 1, -1, -1)
+            nodes += [(r, c) for c in cs]
+        chunk = num_bytes / n
+        transfers = []
+        t0 = 0.0
+        step_t = self.transfer_time(chunk) + self.hop_latency
+        for step in range(2 * (n - 1)):
+            phase = "reduce" if step < n - 1 else "gather"
+            for i in range(n):
+                a, b = nodes[i], nodes[(i + 1) % n]
+                if abs(a[0] - b[0]) + abs(a[1] - b[1]) != 1:
+                    # the ring's wrap edge is not a mesh link: route it
+                    # store-and-forward through intermediate cubes (hop j
+                    # starts once hop j-1 delivered). The wrap's latency
+                    # stretches the ring past the single-hop floor, and on
+                    # a busy mesh its links queue like any other transfer.
+                    path = _route(a, b)
+                    for hop_i, (u, v) in enumerate(zip(path, path[1:])):
+                        transfers.append(LinkTransfer(
+                            (u, v), chunk,
+                            t0 + hop_i * (self.transfer_time(chunk)
+                                          + self.hop_latency),
+                            f"ring:{phase}{step}",
+                        ))
+                else:
+                    transfers.append(LinkTransfer((a, b), chunk, t0,
+                                                  f"ring:{phase}{step}"))
+            t0 += step_t
+        return self.schedule(transfers)
+
+    def ring_allreduce_time(self, num_bytes: float) -> float:
+        return self.ring_allreduce(num_bytes).makespan
+
+
+def _route(a: tuple[int, int], b: tuple[int, int]) -> list[tuple[int, int]]:
+    """Dimension-ordered (row-first) path between two mesh nodes."""
+    path = [a]
+    r, c = a
+    while r != b[0]:
+        r += 1 if b[0] > r else -1
+        path.append((r, c))
+    while c != b[1]:
+        c += 1 if b[1] > c else -1
+        path.append((r, c))
+    return path
+
+
+def _partition_coarse(program, parts: int):
+    """§3.1 refinement of only the *coarse* blocks of ``program``.
+
+    Blocks with fewer than ``parts`` commands (single-command whole-batch
+    relus, spill/fill blits, the reduce-scatter chunks) cannot spread over
+    all clusters x engines and would pin one cluster with a multi-second
+    command; blocks already streaming thousands of replicas balance on
+    their own and are left untouched — full :func:`partition_program`
+    would multiply the block count by ``parts`` for no balance gain.
+    """
+    from repro.lower.ir import NtxProgram
+    from repro.lower.mesh import split_block_template
+
+    new_blocks = []
+    for b in program.blocks:
+        if b.n_commands >= parts:
+            new_blocks.append(b)
+            continue
+        want = -(-parts // b.n_commands)  # ceil: pieces x replicas >= parts
+        new_blocks.extend(split_block_template(b, want))
+    return NtxProgram(
+        name=f"{program.name}:coarse{parts}",
+        blocks=new_blocks,
+        regions=program.regions,
+        design=program.design,
+        meta={**program.meta, "partitioned_coarse": parts},
+    )
+
+
+# ---------------------------------------------------------------------------
+# One executed + timed mesh training step
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshStepTiming:
+    """Timing of one data-parallel training step on a mesh of HMCs."""
+
+    mesh_shape: tuple[int, int]
+    n_hmcs: int
+    batch: int
+    t_shard: float  # s: one cube's shard program (compute + spill DMA)
+    t_update: float  # s: the 4-pass link exchange (eq. 15)
+    t_single: float  # s: the unsharded step on one cube
+    shard_cycles: int
+    single_cycles: int
+    link_congestion: float  # s queued on busy links during the update
+
+    @property
+    def t_step(self) -> float:
+        return self.t_shard + self.t_update
+
+    @property
+    def speedup(self) -> float:
+        return self.t_single / self.t_step
+
+    @property
+    def parallel_eff(self) -> float:
+        return self.speedup / self.n_hmcs
+
+    @property
+    def t_image(self) -> float:
+        """Per-image time of the single-cube baseline (eq. 16's t_image)."""
+        return self.t_single / self.batch
+
+    def summary(self) -> dict:
+        return {
+            "mesh": f"{self.mesh_shape[0]}x{self.mesh_shape[1]}",
+            "n_hmcs": self.n_hmcs,
+            "batch": self.batch,
+            "t_shard_ms": self.t_shard * 1e3,
+            "t_update_ms": self.t_update * 1e3,
+            "t_step_ms": self.t_step * 1e3,
+            "t_single_ms": self.t_single * 1e3,
+            "speedup": self.speedup,
+            "parallel_eff": self.parallel_eff,
+            "link_congestion_ms": self.link_congestion * 1e3,
+        }
+
+
+def time_mesh_step(
+    sharded,
+    *,
+    n_clusters: int = 16,
+    f_ntx: float = 1.5e9,
+    derate: bool = True,
+    engine: str = "block",
+    partition: bool = True,
+    single_result=None,
+) -> MeshStepTiming:
+    """Time one mesh step: shard program on the block engine + link exchange.
+
+    ``sharded`` is a :class:`repro.lower.mesh.ShardedTrainStep`. Every cube
+    runs a structurally identical shard, so HMC 0's program stands for all;
+    the weight exchange is the eq.-(15) systolic update over the program's
+    actual parameter bytes. ``derate=True`` applies the calibrated
+    eta_c * eta_net compute derating exactly like ``benchmarks.ntx_model``
+    (and the ``mesh_sweep`` benchmark); ``partition=True`` first refines
+    both programs with :func:`~repro.runtime.scheduler.partition_program`
+    (§3.1 tiling) so single-command blocks — whole-batch relus, spill
+    blits — spread over all clusters x engines instead of pinning one
+    cluster. ``single_result`` optionally reuses an already-timed unsharded
+    ScheduleResult (callers sweeping mesh sizes at a fixed batch share it).
+    """
+    from repro.runtime import scheduler as rt_sched
+
+    eta = rt_sched.ETA_COMPUTE * rt_sched.ETA_NET
+    exec_cycles = (lambda c: c.busy_cycles / eta) if derate else None
+    parts = n_clusters * rt_sched.ENGINES_PER_CLUSTER
+
+    def timed(program):
+        if partition:
+            program = _partition_coarse(program, parts)
+        sched = rt_sched.MultiClusterScheduler(
+            n_clusters=n_clusters, f_ntx=f_ntx
+        )
+        return sched.schedule_program(program, engine=engine,
+                                      exec_cycles=exec_cycles)
+
+    shard_res = timed(sharded.shard_program(0))
+    if single_result is None:
+        single_result = timed(sharded.base_program)
+    rows, cols = sharded.mesh_shape
+    net = MeshInterconnect(rows, cols)
+    if sharded.n_hmcs > 1:
+        upd = net.systolic_update(sharded.allreduce_bytes)
+        t_update, congestion = upd.makespan, upd.congestion_time
+    else:
+        t_update, congestion = 0.0, 0.0
+    return MeshStepTiming(
+        mesh_shape=sharded.mesh_shape,
+        n_hmcs=sharded.n_hmcs,
+        batch=sharded.graph.batch,
+        t_shard=shard_res.total_cycles / f_ntx,
+        t_update=t_update,
+        t_single=single_result.total_cycles / f_ntx,
+        shard_cycles=shard_res.total_cycles,
+        single_cycles=single_result.total_cycles,
+        link_congestion=congestion,
+    )
+
+
+def expected_update_time(weight_bytes: float, rows: int, cols: int) -> float:
+    """The closed-form value the link schedule must reproduce.
+
+    Two passes (reduce + broadcast) per non-degenerate axis, each eq. (14)
+    with that axis's extent as n_side — on a square mesh exactly eq. (15),
+    ``4 (W / LINK_BW + n_side * HOP)``; on a rectangle the shorter axis
+    pays its own (smaller) hop count.
+    """
+    total = 0.0
+    for length in (rows, cols):
+        if length > 1:
+            total += 2.0 * (weight_bytes / LINK_BW + length * HOP_LATENCY)
+    return total

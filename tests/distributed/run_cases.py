@@ -7,7 +7,15 @@ Prints "PASS <case>" on success; any exception exits non-zero.
 import os
 import sys
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# The mesh data-parallel cases pin their own fake-device count (1x1 / 2x2 /
+# 4x4 HMC meshes -> 1 / 4 / 16 devices); every other case keeps the
+# historical 8. Must be decided before jax imports.
+_DEVICE_COUNTS = {"mesh_dp_grads_1": 1, "mesh_dp_grads_4": 4,
+                  "mesh_dp_grads_16": 16}
+_N_DEV = _DEVICE_COUNTS.get(sys.argv[1] if len(sys.argv) > 1 else "", 8)
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={_N_DEV}"
+)
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -212,6 +220,83 @@ def case_sp_model_same_loss():
     base = losses["base"]
     for name, l in losses.items():
         assert abs(l - base) < 1e-4, losses
+
+
+def _mesh_dp_grads(rows: int, cols: int):
+    """run_pallas on a mesh-sharded train step == jax.grad, data-parallel.
+
+    The whole-train-step program shards over a (rows x cols) device mesh
+    via shard_map; logits, per-parameter gradients, momentum, and updated
+    weights must match jax autodiff + SGD on the same model to fp32
+    tolerance. One jax device per HMC — the real allreduce (psum) runs.
+    """
+    from repro.kernels import ref
+    from repro.lower import (
+        PlanCache,
+        lower_training_step,
+        paper_cnn_graph,
+        run_pallas,
+        shard_training_step,
+    )
+
+    n = rows * cols
+    assert jax.device_count() == n, (jax.device_count(), n)
+    graph = paper_cnn_graph(batch=16, img=8, lr=0.05, momentum=0.9)
+    prog = lower_training_step(graph)
+    sharded = shard_training_step(graph, mesh_shape=(rows, cols),
+                                  program=prog)
+
+    rng = np.random.RandomState(0)
+    x = rng.randn(16, 8, 8, 3).astype(np.float32)
+    onehot = np.eye(10, dtype=np.float32)[rng.randint(0, 10, 16)]
+    params = graph.init_params(seed=1)
+    outs = run_pallas(sharded.program, {"x": x, "onehot": onehot, **params},
+                      cache=PlanCache())
+
+    def forward(p, xb):
+        h = ref.conv2d_ref(xb, p["w_c1"], stride=2, padding=2)
+        h = jax.nn.relu(h)
+        h = ref.conv2d_ref(h, p["w_c2"], stride=2, padding=1)
+        h = jax.nn.relu(h)
+        h = jax.lax.reduce_window(
+            h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+        return h.reshape(xb.shape[0], -1) @ p["w_fc"] + p["b_fcb"][None, :]
+
+    def loss_fn(p):
+        z = forward(p, jnp.asarray(x))
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(z) * onehot, axis=1))
+
+    jp = {k: jnp.asarray(v) for k, v in params.items()
+          if not k.startswith("v_")}
+    grads = jax.grad(loss_fn)(jp)
+    np.testing.assert_allclose(
+        np.asarray(outs[graph.logits_edge]), np.asarray(forward(jp, x)),
+        rtol=1e-4, atol=1e-5,
+    )
+    for p in graph.param_shapes():
+        g = np.asarray(grads[p])
+        np.testing.assert_allclose(np.asarray(outs[f"d_{p}"]), g,
+                                   rtol=1e-3, atol=1e-5, err_msg=p)
+        v_new = graph.momentum * params[f"v_{p}"] + g
+        np.testing.assert_allclose(np.asarray(outs[f"v_{p}_new"]), v_new,
+                                   rtol=1e-3, atol=1e-5, err_msg=p)
+        np.testing.assert_allclose(
+            np.asarray(outs[f"{p}_new"]), params[p] - graph.lr * v_new,
+            rtol=1e-3, atol=1e-5, err_msg=p,
+        )
+
+
+def case_mesh_dp_grads_1():
+    _mesh_dp_grads(1, 1)
+
+
+def case_mesh_dp_grads_4():
+    _mesh_dp_grads(2, 2)
+
+
+def case_mesh_dp_grads_16():
+    _mesh_dp_grads(4, 4)
 
 
 CASES = {k[5:]: v for k, v in list(globals().items()) if k.startswith("case_")}

@@ -34,6 +34,12 @@ CASES = [
     "elastic_checkpoint_reshard",
     pytest.param("compressed_train_step_runs", marks=_PARTIAL_AUTO_XFAIL),
     "sp_model_same_loss",
+    # mesh-of-HMCs data parallelism: run_pallas on a sharded train-step
+    # program vs jax.grad at 1, 4, and 16 simulated devices (each case
+    # pins its own --xla_force_host_platform_device_count in run_cases)
+    "mesh_dp_grads_1",
+    "mesh_dp_grads_4",
+    "mesh_dp_grads_16",
 ]
 
 
