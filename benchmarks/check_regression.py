@@ -14,6 +14,13 @@ run. Three metric kinds:
     lowering pipeline trips it.
   * ``exact`` — integers (command counts, cycle totals, TCDM peaks): must
     match the baseline bit for bit.
+  * ``bound`` — absolute one-sided limit carried by the spec itself (no
+    baseline entry): fails above ``limit``. Used for the instrumentation
+    overhead gate (counters-on vs counters-off wall delta <= 5%).
+
+Every artifact must also carry the shared ``schema_version`` stamp
+(:data:`repro.obs.report.SCHEMA_VERSION` — every writer routes through
+``repro.obs.report``); a missing or mismatched stamp is a failure.
 
 Usage::
 
@@ -42,7 +49,8 @@ MODEL_RTOL = 1e-3  # deterministic floats: drift band (ulp-noise tolerant)
 class MetricSpec:
     file: str  # artifact basename this metric comes from
     path: str  # dot path inside the json ("summary.n_commands")
-    kind: str  # "wall" | "model" | "exact"
+    kind: str  # "wall" | "model" | "exact" | "bound"
+    limit: float | None = None  # "bound" only: absolute one-sided ceiling
 
 
 #: Every metric the gate tracks. Keys into the baseline are
@@ -70,12 +78,22 @@ SPECS = [
     MetricSpec("BENCH_mesh.json", "summary.min_parallel_eff", "model"),
     MetricSpec("BENCH_mesh.json", "summary.max_model_rel_err", "model"),
     MetricSpec("BENCH_mesh.json", "summary.shard_cycles_total", "exact"),
+    MetricSpec("BENCH_mesh.json", "summary.link_hops_total", "exact"),
+    MetricSpec("BENCH_mesh.json", "summary.link_bytes_total", "model"),
     # -- whole-train-step bench (benchmarks.trainstep_bench) ---------------
     MetricSpec("BENCH_trainstep.json", "wall_s", "wall"),
     MetricSpec("BENCH_trainstep.json", "summary.n_commands", "exact"),
     MetricSpec("BENCH_trainstep.json", "summary.peak_tcdm_bytes", "exact"),
     MetricSpec("BENCH_trainstep.json", "summary.step_cycles_ntx", "exact"),
     MetricSpec("BENCH_trainstep.json", "summary.step_cycles_ns", "exact"),
+    MetricSpec("BENCH_trainstep.json", "summary.counter_commands_total",
+               "exact"),
+    MetricSpec("BENCH_trainstep.json", "summary.counter_offloads_total",
+               "exact"),
+    MetricSpec("BENCH_trainstep.json", "summary.counter_dma_bytes_total",
+               "exact"),
+    MetricSpec("BENCH_trainstep.json",
+               "summary.instrumentation_overhead_frac", "bound", limit=0.05),
 ]
 
 
@@ -114,6 +132,15 @@ def check_file(path: str, baseline: dict, *, update: bool) -> list[str]:
     metrics = baseline.setdefault("metrics", {})
     failures: list[str] = []
     print(f"== {name} ==")
+    from repro.obs import SCHEMA_VERSION
+
+    ver = doc.get("schema_version")
+    if ver != SCHEMA_VERSION:
+        failures.append(
+            f"{name}: schema_version {ver!r} != {SCHEMA_VERSION} "
+            "(every BENCH writer must route through repro.obs.report)"
+        )
+        print(f"  FAIL    schema_version: {ver!r} != {SCHEMA_VERSION}")
     for spec in specs:
         key = _key(spec)
         try:
@@ -121,6 +148,14 @@ def check_file(path: str, baseline: dict, *, update: bool) -> list[str]:
         except KeyError:
             failures.append(f"{key}: metric missing from artifact")
             print(f"  MISSING  {spec.path}")
+            continue
+        if spec.kind == "bound":
+            # Baseline-free: the ceiling rides in the spec itself.
+            ok = cur <= spec.limit
+            detail = f"{cur:.4g} vs limit {spec.limit:.4g}"
+            print(f"  {'ok' if ok else 'FAIL':8s}{spec.path}: {detail}")
+            if not ok:
+                failures.append(f"{key}: {detail}")
             continue
         if update:
             metrics[key] = cur

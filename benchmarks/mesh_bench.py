@@ -26,8 +26,6 @@ and diffed by ``benchmarks/check_regression.py``).
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 from benchmarks import ntx_model as M
@@ -43,7 +41,8 @@ MODEL_TOL = 0.01  # executed vs ntx_model.mesh parallel efficiency
 def mesh_executed_sweep(cases=CASES, network="googlenet", n_clusters=16,
                         f_ntx=1.5e9):
     """One row per mesh size: executed vs modeled parallel efficiency."""
-    from repro.lower import lower_training_step, shard_training_step
+    from repro.lower import shard_training_step
+    from repro.obs import CounterRegistry, use_registry
     from repro.runtime.mesh import (
         MeshInterconnect,
         expected_update_time,
@@ -57,12 +56,14 @@ def mesh_executed_sweep(cases=CASES, network="googlenet", n_clusters=16,
     errs = []
     cmds = {}
     shard_cycles_total = 0
+    reg = CounterRegistry()
     for side, batch in cases:
         graph = network_graph(network, batch=batch)
-        sharded = shard_training_step(
-            graph, mesh_shape=(side, side), n_clusters=n_clusters
-        )
-        tm = time_mesh_step(sharded, n_clusters=n_clusters, f_ntx=f_ntx)
+        with use_registry(reg), reg.scope(f"{side}x{side}"):
+            sharded = shard_training_step(
+                graph, mesh_shape=(side, side), n_clusters=n_clusters
+            )
+            tm = time_mesh_step(sharded, n_clusters=n_clusters, f_ntx=f_ntx)
         mod = M.mesh(side, batch, t_image=tm.t_image,
                      weight_bytes=sharded.allreduce_bytes)
         err = abs(tm.parallel_eff - mod.parallel_eff) / mod.parallel_eff
@@ -86,10 +87,37 @@ def mesh_executed_sweep(cases=CASES, network="googlenet", n_clusters=16,
         "min_parallel_eff": min(effs),
         "max_model_rel_err": max(errs),
         "shard_cycles_total": shard_cycles_total,
+        "link_bytes_total": reg.total("link_bytes"),
+        "link_hops_total": reg.total("link_hops"),
+        "allreduce_bytes_total": reg.total("allreduce_bytes"),
         "parallel_eff_above_95pct": min(effs) >= EFF_FLOOR,
         "within_1pct_of_model": max(errs) < MODEL_TOL,
         "four_or_more_sizes": len(rows) >= 4,
     }
+
+
+def write_mesh_trace(path, *, network="googlenet", side=2, batch=8,
+                     n_clusters=16) -> str:
+    """Merged Perfetto trace for one small mesh step (the CI artifact).
+
+    Lowers the network at a trace-friendly batch (full per-command records
+    under the event engine), shards it over a ``side x side`` mesh, and
+    emits HMC 0's cluster exec/DMA lanes, the systolic update's link lanes,
+    the host-side lowering spans and the flow arrows tying them together.
+    """
+    from repro.lower import shard_training_step
+    from repro.obs import TraceCollector, use_collector
+
+    from benchmarks.workloads import network_graph
+
+    col = TraceCollector()
+    with use_collector(col):
+        graph = network_graph(network, batch=batch)
+        sharded = shard_training_step(
+            graph, mesh_shape=(side, side), n_clusters=n_clusters
+        )
+        col.add_mesh_step(sharded, n_clusters=n_clusters)
+    return col.save(path)
 
 
 GATES = ("parallel_eff_above_95pct", "within_1pct_of_model",
@@ -98,23 +126,25 @@ GATES = ("parallel_eff_above_95pct", "within_1pct_of_model",
 
 def write_json(rows, summary, wall_s,
                path: str = "artifacts/BENCH_mesh.json") -> str:
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    with open(path, "w") as f:
-        json.dump({
-            "wall_s": wall_s,
-            "summary": summary,
-            "rows": [list(r) for r in rows],
-            "columns": ["mesh/batch", "n_commands", "t_shard_ms",
-                        "t_update_ms", "t_ring_ms", "parallel_eff",
-                        "model_parallel_eff", "rel_err"],
-        }, f, indent=1, default=str)
-    return path
+    from repro.obs import write_bench_json
+
+    return write_bench_json({
+        "wall_s": wall_s,
+        "summary": summary,
+        "rows": [list(r) for r in rows],
+        "columns": ["mesh/batch", "n_commands", "t_shard_ms",
+                    "t_update_ms", "t_ring_ms", "parallel_eff",
+                    "model_parallel_eff", "rel_err"],
+    }, path)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--network", default="googlenet")
     ap.add_argument("--json", default="artifacts/BENCH_mesh.json")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="also write the merged Perfetto trace for one "
+                         "small 2x2 mesh step (CI uploads this artifact)")
     args = ap.parse_args()
 
     t0 = time.perf_counter()
@@ -125,6 +155,8 @@ def main() -> None:
     for k, v in summary.items():
         print(f"   -> {k}: {v}")
     print("json:", write_json(rows, summary, wall, args.json))
+    if args.trace:
+        print("trace:", write_mesh_trace(args.trace, network=args.network))
     failed = [g for g in GATES if not summary.get(g)]
     if failed:
         raise SystemExit(f"mesh gates failed: {', '.join(failed)}")

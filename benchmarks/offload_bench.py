@@ -463,19 +463,14 @@ def write_bench_json(results: dict, path="artifacts/BENCH_offload.json") -> str:
 
     ``results`` maps benchmark name -> {"wall_s": float, "summary": {...},
     "rows": [...]}; the file is what CI uploads and what cross-PR perf
-    tracking diffs.
+    tracking diffs. Thin delegate: the envelope (``total_wall_s``,
+    ``schema_version``) is stamped in exactly one place —
+    :func:`repro.obs.report.write_offload_bench` — shared with
+    ``benchmarks/run.py``.
     """
-    import json
-    import os
+    from repro.obs import write_offload_bench
 
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    payload = {
-        "benchmarks": results,
-        "total_wall_s": sum(r["wall_s"] for r in results.values()),
-    }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=str)
-    return path
+    return write_offload_bench(results, path)
 
 
 def main() -> None:

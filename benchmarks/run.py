@@ -78,7 +78,9 @@ def main() -> None:
             print("  ", *(f"{x:.4g}" if isinstance(x, float) else x for x in r))
         for k, v in summary.items():
             print(f"   -> {k}: {v}")
-    print("json:", offload_bench.write_bench_json(results))
+    from repro.obs import write_offload_bench
+
+    print("json:", write_offload_bench(results))
 
 
 if __name__ == "__main__":

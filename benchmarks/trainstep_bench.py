@@ -20,8 +20,6 @@ lane alongside ``BENCH_offload.json``).
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 import numpy as np
@@ -38,6 +36,7 @@ def trainstep_bench(steps: int = 3, batch: int = 4, img: int = 16,
         run_timing,
         train_graph,
     )
+    from repro.obs import CounterRegistry, program_totals
 
     graph = paper_cnn_graph(batch=batch, img=img, lr=0.05, momentum=0.9)
     program = lower_training_step(graph, n_clusters=n_clusters)
@@ -46,9 +45,24 @@ def trainstep_bench(steps: int = 3, batch: int = 4, img: int = 16,
 
     batch_fn = frequency_band_batches(np.random.RandomState(0), batch, img,
                                       graph.loss.classes)
+    reg = CounterRegistry()
     res = train_graph(graph, steps, batch_fn, program=program,
-                      backend="pallas", params=graph.init_params(seed=0))
+                      backend="pallas", params=graph.init_params(seed=0),
+                      registry=reg)
     losses, walls = res["losses"], res["walls"]
+
+    # Instrumentation overhead: alternate warm executor calls with the
+    # registry on and off and compare best-of-N, so cache warmth and OS
+    # jitter hit both sides equally (min-of-N is robust to noise spikes —
+    # noise only ever adds time).
+    overhead = _instrumentation_overhead(program, batch_fn, graph, res["params"])
+
+    # The per-step counter totals must equal the program's own closed-form
+    # counts (times `steps`) exactly — the tentpole's cross-check gate.
+    closed = program_totals(program)
+    counters_exact = all(
+        reg.total(leaf) == steps * want for leaf, want in closed.items()
+    )
 
     timed = {
         name: run_timing(p, n_clusters=n_clusters, engine="block").total_cycles
@@ -79,23 +93,56 @@ def trainstep_bench(steps: int = 3, batch: int = 4, img: int = 16,
         "step_cycles_ntx": timed["ntx"],
         "step_cycles_ns": timed["ns"],
         "ns_over_ntx_cycles": timed["ns"] / max(timed["ntx"], 1),
+        "counter_offloads_total": reg.total("offloads"),
+        "counter_commands_total": reg.total("commands"),
+        "counter_dma_bytes_total": reg.total("dma_bytes"),
+        "counter_macs_total": reg.total("macs"),
+        "counters_match_closed_form": counters_exact,
+        "instrumentation_overhead_frac": overhead,
     }
     return rows, summary
 
 
-GATES = ("loss_decreased", "within_tcdm_budget")
+def _instrumentation_overhead(program, batch_fn, graph, params,
+                              reps: int = 7) -> float:
+    """min-of-N warm step wall with counters on / off - 1 (>= 0)."""
+    import numpy as _np
+
+    from repro.lower import executors
+    from repro.obs import CounterRegistry, use_registry
+
+    eye = _np.eye(graph.loss.classes, dtype=_np.float32)
+    x, labels = batch_fn(0)
+    inputs = {graph.input_edge: _np.asarray(x, _np.float32),
+              graph.label_edge: eye[_np.asarray(labels)], **params}
+
+    def step(reg):
+        with use_registry(reg):
+            t0 = time.perf_counter()
+            executors.run_pallas(program, inputs)
+            return time.perf_counter() - t0
+
+    step(None)  # warm the plan cache on exactly these inputs
+    on, off = [], []
+    for _ in range(reps):
+        off.append(step(None))
+        on.append(step(CounterRegistry()))
+    return max(0.0, min(on) / min(off) - 1.0)
+
+
+GATES = ("loss_decreased", "within_tcdm_budget",
+         "counters_match_closed_form")
 
 
 def write_json(rows, summary, wall_s,
                path: str = "artifacts/BENCH_trainstep.json") -> str:
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    with open(path, "w") as f:
-        json.dump({
-            "wall_s": wall_s,
-            "summary": summary,
-            "rows": [list(r) for r in rows],
-        }, f, indent=1, default=str)
-    return path
+    from repro.obs import write_bench_json
+
+    return write_bench_json({
+        "wall_s": wall_s,
+        "summary": summary,
+        "rows": [list(r) for r in rows],
+    }, path)
 
 
 def main() -> None:

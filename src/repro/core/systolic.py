@@ -106,7 +106,9 @@ def systolic_all_reduce(x: jnp.ndarray, axis_name: str, axis_size: int) -> jnp.n
     return out.reshape(x.shape)
 
 
-def systolic_mean(x: jnp.ndarray, axis_names: tuple[str, ...], axis_sizes: tuple[int, ...]) -> jnp.ndarray:
+def systolic_mean(
+    x: jnp.ndarray, axis_names: tuple[str, ...], axis_sizes: tuple[int, ...]
+) -> jnp.ndarray:
     """Paper Fig. 14: horizontal wave pair, then vertical wave pair, then scale.
 
     ``axis_names``/``axis_sizes``: the mesh axes to average over, e.g.

@@ -331,7 +331,9 @@ def batch_shardings(batch_struct, cfg, mesh, dp_axes, seq_axis=None, batch_size=
 def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
                 lr: float = 0.05, momentum: float = 0.9,
                 interpret: bool | None = None,
-                mesh: str | None = None) -> dict:
+                mesh: str | None = None,
+                metrics: str | None = None,
+                trace: str | None = None) -> dict:
     """The ``--backend ntx`` mode: train the paper's small CNN end-to-end
     with every step one compiled :class:`repro.lower.NtxProgram` executed
     through ``run_pallas`` graph execution (cached per-node plans).
@@ -343,11 +345,20 @@ def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
     on CPU), and the modeled mesh timing (per-HMC shard program + eq. 14-15
     link exchange) is printed alongside.
 
+    ``metrics`` streams one JSON object per step (loss, wall seconds, the
+    step's counter totals — :mod:`repro.obs.report` schema); ``trace``
+    writes the merged Perfetto trace (cluster exec/DMA lanes, mesh link
+    lanes, host lowering/dispatch spans, flow events). Either also prints
+    the top-k hotspot table at the end.
+
     Returns the :func:`repro.lower.train_graph` result dict (program,
     params, losses, per-step walls).
     """
+    from contextlib import nullcontext
+
     import numpy as np
 
+    from repro import obs
     from repro.lower import (
         frequency_band_batches,
         lower_training_step,
@@ -356,40 +367,71 @@ def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
         train_graph,
     )
 
-    graph = paper_cnn_graph(batch=batch, img=img, lr=lr, momentum=momentum)
-    program = lower_training_step(graph, n_clusters=n_clusters)
-    print(f"ntx train-step program: {len(program.blocks)} blocks, "
-          f"{program.n_commands} commands, "
-          f"peak TCDM {program.meta['peak_tcdm_bytes']} / "
-          f"{program.meta['tcdm_budget_bytes']} B "
-          f"({len(program.meta['spilled'])} spilled)")
-    if mesh is not None:
-        from repro.runtime.mesh import time_mesh_step
+    registry = obs.CounterRegistry() if (metrics or trace) else None
+    collector = obs.TraceCollector() if trace else None
+    reg_ctx = obs.use_registry(registry) if registry is not None else nullcontext()
+    col_ctx = obs.use_collector(collector) if collector is not None else nullcontext()
+    with reg_ctx, col_ctx:
+        graph = paper_cnn_graph(batch=batch, img=img, lr=lr, momentum=momentum)
+        program = lower_training_step(graph, n_clusters=n_clusters)
+        print(f"ntx train-step program: {len(program.blocks)} blocks, "
+              f"{program.n_commands} commands, "
+              f"peak TCDM {program.meta['peak_tcdm_bytes']} / "
+              f"{program.meta['tcdm_budget_bytes']} B "
+              f"({len(program.meta['spilled'])} spilled)")
+        sharded = None
+        if mesh is not None:
+            from repro.runtime.mesh import time_mesh_step
 
-        sharded = shard_training_step(graph, mesh_shape=mesh,
-                                      n_clusters=n_clusters, program=program)
-        program = sharded.program
-        n_dev = jax.device_count()
-        how = ("shard_map data-parallel" if n_dev >= sharded.n_hmcs
-               else f"single-device walk ({n_dev} jax device(s) "
-                    f"< {sharded.n_hmcs} HMCs)")
-        print(f"mesh {sharded.mesh_shape[0]}x{sharded.mesh_shape[1]}: "
-              f"{sharded.n_hmcs} HMCs x {sharded.shard_batch} images, "
-              f"{len(program.blocks)} blocks incl. allreduce epilogue; "
-              f"executing via {how}")
-        tm = time_mesh_step(sharded, n_clusters=n_clusters)
-        print(f"modeled mesh step: shard {tm.t_shard*1e3:.3f} ms + "
-              f"update {tm.t_update*1e3:.3f} ms "
-              f"-> speedup {tm.speedup:.2f}, "
-              f"parallel eff {tm.parallel_eff:.1%}")
-    batch_fn = frequency_band_batches(np.random.RandomState(0), batch, img,
-                                      graph.loss.classes)
-    res = train_graph(graph, steps, batch_fn, program=program,
-                      backend="pallas", interpret=interpret,
-                      params=graph.init_params(seed=0))
+            sharded = shard_training_step(graph, mesh_shape=mesh,
+                                          n_clusters=n_clusters,
+                                          program=program)
+            program = sharded.program
+            n_dev = jax.device_count()
+            how = ("shard_map data-parallel" if n_dev >= sharded.n_hmcs
+                   else f"single-device walk ({n_dev} jax device(s) "
+                        f"< {sharded.n_hmcs} HMCs)")
+            print(f"mesh {sharded.mesh_shape[0]}x{sharded.mesh_shape[1]}: "
+                  f"{sharded.n_hmcs} HMCs x {sharded.shard_batch} images, "
+                  f"{len(program.blocks)} blocks incl. allreduce epilogue; "
+                  f"executing via {how}")
+            tm = time_mesh_step(sharded, n_clusters=n_clusters)
+            print(f"modeled mesh step: shard {tm.t_shard*1e3:.3f} ms + "
+                  f"update {tm.t_update*1e3:.3f} ms "
+                  f"-> speedup {tm.speedup:.2f}, "
+                  f"parallel eff {tm.parallel_eff:.1%}")
+        batch_fn = frequency_band_batches(np.random.RandomState(0), batch, img,
+                                          graph.loss.classes)
+        res = train_graph(graph, steps, batch_fn, program=program,
+                          backend="pallas", interpret=interpret,
+                          params=graph.init_params(seed=0),
+                          metrics_path=metrics)
+        if collector is not None:
+            if sharded is not None:
+                collector.add_mesh_step(sharded, n_clusters=n_clusters)
+            else:
+                from repro.lower.executors import run_timing
+
+                # The lane-rendering timing run must not double-book the
+                # training run's counters.
+                with obs.use_registry(None):
+                    result = run_timing(program, n_clusters=n_clusters)
+                collector.add_cluster_lanes(
+                    program, result, n_clusters, pid="hmc0"
+                )
+                exec_evs = [e for e in collector.events
+                            if e.get("cat") == "exec"]
+                collector.link_flows(exec_evs, [])
+            print(f"merged Perfetto trace: {collector.save(trace)} "
+                  f"({len(collector.events)} events) — open in "
+                  "https://ui.perfetto.dev")
     losses = res["losses"]
     for i, (loss, w) in enumerate(zip(losses, res["walls"])):
         print(f"step {i:5d} loss={loss:.4f} ({w*1e3:.0f} ms)", flush=True)
+    if metrics:
+        print(f"per-step metrics JSONL: {metrics}")
+    if registry is not None:
+        print(obs.format_hotspots(registry))
     print(f"done: {steps} ntx steps, loss {losses[0]:.4f} -> {losses[-1]:.4f}")
     return res
 
@@ -436,11 +478,18 @@ def _cli():
                          "the measured step time at the end")
     ap.add_argument("--offload-clusters", type=int, default=16)
     ap.add_argument("--queue-depth", type=int, default=4)
+    ap.add_argument("--metrics", default=None, metavar="OUT.jsonl",
+                    help="stream per-step metrics (loss/wall/counter totals) "
+                         "as JSON lines to this path (both backends)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="ntx backend: write the merged Perfetto trace "
+                         "(cluster exec/DMA + mesh link + host lanes) here")
     args = ap.parse_args()
 
     if args.backend == "ntx":
         res = run_ntx_cnn(args.steps, args.batch, args.img,
-                          n_clusters=args.offload_clusters, mesh=args.mesh)
+                          n_clusters=args.offload_clusters, mesh=args.mesh,
+                          metrics=args.metrics, trace=args.trace)
         if len(res["losses"]) >= 3 and not res["losses"][-1] < res["losses"][0]:
             raise SystemExit("ntx CNN training did not decrease the loss")
         return
@@ -504,10 +553,18 @@ def _cli():
             print(f"step {step:5d} ce={float(metrics['ce']):.4f} "
                   f"({time.time() - t0:.0f}s)", flush=True)
 
+    registry = None
+    if args.metrics:
+        from repro.obs import CounterRegistry
+
+        registry = CounterRegistry()
     sup = Supervisor(make_step, init_state, iterator, args.ckpt_dir,
-                     ckpt_every=args.ckpt_every, injector=injector)
+                     ckpt_every=args.ckpt_every, injector=injector,
+                     registry=registry, metrics_path=args.metrics)
     report = sup.run(args.steps, metrics_cb=cb)
     print(f"done: {report.steps_run} steps, {report.restarts} restarts")
+    if args.metrics:
+        print(f"per-step metrics JSONL: {args.metrics}")
     if offload is not None and report.steps_run:
         measured = (time.time() - t0) / report.steps_run
         print(f"offload model: {offload['step_time_s']*1e3:.2f} ms/step modeled "

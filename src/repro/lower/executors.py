@@ -29,6 +29,8 @@ from dataclasses import dataclass
 
 from repro.core.ntx import ntx_execute
 from repro.lower.ir import NtxProgram
+from repro.obs import counters as obs
+from repro.obs import trace as obs_trace
 from repro.lower.rules import (
     BiasSpec,
     Conv2dSpec,
@@ -84,6 +86,7 @@ def run_reference(
         mem[r.base : r.end] = a.ravel()
     for cmd in program.commands():
         ntx_execute(cmd, mem, wide=wide, vectorize=vectorize, inplace=True)
+    obs.record_program(obs.get_active(), program)
     return {
         r.name: mem[r.base : r.end].reshape(r.shape).copy()
         for r in program.regions_of_kind("output")
@@ -121,7 +124,12 @@ def run_timing(
     sched = rt_sched.MultiClusterScheduler(
         n_clusters=n_clusters, cluster=cluster, f_ntx=f_ntx
     )
-    return sched.schedule_program(program, engine=engine, exec_cycles=exec_cycles)
+    result = sched.schedule_program(program, engine=engine, exec_cycles=exec_cycles)
+    reg = obs.get_active()
+    if reg is not None:
+        obs.record_program(reg, program)
+        obs.record_schedule(reg, result)
+    return result
 
 
 # ---------------------------------------------------------------------------
@@ -351,6 +359,51 @@ class PlanCache:
 PLAN_CACHE = PlanCache()
 
 
+def _cache_stats(cache: PlanCache) -> tuple[int, int, int, int]:
+    """(hits, misses, traces, calls) — the plan-cache counter snapshot."""
+    traces = sum(p.traces for p in cache._plans.values())
+    calls = sum(p.calls for p in cache._plans.values())
+    return cache.hits, cache.misses, traces, calls
+
+
+def _record_cache_delta(reg, cache: PlanCache, before) -> None:
+    """Book what the cache did during one executor call under plan_cache/."""
+    if reg is None or not reg.enabled:
+        return
+    h, m, t, c = _cache_stats(cache)
+    h0, m0, t0, c0 = before
+    with reg.scope("plan_cache"):
+        reg.inc("hits", h - h0)
+        reg.inc("misses", m - m0)
+        reg.inc("retraces", t - t0)
+        reg.inc("calls", c - c0)
+
+
+def _dispatch_plan(cache: PlanCache, design: str, interpret: bool):
+    """The graph walkers' (spec, pass) -> plan closure, trace-span aware.
+
+    With a :class:`repro.obs.trace.TraceCollector` active, every plan
+    invocation is wrapped in a host-side dispatch span (the wall time jax
+    spends entering the jitted executable — Pallas dispatch overhead).
+    """
+    col = obs_trace.get_active_trace()
+
+    def plan(spec, pass_):
+        p = cache.get(spec, pass_, design, interpret)
+        if col is None:
+            return p
+
+        name = f"{type(spec).__name__}:{pass_}"
+
+        def timed(j):
+            with col.host_span(name, tid="dispatch", cat="dispatch"):
+                return p(j)
+
+        return timed
+
+    return plan
+
+
 def _resolve_interpret(interpret):
     if interpret is not None:
         return bool(interpret)
@@ -380,15 +433,26 @@ def run_pallas(
     interpret = _resolve_interpret(interpret)
     if cache is None:
         cache = PLAN_CACHE
+    reg = obs.get_active()
+    before = _cache_stats(cache) if reg is not None else None
     if program.meta.get("pass") == "train_step":
         if "mesh" in program.meta:
-            return _run_pallas_graph_mesh(program, inputs, interpret, cache)
-        return _run_pallas_graph(program, inputs, interpret, cache)
-    spec = program.meta.get("spec")
-    pass_ = program.meta.get("pass", "fwd")
-    plan = cache.get(spec, pass_, program.design.name, interpret)
-    j = {k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()}
-    return plan(j)
+            out = _run_pallas_graph_mesh(program, inputs, interpret, cache)
+        else:
+            out = _run_pallas_graph(program, inputs, interpret, cache)
+    else:
+        spec = program.meta.get("spec")
+        pass_ = program.meta.get("pass", "fwd")
+        plan = _dispatch_plan(cache, program.design.name, interpret)(spec, pass_)
+        j = {k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()}
+        out = plan(j)
+    if reg is not None:
+        # The counters are the *program's* closed-form offload/DMA
+        # arithmetic — what the NTX cube would execute for this step — not
+        # a measurement of the jax backend that computed the numerics.
+        obs.record_program(reg, program)
+        _record_cache_delta(reg, cache, before)
+    return out
 
 
 def _run_pallas_graph(program, inputs, interpret: bool, cache):
@@ -405,13 +469,9 @@ def _run_pallas_graph(program, inputs, interpret: bool, cache):
     import jax.numpy as jnp
 
     graph = program.meta["graph"]
-    design = program.design.name
     keep_grads = program.meta.get("keep_grads", True)
     j = {k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()}
-
-    def plan(spec, pass_):
-        return cache.get(spec, pass_, design, interpret)
-
+    plan = _dispatch_plan(cache, program.design.name, interpret)
     return _graph_step_local(graph, j, plan, graph.batch,
                              keep_grads=keep_grads)
 
@@ -533,12 +593,9 @@ def _run_pallas_graph_mesh(program, inputs, interpret: bool, cache):
     rows, cols = mesh_meta["shape"]
     n = mesh_meta["n_hmcs"]
     B = graph.batch
-    design = program.design.name
     keep_grads = program.meta.get("keep_grads", True)
     j = {k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()}
-
-    def plan(spec, pass_):
-        return cache.get(spec, pass_, design, interpret)
+    plan = _dispatch_plan(cache, program.design.name, interpret)
 
     if jax.device_count() < n:
         return _graph_step_local(graph, j, plan, B, keep_grads=keep_grads)

@@ -39,6 +39,8 @@ import numpy as np
 
 from repro.core.ntx import Agu, NtxCommand
 from repro.lower import rules
+from repro.obs import counters as obs_counters
+from repro.obs import trace as obs_trace
 from repro.lower.ir import (
     ELEM_BYTES,
     LIVE_END,
@@ -712,6 +714,7 @@ def _assemble(
     spilled = set(alloc.spilled)
 
     # emit, inserting spill/fill DMA blocks around spilled regions' lives
+    col = obs_trace.get_active_trace()
     blocks: list[CommandBlock] = []
     filled: set[str] = set()
     spilled_out: set[str] = set()
@@ -730,7 +733,12 @@ def _assemble(
                 spilled_out.add(root)
         blocks.extend(pre)
         if step.emit is not None:
-            blocks.extend(step.emit(regions))
+            if col is not None:
+                with col.host_span(f"lower:{step.key}", tid="lowering",
+                                   cat="lowering"):
+                    blocks.extend(step.emit(regions))
+            else:
+                blocks.extend(step.emit(regions))
         blocks.extend(post)
 
     prog = NtxProgram(
@@ -831,6 +839,8 @@ def train_graph(
     params: dict[str, np.ndarray] | None = None,
     cache=None,
     program: NtxProgram | None = None,
+    registry=None,
+    metrics_path=None,
 ) -> dict[str, Any]:
     """Train ``graph`` for ``steps`` through one compiled NtxProgram.
 
@@ -839,10 +849,18 @@ def train_graph(
     ``"reference"`` (the numpy command interpreter). Every step runs the
     SAME program — parameters round-trip through the ``*_new`` outputs.
     The result carries per-step wall-clock seconds in ``"walls"``.
+
+    ``registry`` (a :class:`repro.obs.CounterRegistry`) is installed for
+    the loop; each step records under a ``step{i}`` scope, so per-step
+    totals equal the program's closed-form counts. ``metrics_path`` streams
+    one JSONL record per step (loss, wall seconds, the step's counter
+    totals).
     """
     import time as _time
+    from contextlib import nullcontext
 
     from repro.lower import executors
+    from repro.obs import report as obs_report
 
     if program is None:
         program = lower_training_step(graph, design=design, n_clusters=n_clusters)
@@ -852,26 +870,49 @@ def train_graph(
     eye = np.eye(graph.loss.classes, dtype=np.float32)
     losses: list[float] = []
     walls: list[float] = []
-    for i in range(steps):
-        t0 = _time.perf_counter()
-        x, labels = batch_fn(i)
-        inputs = {graph.input_edge: np.asarray(x, np.float32),
-                  graph.label_edge: eye[np.asarray(labels)], **params}
-        if backend == "reference":
-            outs = executors.run_reference(program, inputs)
-        elif backend == "pallas":
-            outs = executors.run_pallas(
-                program, inputs, interpret=interpret, cache=cache
-            )
-        else:
-            raise ValueError(f"unknown backend {backend!r}")
-        losses.append(
-            softmax_xent_loss(np.asarray(outs[graph.logits_edge]), labels)
-        )
-        for p in graph.param_shapes():
-            params[p] = np.asarray(outs[f"{p}_new"], np.float32)
-            if graph.momentum:
-                params[f"v_{p}"] = np.asarray(outs[f"v_{p}_new"], np.float32)
-        walls.append(_time.perf_counter() - t0)
+    reg = registry if registry is not None else obs_counters.get_active()
+    writer = obs_report.MetricsWriter(metrics_path) if metrics_path else None
+    install = (
+        obs_counters.use_registry(registry)
+        if registry is not None
+        else nullcontext()
+    )
+    try:
+        with install:
+            for i in range(steps):
+                t0 = _time.perf_counter()
+                x, labels = batch_fn(i)
+                inputs = {graph.input_edge: np.asarray(x, np.float32),
+                          graph.label_edge: eye[np.asarray(labels)], **params}
+                step_scope = (
+                    reg.scope(f"step{i}") if reg is not None else nullcontext()
+                )
+                with step_scope:
+                    if backend == "reference":
+                        outs = executors.run_reference(program, inputs)
+                    elif backend == "pallas":
+                        outs = executors.run_pallas(
+                            program, inputs, interpret=interpret, cache=cache
+                        )
+                    else:
+                        raise ValueError(f"unknown backend {backend!r}")
+                losses.append(
+                    softmax_xent_loss(np.asarray(outs[graph.logits_edge]), labels)
+                )
+                for p in graph.param_shapes():
+                    params[p] = np.asarray(outs[f"{p}_new"], np.float32)
+                    if graph.momentum:
+                        params[f"v_{p}"] = np.asarray(outs[f"v_{p}_new"], np.float32)
+                walls.append(_time.perf_counter() - t0)
+                if writer is not None:
+                    writer.write({
+                        "step": i,
+                        "loss": losses[-1],
+                        "wall_s": walls[-1],
+                        "counters": reg.totals(f"step{i}/") if reg is not None else {},
+                    })
+    finally:
+        if writer is not None:
+            writer.close()
     return {"program": program, "params": params, "losses": losses,
-            "walls": walls}
+            "walls": walls, "registry": reg}

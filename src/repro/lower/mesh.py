@@ -373,10 +373,20 @@ def shard_training_step(
             },
         },
     )
-    return ShardedTrainStep(
+    sharded = ShardedTrainStep(
         graph=graph,
         mesh_shape=(rows, cols),
         program=combined,
         base_program=program,
         hmc_of_block=hmc_of,
     )
+    from repro.obs import counters as obs
+
+    reg = obs.get_active()
+    if reg is not None:
+        with reg.scope("shard"):
+            reg.inc("programs", 1)
+            reg.inc("hmcs", n)
+            reg.inc("epilogue_blocks", len(sharded.epilogue_blocks()))
+            reg.inc("allreduce_bytes", sharded.allreduce_bytes)
+    return sharded

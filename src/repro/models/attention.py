@@ -121,8 +121,12 @@ def decode_attention_block(
     q, k, v = _project_qkv(x, params, cfg, positions=pos[None])
     cache_len = cache["k"].shape[2]
     slot = pos % cache_len if window is not None else pos
-    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
-    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
+    new_k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=2
+    )
+    new_v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=2
+    )
 
     if window is not None:
         # Ring buffer: positions of slot j = pos - ((pos - j) mod cache_len).

@@ -191,7 +191,8 @@ def _layer_act_traffic(cfg: ModelConfig, tokens_loc: float, tp: int,
     (qkv out, attn out, 2 ffn hidden (sharded /tp), ffn out, residual).
     """
     d = cfg.d_model
-    per_layer = tokens_loc * dtype_bytes * (4 * d + 2 * max(cfg.d_ff, cfg.moe_d_ff * cfg.top_k) / tp)
+    widest_ff = max(cfg.d_ff, cfg.moe_d_ff * cfg.top_k)
+    per_layer = tokens_loc * dtype_bytes * (4 * d + 2 * widest_ff / tp)
     return cfg.n_layers * per_layer
 
 

@@ -1,0 +1,61 @@
+"""Unified NTX telemetry: hierarchical counters, merged traces, reports.
+
+Three small modules, one activation idiom:
+
+  * :mod:`repro.obs.counters` — a hierarchical :class:`CounterRegistry`
+    (scoped like ``step0/c1/fwd``) that the executors, the mesh timer, the
+    plan cache and the supervisor all record into when one is active.
+    Totals are cross-checked against the closed-form
+    :class:`repro.lower.ir.NtxProgram` counts — the counters *are* the
+    program's arithmetic, not a parallel estimate.
+  * :mod:`repro.obs.trace` — merges cluster exec/DMA lanes, mesh-link
+    occupancy lanes and host-side lowering/dispatch spans into one
+    Perfetto-loadable chrome trace with flow events tying a command block's
+    lowering to its shard execution and its link transfers.
+  * :mod:`repro.obs.report` — per-step JSONL metrics emitter, top-k hotspot
+    tables, and the one shared BENCH_*.json writer (``schema_version``).
+
+Instrumentation is zero-overhead when disabled: every record site starts
+with a module-global ``get_active()`` read that returns ``None`` unless a
+registry/collector was installed via ``use_registry``/``use_collector``.
+"""
+
+from repro.obs.counters import (
+    CounterRegistry,
+    get_active,
+    record_link_schedule,
+    record_program,
+    record_schedule,
+    program_totals,
+    use_registry,
+)
+from repro.obs.report import (
+    SCHEMA_VERSION,
+    MetricsWriter,
+    format_hotspots,
+    hotspots,
+    read_jsonl,
+    write_bench_json,
+    write_offload_bench,
+)
+from repro.obs.trace import TraceCollector, get_active_trace, use_collector
+
+__all__ = [
+    "CounterRegistry",
+    "get_active",
+    "record_link_schedule",
+    "record_program",
+    "record_schedule",
+    "program_totals",
+    "use_registry",
+    "SCHEMA_VERSION",
+    "MetricsWriter",
+    "format_hotspots",
+    "hotspots",
+    "read_jsonl",
+    "write_bench_json",
+    "write_offload_bench",
+    "TraceCollector",
+    "get_active_trace",
+    "use_collector",
+]

@@ -1,0 +1,162 @@
+"""Metrics reporting: per-step JSONL, hotspot tables, BENCH json writer.
+
+Three consumers share this module:
+
+  * ``launch/train.py --metrics out.jsonl`` and the training
+    :class:`~repro.runtime.supervisor.Supervisor` stream one JSON object
+    per training step through :class:`MetricsWriter` — schema:
+    ``{"schema_version": 1, "step": int, "wall_s": float, "loss": float?,
+    "metrics": {...}?, "counters": {leaf: total}}`` where ``counters`` are
+    the step's :class:`~repro.obs.counters.CounterRegistry` leaf totals
+    (offloads, commands, dma_bytes, busy_cycles, macs, ...).
+  * :func:`format_hotspots` renders the registry's top-k scopes by cycles,
+    DMA bytes and link bytes — the CLI prints it after a run.
+  * :func:`write_bench_json` is the ONE writer every ``BENCH_*.json``
+    artifact goes through (``benchmarks/run.py``, ``offload_bench.py``,
+    ``mesh_bench.py``, ``trainstep_bench.py``), stamping the shared
+    ``schema_version`` that ``check_regression.py`` validates.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+#: Version stamp shared by every BENCH_*.json and metrics JSONL record.
+SCHEMA_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# Per-step JSONL metrics
+# ---------------------------------------------------------------------------
+
+
+def _jsonable(v):
+    """Best-effort scalar coercion (jax/numpy arrays -> float)."""
+    if isinstance(v, (int, float, str, bool)) or v is None:
+        return v
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return str(v)
+
+
+class MetricsWriter:
+    """Append-only JSONL emitter; one flushed line per record."""
+
+    def __init__(self, path, append: bool = False):
+        self.path = str(path)
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(self.path, "a" if append else "w")
+
+    def write(self, record: dict) -> None:
+        rec = {"schema_version": SCHEMA_VERSION}
+        for k, v in record.items():
+            if isinstance(v, dict):
+                rec[k] = {kk: _jsonable(vv) for kk, vv in v.items()}
+            else:
+                rec[k] = _jsonable(v)
+        self._f.write(json.dumps(rec) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def read_jsonl(path) -> list[dict]:
+    """Load a metrics JSONL back into a list of records."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Hotspot tables
+# ---------------------------------------------------------------------------
+
+
+def hotspots(reg, leaf: str, k: int = 5, prefix: str = "") -> list[tuple[str, float]]:
+    """Top-``k`` (scope, value) pairs for one counter leaf, descending."""
+    want = f"/{leaf}"
+    rows = []
+    for key, v in reg.counters().items():
+        if prefix and not key.startswith(prefix):
+            continue
+        if key == leaf:
+            rows.append(("<root>", v))
+        elif key.endswith(want):
+            rows.append((key[: -len(want)], v))
+    rows.sort(key=lambda r: -r[1])
+    return rows[:k]
+
+
+def _fmt(v: float) -> str:
+    for unit, div in (("G", 1e9), ("M", 1e6), ("K", 1e3)):
+        if abs(v) >= div:
+            return f"{v / div:.2f}{unit}"
+    return f"{v:.0f}" if v == int(v) else f"{v:.3f}"
+
+
+def format_hotspots(reg, k: int = 5) -> str:
+    """Human-readable top-k table by cycles, DMA bytes and link bytes."""
+    sections = (
+        ("busy_cycles", "by cycles"),
+        ("dma_bytes", "by DMA bytes"),
+        ("link_bytes", "by link bytes"),
+    )
+    lines = [f"top-{k} hotspots"]
+    for leaf, title in sections:
+        rows = hotspots(reg, leaf, k)
+        if not rows:
+            continue
+        lines.append(f"  {title}:")
+        width = max(len(s) for s, _ in rows)
+        for scope, v in rows:
+            lines.append(f"    {scope:<{width}}  {_fmt(v):>10}")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# The one BENCH_*.json writer
+# ---------------------------------------------------------------------------
+
+
+def write_bench_json(payload: dict, path) -> str:
+    """Write a BENCH artifact with the shared ``schema_version`` stamp.
+
+    Every benchmark JSON goes through here so ``check_regression.py`` can
+    rely on one envelope; ``payload`` is written as-is apart from the
+    version field (an existing ``schema_version`` is overwritten).
+    """
+    doc = {"schema_version": SCHEMA_VERSION, **payload}
+    doc["schema_version"] = SCHEMA_VERSION
+    d = os.path.dirname(str(path))
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, default=_jsonable)
+    return str(path)
+
+
+def write_offload_bench(results: dict, path="artifacts/BENCH_offload.json") -> str:
+    """The BENCH_offload envelope: benchmarks + the one wall-time summary.
+
+    Both ``benchmarks/run.py`` and ``benchmarks/offload_bench.py`` route
+    through this — ``total_wall_s`` is computed here, in exactly one place.
+    """
+    total = sum(r.get("wall_s", 0.0) for r in results.values())
+    return write_bench_json(
+        {"benchmarks": results, "total_wall_s": total}, path
+    )

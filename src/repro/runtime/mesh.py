@@ -371,6 +371,9 @@ def time_mesh_step(
     if sharded.n_hmcs > 1:
         upd = net.systolic_update(sharded.allreduce_bytes)
         t_update, congestion = upd.makespan, upd.congestion_time
+        from repro.obs import counters as obs
+
+        obs.record_link_schedule(obs.get_active(), upd)
     else:
         t_update, congestion = 0.0, 0.0
     return MeshStepTiming(

@@ -100,6 +100,8 @@ class Supervisor:
         straggler_policy: StragglerPolicy | None = None,
         meshes=None,  # fallback meshes for elastic re-mesh (largest first)
         state_shardings_fn=None,  # (state_template, mesh) -> shardings tree
+        registry=None,  # repro.obs.CounterRegistry (checkpointed with state)
+        metrics_path=None,  # per-step metrics JSONL (repro.obs.report schema)
     ):
         self.make_step = make_step
         self.init_state = init_state
@@ -112,6 +114,8 @@ class Supervisor:
         self.state_shardings_fn = state_shardings_fn
         self.checkpointer = ckpt.AsyncCheckpointer(ckpt_dir)
         self.report = SupervisorReport()
+        self.registry = registry
+        self.metrics_path = metrics_path
 
     def _restore_or_init(self, mesh):
         state = self.init_state(mesh)
@@ -123,9 +127,41 @@ class Supervisor:
         )
         state, extras = ckpt.restore(self.ckpt_dir, state, shardings=shardings)
         self.iterator.load_state_dict(extras["iterator"])
+        if self.registry is not None:
+            # Counters ride the checkpoint like the model state: a crash
+            # rolls them back to the restored step, so totals stay exact
+            # over any number of failure/restore cycles (no double counts
+            # from replayed steps). Lifecycle events (restarts, stragglers)
+            # are not replayed — their live values survive the rollback.
+            reg = self.registry
+            live = reg.counters()
+            reg.restore(extras.get("counters", {}))
+            for k in ("supervisor/restarts", "supervisor/stragglers"):
+                if live.get(k, 0) > reg.get(k):
+                    reg.inc(k, live.get(k, 0) - reg.get(k))
         return state, int(extras["step"])
 
     def run(self, total_steps: int, metrics_cb=None) -> SupervisorReport:
+        from contextlib import nullcontext
+
+        from repro.obs import counters as obs
+        from repro.obs import report as obs_report
+
+        reg = self.registry
+        writer = (
+            obs_report.MetricsWriter(self.metrics_path)
+            if self.metrics_path
+            else None
+        )
+        install = obs.use_registry(reg) if reg is not None else nullcontext()
+        with install:
+            try:
+                return self._run(total_steps, metrics_cb, reg, writer)
+            finally:
+                if writer is not None:
+                    writer.close()
+
+    def _run(self, total_steps, metrics_cb, reg, writer) -> SupervisorReport:
         mesh_idx = 0
         while True:
             mesh = self.meshes[mesh_idx]
@@ -140,6 +176,8 @@ class Supervisor:
                         # Straggler != failure: the drop-and-rescale policy
                         # proceeds with the step (over responsive workers).
                         self.report.straggler_events += 1
+                        if reg is not None:
+                            reg.inc("supervisor/stragglers")
                         self.report.log.append(
                             f"straggler: {e} — continuing (drop-and-rescale)"
                         )
@@ -149,23 +187,33 @@ class Supervisor:
                     self.straggler.observe(dt)
                     if dt > self.straggler.deadline():
                         self.report.straggler_events += 1
+                        if reg is not None:
+                            reg.inc("supervisor/stragglers")
                         self.report.log.append(
                             f"step {step}: exceeded deadline ({dt:.2f}s) — "
                             "drop-and-rescale policy would engage"
                         )
                     step += 1
                     self.report.steps_run += 1
+                    if reg is not None:
+                        reg.inc("supervisor/steps")
+                    if writer is not None:
+                        writer.write({
+                            "step": step,
+                            "wall_s": dt,
+                            "metrics": dict(metrics),
+                            "counters": reg.totals() if reg is not None else {},
+                        })
                     if metrics_cb:
                         metrics_cb(step, metrics)
                     if step % self.ckpt_every == 0 or step == total_steps:
-                        self.checkpointer.save(
-                            step,
-                            state,
-                            extras={
-                                "step": step,
-                                "iterator": self.iterator.state_dict(),
-                            },
-                        )
+                        extras = {
+                            "step": step,
+                            "iterator": self.iterator.state_dict(),
+                        }
+                        if reg is not None:
+                            extras["counters"] = reg.snapshot()
+                        self.checkpointer.save(step, state, extras=extras)
                 self.checkpointer.wait()
                 return self.report
             except SimulatedStraggler as e:
@@ -174,6 +222,8 @@ class Supervisor:
                 continue
             except SimulatedFailure as e:
                 self.report.restarts += 1
+                if reg is not None:
+                    reg.inc("supervisor/restarts")
                 self.report.log.append(f"crash: {e} — restoring latest checkpoint")
                 self.checkpointer.wait()
                 # Elastic policy: after a crash, optionally fail over to the

@@ -1,0 +1,320 @@
+"""The unified telemetry layer: counters, merged traces, reports.
+
+The load-bearing property is the tentpole's acceptance criterion: counter
+totals recorded by the executors must equal the program's *closed-form*
+counts (``NtxProgram.n_offloads`` / ``n_commands`` / ``dma_bytes``)
+exactly — the counters are the program's own arithmetic, not a parallel
+estimate. On top of that: registry mechanics (scoping, snapshot/restore,
+merge, zero-overhead-off), the per-step JSONL schema, the plan-cache and
+mesh-link instrumentation, the merged Perfetto trace's lanes and flow
+events, and the shared BENCH ``schema_version`` envelope.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.lower import (
+    lower_training_step,
+    paper_cnn_graph,
+    run_reference,
+    run_timing,
+    shard_training_step,
+    train_graph,
+)
+from repro.obs.counters import block_scope, program_totals
+
+jax = pytest.importorskip("jax")
+
+from repro.lower import executors  # noqa: E402
+from repro.lower.executors import PlanCache, run_pallas  # noqa: E402
+
+
+def _graph_and_inputs(batch=2, img=8, seed=0):
+    graph = paper_cnn_graph(batch=batch, img=img, lr=0.05, momentum=0.9)
+    prog = lower_training_step(graph, n_clusters=4)
+    rng = np.random.RandomState(seed)
+    x = rng.randn(batch, img, img, 3).astype(np.float32)
+    labels = rng.randint(0, graph.loss.classes, batch)
+    onehot = np.eye(graph.loss.classes, dtype=np.float32)[labels]
+    inputs = {graph.input_edge: x, graph.label_edge: onehot,
+              **graph.init_params(seed=1)}
+    return graph, prog, inputs
+
+
+# ---------------------------------------------------------------------------
+# Registry mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_registry_scoping_and_totals():
+    reg = obs.CounterRegistry()
+    with reg.scope("step0"):
+        with reg.scope("c1", "fwd"):
+            reg.inc("offloads", 3)
+            reg.inc("dma_bytes", 100)
+        with reg.scope("c2", "fwd"):
+            reg.inc("offloads", 2)
+    reg.inc("offloads")  # root scope
+    assert reg.get("step0/c1/fwd/offloads") == 3
+    assert reg.get("step0/c2/fwd/offloads") == 2
+    assert reg.total("offloads") == 6
+    assert reg.total("offloads", prefix="step0/") == 5
+    assert reg.totals("step0/") == {"offloads": 5, "dma_bytes": 100}
+    assert reg.tree()["step0"]["c1"]["fwd"]["offloads"] == 3
+
+
+def test_registry_prefixes_do_not_collide():
+    # step1 must not swallow step10 (the trailing-separator contract).
+    reg = obs.CounterRegistry()
+    with reg.scope("step1"):
+        reg.inc("offloads", 1)
+    with reg.scope("step10"):
+        reg.inc("offloads", 100)
+    assert reg.total("offloads", prefix="step1/") == 1
+
+
+def test_registry_disabled_records_nothing():
+    reg = obs.CounterRegistry(enabled=False)
+    with reg.scope("a"):
+        reg.inc("x", 5)
+    assert len(reg) == 0
+    obs.record_program(reg, object())  # must not even touch the program
+
+
+def test_registry_empty_is_still_truthy():
+    # `if reg:` at an instrument site must mean "telemetry on", never
+    # "has already counted something".
+    assert bool(obs.CounterRegistry())
+    assert len(obs.CounterRegistry()) == 0
+
+
+def test_use_registry_installs_and_restores():
+    assert obs.get_active() is None
+    reg = obs.CounterRegistry()
+    with obs.use_registry(reg):
+        assert obs.get_active() is reg
+    assert obs.get_active() is None
+
+
+def test_snapshot_restore_merge_roundtrip():
+    reg = obs.CounterRegistry()
+    reg.inc("a/x", 2)
+    reg.inc("y", 1.5)
+    snap = reg.snapshot()
+    assert json.loads(json.dumps(snap)) == snap  # checkpoint-extras safe
+    reg.inc("a/x", 10)
+    reg.restore(snap)
+    assert reg.get("a/x") == 2
+    other = obs.CounterRegistry()
+    other.inc("a/x", 3)
+    reg.merge(other)
+    assert reg.get("a/x") == 5
+    reg.merge(snap)
+    assert reg.get("y") == 3.0
+
+
+def test_block_scope_mapping():
+    assert block_scope("c1:fwd:conv") == ("c1", "fwd")
+    assert block_scope("fc:dw:matmul") == ("fc", "dw")
+    assert block_scope("spill:act1") == ("tcdm", "spill")
+    assert block_scope("fill:act1") == ("tcdm", "fill")
+    assert block_scope("allreduce:update:fc:upd[0]") == ("mesh", "allreduce")
+    assert block_scope("allgather:w_c1[1]") == ("mesh", "allgather")
+    assert block_scope("") == ("untagged",)
+
+
+# ---------------------------------------------------------------------------
+# Executor counters == closed-form program counts (the acceptance check)
+# ---------------------------------------------------------------------------
+
+
+def test_run_reference_counters_match_closed_form():
+    graph, prog, inputs = _graph_and_inputs()
+    reg = obs.CounterRegistry()
+    with obs.use_registry(reg):
+        run_reference(prog, inputs)
+    want = program_totals(prog)
+    got = reg.totals()
+    for leaf, v in want.items():
+        assert got.get(leaf, 0) == v, leaf
+    assert got["macs"] > 0
+    assert want["offloads"] == prog.n_offloads
+    assert want["dma_bytes"] == prog.dma_bytes
+
+
+def test_run_timing_records_program_and_schedule():
+    _, prog, _ = _graph_and_inputs()
+    reg = obs.CounterRegistry()
+    with obs.use_registry(reg):
+        result = run_timing(prog, n_clusters=4)
+    assert reg.total("commands") == prog.n_commands
+    assert reg.get("timing/scheduled_programs") == 1
+    assert reg.get("timing/total_cycles") == result.total_cycles
+    assert reg.get("timing/exec_cycles") == result.exec_cycles
+    assert reg.get("timing/exec_cycles") > 0
+
+
+def test_run_pallas_counters_and_plan_cache():
+    graph, prog, inputs = _graph_and_inputs()
+    cache = PlanCache()
+    reg = obs.CounterRegistry()
+    with obs.use_registry(reg):
+        with reg.scope("cold"):
+            run_pallas(prog, inputs, cache=cache)
+        with reg.scope("warm"):
+            run_pallas(prog, inputs, cache=cache)
+    for pfx in ("cold/", "warm/"):
+        assert reg.total("commands", prefix=pfx) == prog.n_commands
+        assert reg.total("offloads", prefix=pfx) == prog.n_offloads
+    assert reg.get("cold/plan_cache/misses") > 0
+    assert reg.get("warm/plan_cache/misses", 0) == 0
+    assert reg.get("warm/plan_cache/hits") > 0
+    assert reg.get("warm/plan_cache/retraces", 0) == 0
+
+
+def test_zero_overhead_when_disabled_records_nothing_globally():
+    graph, prog, inputs = _graph_and_inputs()
+    assert obs.get_active() is None
+    run_reference(prog, inputs)  # no registry installed: must not blow up
+
+
+def test_train_graph_jsonl_matches_closed_form(tmp_path):
+    graph, prog, _ = _graph_and_inputs(batch=2, img=8)
+    rng = np.random.RandomState(0)
+    eyec = np.eye(graph.loss.classes, dtype=np.float32)
+    x = rng.randn(2, 8, 8, 3).astype(np.float32)
+    labels = rng.randint(0, graph.loss.classes, 2)
+    path = tmp_path / "metrics.jsonl"
+    reg = obs.CounterRegistry()
+    res = train_graph(graph, 2, lambda _i: (x, labels), program=prog,
+                      backend="reference", registry=reg,
+                      metrics_path=str(path))
+    assert res["registry"] is reg
+    recs = obs.read_jsonl(path)
+    assert [r["step"] for r in recs] == [0, 1]
+    want = program_totals(prog)
+    for r in recs:
+        assert r["schema_version"] == obs.SCHEMA_VERSION
+        assert r["counters"]["offloads"] == want["offloads"]
+        assert r["counters"]["commands"] == want["commands"]
+        assert r["counters"]["dma_bytes"] == want["dma_bytes"]
+        assert r["wall_s"] > 0 and "loss" in r
+    # per-step scopes sum to steps x closed form
+    assert reg.total("commands") == 2 * prog.n_commands
+
+
+# ---------------------------------------------------------------------------
+# Mesh-link counters
+# ---------------------------------------------------------------------------
+
+
+def test_time_mesh_step_link_counters_match_schedule():
+    from repro.runtime.mesh import MeshInterconnect, time_mesh_step
+
+    graph = paper_cnn_graph(batch=4, img=8)
+    reg = obs.CounterRegistry()
+    with obs.use_registry(reg):
+        sharded = shard_training_step(graph, mesh_shape=(2, 2), n_clusters=4)
+        time_mesh_step(sharded, n_clusters=4)
+    upd = MeshInterconnect(2, 2).systolic_update(sharded.allreduce_bytes)
+    assert reg.total("link_hops") == len(upd.transfers)
+    assert reg.total("link_bytes") == sum(
+        st.transfer.num_bytes for st in upd.transfers
+    )
+    assert reg.get("shard/programs") == 1
+    assert reg.get("shard/hmcs") == 4
+    assert reg.get("shard/allreduce_bytes") == sharded.allreduce_bytes
+
+
+# ---------------------------------------------------------------------------
+# Merged Perfetto trace
+# ---------------------------------------------------------------------------
+
+
+def test_merged_trace_has_all_lanes_and_flows(tmp_path):
+    graph = paper_cnn_graph(batch=4, img=8)
+    col = obs.TraceCollector()
+    with obs.use_collector(col):
+        sharded = shard_training_step(graph, mesh_shape=(2, 2), n_clusters=4)
+        result, upd = col.add_mesh_step(sharded, n_clusters=4)
+    cats = {e.get("cat") for e in col.events}
+    assert {"exec", "dma", "link", "lowering", "flow"} <= cats
+    phs = {e["ph"] for e in col.events}
+    assert {"X", "s", "f"} <= phs  # flow starts + finishes present
+    pids = {e["pid"] for e in col.events}
+    assert {"hmc0", "mesh", "host"} <= pids
+    # exec spans cover every non-elided block exactly once per cluster share
+    path = tmp_path / "trace.json"
+    col.save(path)
+    doc = json.loads(path.read_text())
+    assert doc["traceEvents"] and doc["displayTimeUnit"] == "ns"
+    # every flow id has exactly one start and one finish
+    starts = [e["id"] for e in col.events if e["ph"] == "s"]
+    fins = [e["id"] for e in col.events if e["ph"] == "f"]
+    assert sorted(starts) == sorted(fins)
+
+
+def test_dispatch_spans_recorded_by_pallas_executor():
+    graph, prog, inputs = _graph_and_inputs()
+    col = obs.TraceCollector()
+    with obs.use_collector(col):
+        run_pallas(prog, inputs, cache=PlanCache())
+    cats = {e.get("cat") for e in col.events}
+    assert "dispatch" in cats
+
+
+def test_block_spans_cover_commands():
+    from repro.obs.trace import block_spans
+
+    _, prog, _ = _graph_and_inputs()
+    result = run_timing(prog, n_clusters=4, engine="event")
+    spans = list(block_spans(prog, result, 4))
+    assert sum(n for *_x, n in spans) == prog.n_commands
+    for _c, _tag, e0, e1, _d0, _d1, _n in spans:
+        assert e1 >= e0 >= 0
+
+
+# ---------------------------------------------------------------------------
+# Reports
+# ---------------------------------------------------------------------------
+
+
+def test_hotspot_table_renders_sections():
+    reg = obs.CounterRegistry()
+    with reg.scope("c1", "fwd"):
+        reg.inc("busy_cycles", 5_000_000)
+        reg.inc("dma_bytes", 123)
+    txt = obs.format_hotspots(reg, k=3)
+    assert "by cycles" in txt and "c1/fwd" in txt and "5.00M" in txt
+    assert "by DMA bytes" in txt
+    assert "by link bytes" not in txt  # no link traffic recorded
+
+
+def test_bench_json_writer_stamps_schema_version(tmp_path):
+    p = tmp_path / "BENCH_x.json"
+    obs.write_bench_json({"summary": {"a": 1}, "schema_version": 999}, p)
+    doc = json.loads(p.read_text())
+    assert doc["schema_version"] == obs.SCHEMA_VERSION
+    assert doc["summary"] == {"a": 1}
+
+
+def test_offload_bench_envelope_single_writer(tmp_path):
+    p = tmp_path / "BENCH_offload.json"
+    results = {"a": {"wall_s": 1.5, "summary": {}},
+               "b": {"wall_s": 0.5, "summary": {}}}
+    obs.write_offload_bench(results, p)
+    doc = json.loads(p.read_text())
+    assert doc["total_wall_s"] == 2.0
+    assert doc["schema_version"] == obs.SCHEMA_VERSION
+    assert set(doc["benchmarks"]) == {"a", "b"}
+
+
+def test_metrics_writer_coerces_arrays(tmp_path):
+    path = tmp_path / "m.jsonl"
+    with obs.MetricsWriter(path) as w:
+        w.write({"step": 0, "metrics": {"ce": np.float32(1.25)}})
+    recs = obs.read_jsonl(path)
+    assert recs[0]["metrics"]["ce"] == 1.25
