@@ -17,6 +17,11 @@ run. Three metric kinds:
   * ``bound`` — absolute one-sided limit carried by the spec itself (no
     baseline entry): fails above ``limit``. Used for the instrumentation
     overhead gate (counters-on vs counters-off wall delta <= 5%).
+  * ``floor`` — absolute one-sided minimum carried by the spec itself (no
+    baseline entry): fails *below* ``limit``. Used for the PR-7 fusion
+    gates (``fusion_coverage`` >= 0.8 and ``fused_speedup`` >= 5x — the
+    speedup is an in-run ratio of warm fused vs per-node step walls, so it
+    is machine-speed independent unlike the ``wall`` kind).
 
 Every artifact must also carry the shared ``schema_version`` stamp
 (:data:`repro.obs.report.SCHEMA_VERSION` — every writer routes through
@@ -49,8 +54,8 @@ MODEL_RTOL = 1e-3  # deterministic floats: drift band (ulp-noise tolerant)
 class MetricSpec:
     file: str  # artifact basename this metric comes from
     path: str  # dot path inside the json ("summary.n_commands")
-    kind: str  # "wall" | "model" | "exact" | "bound"
-    limit: float | None = None  # "bound" only: absolute one-sided ceiling
+    kind: str  # "wall" | "model" | "exact" | "bound" | "floor"
+    limit: float | None = None  # "bound"/"floor": absolute one-sided limit
 
 
 #: Every metric the gate tracks. Keys into the baseline are
@@ -94,6 +99,10 @@ SPECS = [
                "exact"),
     MetricSpec("BENCH_trainstep.json",
                "summary.instrumentation_overhead_frac", "bound", limit=0.05),
+    MetricSpec("BENCH_trainstep.json", "summary.fusion_coverage",
+               "floor", limit=0.8),
+    MetricSpec("BENCH_trainstep.json", "summary.fused_speedup",
+               "floor", limit=5.0),
 ]
 
 
@@ -149,10 +158,14 @@ def check_file(path: str, baseline: dict, *, update: bool) -> list[str]:
             failures.append(f"{key}: metric missing from artifact")
             print(f"  MISSING  {spec.path}")
             continue
-        if spec.kind == "bound":
-            # Baseline-free: the ceiling rides in the spec itself.
-            ok = cur <= spec.limit
-            detail = f"{cur:.4g} vs limit {spec.limit:.4g}"
+        if spec.kind in ("bound", "floor"):
+            # Baseline-free: the one-sided limit rides in the spec itself.
+            if spec.kind == "bound":
+                ok = cur <= spec.limit
+                detail = f"{cur:.4g} vs limit {spec.limit:.4g}"
+            else:
+                ok = cur >= spec.limit
+                detail = f"{cur:.4g} vs floor {spec.limit:.4g}"
             print(f"  {'ok' if ok else 'FAIL':8s}{spec.path}: {detail}")
             if not ok:
                 failures.append(f"{key}: {detail}")

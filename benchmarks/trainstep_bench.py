@@ -5,6 +5,10 @@ compiles ONE whole-step program per design point, and reports
 
   * per-step wall clock through ``run_pallas`` graph execution (interpret
     mode off-TPU), with an enforced loss-decrease gate,
+  * fused-region execution vs the per-node dispatch walk: warm step walls
+    for both paths on identical inputs, their ratio (``fused_speedup``),
+    the fusion plan's command coverage and dispatch counts — the
+    perf numbers the PR-7 region fuser is gated on,
   * the liveness allocator's ``peak_tcdm_bytes`` vs the design budget,
   * command/offload counts and the block-engine modeled step cycles for
     both the NTX and NS design points.
@@ -57,6 +61,15 @@ def trainstep_bench(steps: int = 3, batch: int = 4, img: int = 16,
     # noise only ever adds time).
     overhead = _instrumentation_overhead(program, batch_fn, graph, res["params"])
 
+    # Fused-region dispatch vs the PR-6 per-node baseline convention.
+    fused_ms, unfused_ms, dispatch_speedup = _fused_vs_unfused(
+        program, batch_fn, graph, res["params"]
+    )
+    from repro.lower.fuse import plan_fusion
+
+    fusion = plan_fusion(program)
+    n_steps_total = len(fusion.fused_steps) + len(fusion.fallback_steps)
+
     # The per-step counter totals must equal the program's own closed-form
     # counts (times `steps`) exactly — the tentpole's cross-check gate.
     closed = program_totals(program)
@@ -70,6 +83,7 @@ def trainstep_bench(steps: int = 3, batch: int = 4, img: int = 16,
     }
     rows = [
         ("per_step_wall_ms", *[w * 1e3 for w in walls]),
+        ("fused_vs_unfused_warm_ms", fused_ms, unfused_ms),
         ("loss", *losses),
         ("commands_ntx_vs_ns", program.n_commands, ns_program.n_commands),
         ("step_cycles_ntx_vs_ns", timed["ntx"], timed["ns"]),
@@ -99,6 +113,15 @@ def trainstep_bench(steps: int = 3, batch: int = 4, img: int = 16,
         "counter_macs_total": reg.total("macs"),
         "counters_match_closed_form": counters_exact,
         "instrumentation_overhead_frac": overhead,
+        "warm_step_wall_ms_fused": fused_ms,
+        "warm_step_wall_ms_unfused": unfused_ms,
+        "fused_speedup": unfused_ms / fused_ms,
+        "fused_dispatch_speedup": dispatch_speedup,
+        "fusion_coverage": fusion.coverage,
+        "fused_regions": fusion.n_regions,
+        "dispatches_per_step_fused":
+            fusion.n_regions + len(fusion.fallback_steps),
+        "dispatches_per_step_unfused": n_steps_total,
     }
     return rows, summary
 
@@ -128,6 +151,56 @@ def _instrumentation_overhead(program, batch_fn, graph, params,
         off.append(step(None))
         on.append(step(CounterRegistry()))
     return max(0.0, min(on) / min(off) - 1.0)
+
+
+def _fused_vs_unfused(program, batch_fn, graph, params,
+                      reps: int = 15) -> tuple[float, float, float]:
+    """Warm min-of-N step walls (ms): the PR-7 fused path vs PR-6 baseline.
+
+    The two legs reproduce what each release's training loop actually did
+    per step:
+
+      * fused — ONE step-level jitted plan over device-resident inputs
+        (the new ``train_graph`` steady state: parameters never leave the
+        device between steps).
+      * unfused — the PR-6 convention: per-node plan dispatch over
+        host-resident numpy arrays, freshly transferred every step, which
+        is how the old loop round-tripped every parameter.
+
+    Their ratio is the ``fused_speedup`` floor gate — an in-run ratio, so
+    machine-speed independent. The returned third value is the
+    same-inputs ratio (both legs on device-resident arrays), reported
+    ungated as ``fused_dispatch_speedup`` — it isolates dispatch + kernel
+    fusion from the input-residency win.
+    """
+    import jax
+    import numpy as _np
+
+    from repro.lower import executors
+
+    eye = _np.eye(graph.loss.classes, dtype=_np.float32)
+    x, labels = batch_fn(0)
+    host_inputs = {graph.input_edge: _np.asarray(x, _np.float32),
+                   graph.label_edge: eye[_np.asarray(labels)], **params}
+    dev_inputs = executors._as_jax_f32(host_inputs)
+
+    def best(inputs, fuse: bool) -> float:
+        jax.block_until_ready(
+            executors.run_pallas(program, inputs, fuse=fuse)
+        )  # warm
+        walls = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(
+                executors.run_pallas(program, inputs, fuse=fuse)
+            )
+            walls.append(time.perf_counter() - t0)
+        return min(walls) * 1e3
+
+    fused = best(dev_inputs, True)
+    unfused = best(host_inputs, False)
+    unfused_dev = best(dev_inputs, False)
+    return fused, unfused, unfused_dev / fused
 
 
 GATES = ("loss_decreased", "within_tcdm_budget",

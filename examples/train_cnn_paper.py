@@ -96,11 +96,14 @@ def run_jax(args, rng):
 
 def run_ntx(args, rng):
     from repro.lower import (
+        PlanCache,
         frequency_band_batches,
         lower_training_step,
         paper_cnn_graph,
+        plan_fusion,
         train_graph,
     )
+    from repro.lower.executors import _cache_stats
 
     graph = paper_cnn_graph(
         batch=args.batch, img=args.img, lr=0.05, momentum=0.9
@@ -114,15 +117,28 @@ def run_ntx(args, rng):
         f"{len(program.meta['spilled'])} spilled regions"
     )
     batch_fn = frequency_band_batches(rng, args.batch, args.img, 10)
+    cache = PlanCache()
     t_all = time.time()
     res = train_graph(graph, args.steps, batch_fn, backend="pallas",
-                      program=program, params=graph.init_params(seed=0))
+                      program=program, params=graph.init_params(seed=0),
+                      cache=cache)
     losses, walls = res["losses"], res["walls"]
     for i, (loss, w) in enumerate(zip(losses, walls)):
         print(f"step {i:3d}  loss={loss:.4f}  ({w*1e3:.0f} ms)")
     wall = time.time() - t_all
     print(f"final loss={losses[-1]:.4f}  ({wall:.1f}s) — whole step ran as "
           "one NtxProgram through run_pallas graph execution")
+    hits, misses, traces, calls = _cache_stats(cache)
+    print(f"plan cache: {len(cache)} plans, {traces} traces, "
+          f"{hits} hits / {misses} misses over {calls} calls "
+          f"(zero retraces after step 0)")
+    fusion = plan_fusion(program)
+    print(f"fusion: coverage {fusion.coverage:.1%} "
+          f"({fusion.fused_commands}/{fusion.total_commands} commands) in "
+          f"{fusion.n_regions} regions; "
+          f"{fusion.n_regions + len(fusion.fallback_steps)} dispatches/step "
+          f"fused vs {len(fusion.fused_steps) + len(fusion.fallback_steps)} "
+          "per-node")
     if args.bench_json:
         os.makedirs(os.path.dirname(args.bench_json) or ".", exist_ok=True)
         with open(args.bench_json, "w") as f:

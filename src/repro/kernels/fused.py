@@ -1,0 +1,402 @@
+"""Fused-region Pallas kernels: one kernel per contiguous train-step chain.
+
+:mod:`repro.lower.fuse` groups contiguous compatible node passes of a
+train-step :class:`~repro.lower.ir.NtxProgram` into
+:class:`~repro.lower.fuse.RegionSpec` regions; this module compiles each
+region into ONE ``pallas_call`` — the software analogue of the NTX datapath
+streaming a whole loop nest through the FMAC pipeline instead of taking a
+per-op offload round trip.
+
+The kernel shape follows :mod:`repro.kernels.streaming`'s hand-rolled DMA
+idiom, lifted from the k-loop to the batch-tile grid:
+
+  * the grid walks batch tiles; every *streamed* (batched) region input
+    owns two VMEM tile buffers and a ``make_async_copy`` prefetches tile
+    k+1 out of ANY/HBM while tile k computes;
+  * params and momentum state ride in as resident VMEM blocks;
+  * every intermediate edge of the region lives in kernel scratch values —
+    conv pre-activations, relu masks, im2col columns never touch HBM;
+  * cross-batch dW reductions accumulate in VMEM scratch across grid steps
+    and the SGD/momentum update runs as the last grid step's epilogue, so
+    a fwd or bwd chain plus its update is one dispatch.
+
+Convolutions are expressed per tile as statically-unrolled im2col plus an
+MXU ``jnp.dot`` with an fp32 accumulator (the NTX wide-accumulation story);
+the input gradient is the transposed conv — dilate dy by the stride, pad by
+``k-1-p``, correlate with the rotated kernel — all inside the same tile.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.lower.rules import (
+    BiasSpec,
+    Conv2dSpec,
+    FlattenSpec,
+    MatmulSpec,
+    MaxPool2dSpec,
+    ReluSpec,
+)
+
+N_BUFFERS = 2  # double buffering, as in kernels.streaming / runtime.dma
+
+
+def _batch_block(batch: int) -> int:
+    """Batch-tile size: two grid steps when the batch splits evenly.
+
+    Small tiles keep the per-tile im2col slices cheap (the measured cost
+    center) while two grid steps give the prefetch something to overlap.
+    """
+    if batch >= 4 and batch % 2 == 0:
+        return batch // 2
+    return batch
+
+
+def _pad_hw(x, ph: int, pw: int):
+    if ph or pw:
+        return jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    return x
+
+
+def _conv_cols(xp, spec: Conv2dSpec):
+    """Unrolled im2col on a padded tile -> (bn*oh*ow, kh*kw*cin)."""
+    bn = xp.shape[0]
+    s = spec.stride
+    oh, ow = spec.out_h, spec.out_w
+    cols = jnp.concatenate(
+        [
+            xp[:, dh : dh + oh * s : s, dw : dw + ow * s : s, :]
+            for dh in range(spec.kh)
+            for dw in range(spec.kw)
+        ],
+        axis=-1,
+    )
+    return cols.reshape(bn * oh * ow, spec.kh * spec.kw * spec.cin)
+
+
+def _conv_fwd_tile(x, w, spec: Conv2dSpec):
+    p = spec.padding
+    cols = _conv_cols(_pad_hw(x, p, p), spec)
+    wf = w.reshape(spec.kh * spec.kw * spec.cin, spec.cout)
+    y = jnp.dot(cols, wf, preferred_element_type=jnp.float32)
+    return y.reshape(x.shape[0], spec.out_h, spec.out_w, spec.cout)
+
+
+def _conv_dw_tile(x, dy, spec: Conv2dSpec):
+    """This tile's dW contribution: cols(x)^T @ dy, batch in the contraction."""
+    p = spec.padding
+    cols = _conv_cols(_pad_hw(x, p, p), spec)
+    dyf = dy.reshape(-1, spec.cout)
+    dwf = jnp.dot(cols.T, dyf, preferred_element_type=jnp.float32)
+    return dwf.reshape(spec.kh, spec.kw, spec.cin, spec.cout)
+
+
+def _conv_dx_tile(dy, w, spec: Conv2dSpec):
+    """Transposed conv per tile: dilate dy, pad by k-1-p, correlate rot180(w)."""
+    bn = dy.shape[0]
+    s, p = spec.stride, spec.padding
+    oh, ow = spec.out_h, spec.out_w
+    if s > 1:
+        z = jnp.zeros(
+            (bn, (oh - 1) * s + 1, (ow - 1) * s + 1, spec.cout), dy.dtype
+        )
+        z = z.at[:, ::s, ::s, :].set(dy)
+    else:
+        z = dy
+    qh, qw = spec.kh - 1 - p, spec.kw - 1 - p
+    rh = (spec.in_h + 2 * p - spec.kh) % s
+    rw = (spec.in_w + 2 * p - spec.kw) % s
+    z = jnp.pad(z, ((0, 0), (qh, qh + rh), (qw, qw + rw), (0, 0)))
+    w_hat = w[::-1, ::-1, :, :].transpose(0, 1, 3, 2)  # (kh, kw, cout, cin)
+    cols = jnp.concatenate(
+        [
+            z[:, dh : dh + spec.in_h, dw : dw + spec.in_w, :]
+            for dh in range(spec.kh)
+            for dw in range(spec.kw)
+        ],
+        axis=-1,
+    ).reshape(bn * spec.in_h * spec.in_w, spec.kh * spec.kw * spec.cout)
+    dxf = jnp.dot(
+        cols, w_hat.reshape(-1, spec.cin), preferred_element_type=jnp.float32
+    )
+    return dxf.reshape(bn, spec.in_h, spec.in_w, spec.cin)
+
+
+def _pool_fwd_tile(x, spec: MaxPool2dSpec):
+    """window == stride max pool as a reshape-max (checked by the fuser)."""
+    bn, h, w, c = x.shape
+    k = spec.window
+    return x.reshape(bn, h // k, k, w // k, k, c).max(axis=(2, 4))
+
+
+def _pool_dx_tile(x, g, spec: MaxPool2dSpec):
+    """Max-pool input gradient: first-match winner mask, row-major taps.
+
+    Ties route the gradient to the first maximal tap in window order —
+    the same tie-breaking as XLA's select-and-scatter, so the fused chain
+    matches ``jax.vjp`` of ``reduce_window`` bit for bit.
+    """
+    bn, h, w, c = x.shape
+    k = spec.window
+    oh, ow = h // k, w // k
+    xw = x.reshape(bn, oh, k, ow, k, c)
+    y = xw.max(axis=(2, 4))
+    eq = xw == y[:, :, None, :, None, :]
+    taps = eq.transpose(0, 1, 3, 5, 2, 4).reshape(bn, oh, ow, c, k * k)
+    first = taps & (jnp.cumsum(taps.astype(jnp.int32), axis=-1) == 1)
+    dx = first.astype(g.dtype) * g[:, :, :, :, None]
+    return (
+        dx.reshape(bn, oh, ow, c, k, k)
+        .transpose(0, 1, 4, 2, 5, 3)
+        .reshape(bn, h, w, c)
+    )
+
+
+def _stage_flow(region, env):
+    """Run the region's dataflow stages on one batch tile.
+
+    ``env`` maps edge names to tile values (leading ``bn`` axis on batched
+    edges); gains every intermediate and stage output. Returns ``(env,
+    partials)`` where ``partials`` holds this tile's contribution to each
+    cross-batch ``d_<param>`` reduction. ``upd`` stages run later, in
+    :func:`_stage_updates`, once the reduction is complete.
+    """
+    partials = {}
+    for st in region.stages:
+        s = st.spec
+        if st.pass_ == "fwd":
+            x = env[st.in_edge]
+            if isinstance(s, Conv2dSpec):
+                y = _conv_fwd_tile(x, env[st.param], s)
+            elif isinstance(s, MatmulSpec):
+                y = jnp.dot(
+                    x, env[st.param], preferred_element_type=jnp.float32
+                )
+            elif isinstance(s, BiasSpec):
+                y = x + env[st.param]
+            elif isinstance(s, ReluSpec):
+                y = jnp.maximum(x, 0.0)
+            elif isinstance(s, MaxPool2dSpec):
+                y = _pool_fwd_tile(x, s)
+            elif isinstance(s, FlattenSpec):
+                y = x.reshape(x.shape[0], -1)
+            else:
+                raise TypeError(f"no fused fwd rule for {type(s).__name__}")
+            env[st.out_edge] = y
+        elif st.pass_ == "dw":
+            g = env[f"d_{st.out_edge}"]
+            if isinstance(s, Conv2dSpec):
+                d = _conv_dw_tile(env[st.in_edge], g, s)
+            elif isinstance(s, MatmulSpec):
+                d = jnp.dot(
+                    env[st.in_edge].T, g, preferred_element_type=jnp.float32
+                )
+            elif isinstance(s, BiasSpec):
+                d = g.reshape(-1, s.c).sum(axis=0)
+            else:
+                raise TypeError(f"no fused dW rule for {type(s).__name__}")
+            partials[f"d_{st.param}"] = d
+        elif st.pass_ == "dx":
+            g = env[f"d_{st.out_edge}"]
+            if isinstance(s, Conv2dSpec):
+                dx = _conv_dx_tile(g, env[st.param], s)
+            elif isinstance(s, MatmulSpec):
+                dx = jnp.dot(
+                    g, env[st.param].T, preferred_element_type=jnp.float32
+                )
+            elif isinstance(s, ReluSpec):
+                # mask from the relu *output*: y > 0 iff x > 0, so the
+                # pre-activation never has to escape its forward region
+                dx = jnp.where(env[st.out_edge] > 0.0, g, 0.0)
+            elif isinstance(s, MaxPool2dSpec):
+                dx = _pool_dx_tile(env[st.in_edge], g, s)
+            elif isinstance(s, FlattenSpec):
+                dx = g.reshape((g.shape[0],) + tuple(s.in_shape))
+            elif isinstance(s, BiasSpec):
+                dx = g
+            else:
+                raise TypeError(f"no fused dX rule for {type(s).__name__}")
+            env[f"d_{st.in_edge}"] = dx
+        elif st.pass_ != "upd":
+            raise TypeError(f"unknown pass {st.pass_!r} in fused region")
+    return env, partials
+
+
+def _stage_updates(region, totals, env):
+    """SGD/momentum epilogue on the fully reduced dW totals."""
+    outs = {}
+    for st in region.stages:
+        if st.pass_ != "upd":
+            continue
+        p = st.param
+        # the gradient total normally accumulates in-region; when a spill
+        # or chain barrier split the dw stage into an earlier region, the
+        # already-reduced total arrives as a resident input instead
+        dw = totals.get(f"d_{p}")
+        if dw is None:
+            dw = env[f"d_{p}"]
+        if region.momentum:
+            v_new = region.momentum * env[f"v_{p}"] + dw
+            outs[f"v_{p}_new"] = v_new
+        else:
+            v_new = dw
+        outs[f"{p}_new"] = env[p] - region.lr * v_new
+    return outs
+
+
+def build_region_callable(region, *, interpret: bool):
+    """Compile one RegionSpec into a dict -> dict jax callable.
+
+    The callable takes the region's input edges (batched activations /
+    gradients plus resident params) and returns its escaping edges; it is
+    what the :class:`~repro.lower.executors.PlanCache` jits under the
+    region key, so the whole chain is one cached dispatch.
+    """
+    streamed = [n for n, b in region.inputs if b]
+    resident = [n for n, b in region.inputs if not b]
+    batched_outs = [n for n, k in region.outputs if k == "batched"]
+    reduced_outs = [n for n, k in region.outputs if k == "reduced"]
+    out_names = batched_outs + reduced_outs
+    acc_names = [f"d_{st.param}" for st in region.stages if st.pass_ == "dw"]
+    has_epilogue = bool(acc_names) or any(
+        st.pass_ == "upd" for st in region.stages
+    )
+    n_s, n_r, n_o = len(streamed), len(resident), len(out_names)
+
+    def fn(j):
+        B = region.batch
+        bn = _batch_block(B)
+        grid = B // bn
+
+        def probe(vals):
+            env, partials = _stage_flow(region, dict(vals))
+            return env, partials
+
+        env_sh, part_sh = jax.eval_shape(probe, j)
+
+        def out_struct(name):
+            if name in part_sh:
+                return part_sh[name]
+            if name.endswith("_new"):
+                base = name[:-4]
+                return jax.ShapeDtypeStruct(j[base].shape, jnp.float32)
+            return env_sh[name]
+
+        in_specs = [pl.BlockSpec(memory_space=pltpu.ANY) for _ in streamed]
+        for name in resident:
+            shp = tuple(j[name].shape)
+            in_specs.append(
+                pl.BlockSpec(shp, _const_map(len(shp)))
+            )
+        out_specs, out_shape = [], []
+        for name in batched_outs:
+            shp = tuple(out_struct(name).shape)
+            out_specs.append(
+                pl.BlockSpec((bn,) + shp[1:], _lead_map(len(shp)))
+            )
+            out_shape.append(jax.ShapeDtypeStruct(shp, jnp.float32))
+        for name in reduced_outs:
+            shp = tuple(out_struct(name).shape)
+            out_specs.append(pl.BlockSpec(shp, _const_map(len(shp))))
+            out_shape.append(jax.ShapeDtypeStruct(shp, jnp.float32))
+
+        scratch = [
+            pltpu.VMEM((N_BUFFERS, bn) + tuple(j[name].shape[1:]), jnp.float32)
+            for name in streamed
+        ]
+        if n_s:
+            scratch.append(pltpu.SemaphoreType.DMA((N_BUFFERS, n_s)))
+        scratch += [
+            pltpu.VMEM(tuple(part_sh[name].shape), jnp.float32)
+            for name in acc_names
+        ]
+
+        def kernel(*refs):
+            srefs = refs[:n_s]
+            rrefs = refs[n_s : n_s + n_r]
+            orefs = refs[n_s + n_r : n_s + n_r + n_o]
+            rest = refs[n_s + n_r + n_o :]
+            bufs = rest[:n_s]
+            sem = rest[n_s] if n_s else None
+            accs = rest[n_s + (1 if n_s else 0) :]
+
+            gi = pl.program_id(0)
+            slot = jax.lax.rem(gi, N_BUFFERS)
+
+            def copy_in(k, sl, idx):
+                return pltpu.make_async_copy(
+                    srefs[k].at[pl.ds(idx * bn, bn)],
+                    bufs[k].at[sl],
+                    sem.at[sl, k],
+                )
+
+            @pl.when(gi == 0)
+            def _():
+                for k in range(n_s):
+                    copy_in(k, 0, 0).start()
+
+            for k in range(n_s):
+                copy_in(k, slot, gi).wait()
+
+            @pl.when(gi + 1 < grid)
+            def _():
+                nxt = jax.lax.rem(gi + 1, N_BUFFERS)
+                for k in range(n_s):
+                    copy_in(k, nxt, gi + 1).start()
+
+            env = {name: rrefs[i][...] for i, name in enumerate(resident)}
+            for k, name in enumerate(streamed):
+                env[name] = bufs[k][slot]
+            env, partials = _stage_flow(region, env)
+
+            if acc_names:
+
+                @pl.when(gi == 0)
+                def _():
+                    for i in range(len(acc_names)):
+                        accs[i][...] = jnp.zeros(accs[i].shape, jnp.float32)
+
+                for i, name in enumerate(acc_names):
+                    accs[i][...] += partials[name]
+
+            for i, name in enumerate(batched_outs):
+                orefs[i][...] = env[name]
+
+            if has_epilogue:
+
+                @pl.when(gi == grid - 1)
+                def _():
+                    totals = {
+                        name: accs[i][...] for i, name in enumerate(acc_names)
+                    }
+                    upd = _stage_updates(region, totals, env)
+                    for i, name in enumerate(reduced_outs):
+                        oref = orefs[len(batched_outs) + i]
+                        oref[...] = upd[name] if name in upd else totals[name]
+
+        res = pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(*[j[n] for n in streamed], *[j[n] for n in resident])
+        if not isinstance(res, (list, tuple)):
+            res = (res,)
+        return dict(zip(out_names, res))
+
+    return fn
+
+
+def _const_map(rank: int):
+    return lambda i: (0,) * rank
+
+
+def _lead_map(rank: int):
+    return lambda i: (i,) + (0,) * (rank - 1)

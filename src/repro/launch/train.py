@@ -333,7 +333,8 @@ def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
                 interpret: bool | None = None,
                 mesh: str | None = None,
                 metrics: str | None = None,
-                trace: str | None = None) -> dict:
+                trace: str | None = None,
+                fuse: bool = True) -> dict:
     """The ``--backend ntx`` mode: train the paper's small CNN end-to-end
     with every step one compiled :class:`repro.lower.NtxProgram` executed
     through ``run_pallas`` graph execution (cached per-node plans).
@@ -351,6 +352,11 @@ def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
     lanes, host lowering/dispatch spans, flow events). Either also prints
     the top-k hotspot table at the end.
 
+    ``fuse`` (default) executes whole-step programs through the region
+    fuser — chains of compatible layers as single double-buffered Pallas
+    kernels, one cached step-level plan per program. ``fuse=False``
+    (``--no-fuse``) is the escape hatch back to per-node plan dispatch.
+
     Returns the :func:`repro.lower.train_graph` result dict (program,
     params, losses, per-step walls).
     """
@@ -360,12 +366,14 @@ def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
 
     from repro import obs
     from repro.lower import (
+        PlanCache,
         frequency_band_batches,
         lower_training_step,
         paper_cnn_graph,
         shard_training_step,
         train_graph,
     )
+    from repro.lower.executors import _cache_stats
 
     registry = obs.CounterRegistry() if (metrics or trace) else None
     collector = obs.TraceCollector() if trace else None
@@ -402,10 +410,11 @@ def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
                   f"parallel eff {tm.parallel_eff:.1%}")
         batch_fn = frequency_band_batches(np.random.RandomState(0), batch, img,
                                           graph.loss.classes)
+        cache = PlanCache()
         res = train_graph(graph, steps, batch_fn, program=program,
                           backend="pallas", interpret=interpret,
                           params=graph.init_params(seed=0),
-                          metrics_path=metrics)
+                          metrics_path=metrics, cache=cache, fuse=fuse)
         if collector is not None:
             if sharded is not None:
                 collector.add_mesh_step(sharded, n_clusters=n_clusters)
@@ -428,6 +437,19 @@ def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
     losses = res["losses"]
     for i, (loss, w) in enumerate(zip(losses, res["walls"])):
         print(f"step {i:5d} loss={loss:.4f} ({w*1e3:.0f} ms)", flush=True)
+    hits, misses, traces, calls = _cache_stats(cache)
+    print(f"plan cache: {len(cache)} plans, {traces} traces "
+          f"({hits} hits / {misses} misses over {calls} calls)")
+    fusion = next(
+        iter(program.meta.get("_fusion_plans", {}).values()), None
+    )
+    if fusion is not None:
+        print(f"fusion: {fusion.n_regions} regions + "
+              f"{len(fusion.fallback_steps)} fallback steps per step, "
+              f"coverage {fusion.coverage:.1%} "
+              f"({fusion.fused_commands}/{fusion.total_commands} commands)")
+    else:
+        print("fusion: disabled (--no-fuse) — per-node plan dispatch")
     if metrics:
         print(f"per-step metrics JSONL: {metrics}")
     if registry is not None:
@@ -484,12 +506,17 @@ def _cli():
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="ntx backend: write the merged Perfetto trace "
                          "(cluster exec/DMA + mesh link + host lanes) here")
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="ntx backend: disable the region fuser and run "
+                         "per-node plan dispatch (the pre-fusion walk); "
+                         "numerics are identical, steps are slower")
     args = ap.parse_args()
 
     if args.backend == "ntx":
         res = run_ntx_cnn(args.steps, args.batch, args.img,
                           n_clusters=args.offload_clusters, mesh=args.mesh,
-                          metrics=args.metrics, trace=args.trace)
+                          metrics=args.metrics, trace=args.trace,
+                          fuse=not args.no_fuse)
         if len(res["losses"]) >= 3 and not res["losses"][-1] < res["losses"][0]:
             raise SystemExit("ntx CNN training did not decrease the loss")
         return

@@ -24,8 +24,13 @@ gradient-allreduce epilogue, bit-identical under ``run_reference`` and
     sharded = shard_training_step(graph, mesh_shape=(2, 2))
     outs    = run_pallas(sharded.program, inputs)   # psum allreduce
 
+On the Pallas path, whole-step programs route through the region fuser
+(:mod:`repro.lower.fuse`): contiguous compatible chains execute as single
+double-buffered fused kernels and the step compiles to ONE cached
+callable; ``run_pallas(..., fuse=False)`` is the per-node escape hatch.
+
 See docs/architecture.md ("The lowering pipeline", "The graph compiler",
-"Mesh execution").
+"Mesh execution", "The region fuser").
 """
 
 from repro.lower.executors import (
@@ -35,6 +40,11 @@ from repro.lower.executors import (
     run_pallas,
     run_reference,
     run_timing,
+)
+from repro.lower.fuse import (
+    FusionPlan,
+    RegionSpec,
+    plan_fusion,
 )
 from repro.lower.graph import (
     GraphNode,
@@ -83,6 +93,7 @@ __all__ = [
     "Conv2dSpec",
     "DesignPoint",
     "FlattenSpec",
+    "FusionPlan",
     "GraphNode",
     "LivenessAllocator",
     "MatmulSpec",
@@ -95,6 +106,7 @@ __all__ = [
     "PLAN_CACHE",
     "PlanCache",
     "RegionAllocator",
+    "RegionSpec",
     "ReluSpec",
     "SgdUpdateSpec",
     "ShardedTrainStep",
@@ -102,6 +114,7 @@ __all__ = [
     "TensorRegion",
     "frequency_band_batches",
     "parse_mesh",
+    "plan_fusion",
     "shard_training_step",
     "lower",
     "lower_layer",

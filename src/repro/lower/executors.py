@@ -149,6 +149,13 @@ def _plan_callable(spec, pass_: str, interpret: bool):
 
     from repro.core import conv_decomp
     from repro.kernels import streaming
+    from repro.lower.fuse import RegionSpec
+
+    if isinstance(spec, RegionSpec):
+        # one fused kernel for a whole region chain; ``pass_`` is "region"
+        from repro.kernels import fused
+
+        return fused.build_region_callable(spec, interpret=interpret)
 
     if isinstance(spec, MatmulSpec):
         if pass_ == "fwd":
@@ -335,7 +342,21 @@ class PlanCache:
         self.misses = 0
 
     def get(self, spec, pass_: str, design: str, interpret: bool) -> CompiledPlan:
-        key = (spec, pass_, design, bool(interpret))
+        interpret = bool(interpret)
+        return self.get_fn(
+            (spec, pass_, design, interpret),
+            lambda: _plan_callable(spec, pass_, interpret),
+        )
+
+    def get_fn(self, key, build) -> CompiledPlan:
+        """A cached jitted plan for an arbitrary hashable key.
+
+        ``build`` runs once per key to produce the raw jax callable.
+        :meth:`get` routes per-node plans through here with
+        ``(spec, pass, design, interpret)`` keys; the fused graph executor
+        caches whole-train-step callables under step-level keys the same
+        way, so the retrace/hit accounting covers both granularities.
+        """
         plan = self._plans.get(key)
         if plan is not None:
             self.hits += 1
@@ -344,7 +365,7 @@ class PlanCache:
         import jax
 
         plan = CompiledPlan(key)
-        raw = _plan_callable(spec, pass_, bool(interpret))
+        raw = build()
 
         def counted(j):
             plan.traces += 1
@@ -393,15 +414,35 @@ def _dispatch_plan(cache: PlanCache, design: str, interpret: bool):
         if col is None:
             return p
 
-        name = f"{type(spec).__name__}:{pass_}"
+        label = getattr(spec, "label", None)  # RegionSpec names its chain
+        name = label or f"{type(spec).__name__}:{pass_}"
+        cat = "fused" if label else "dispatch"
 
         def timed(j):
-            with col.host_span(name, tid="dispatch", cat="dispatch"):
+            with col.host_span(name, tid="dispatch", cat=cat):
                 return p(j)
 
         return timed
 
     return plan
+
+
+def _as_jax_f32(inputs: dict) -> dict:
+    """Inputs as float32 jax arrays; device arrays pass through untouched.
+
+    The identity check matters for step-level dispatch: ``jnp.asarray``
+    with a dtype is not free even on an already-f32 device array, and a
+    dozen per-step no-op conversions cost as much as a fused kernel.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    out = {}
+    for k, v in inputs.items():
+        if not (isinstance(v, jax.Array) and v.dtype == jnp.float32):
+            v = jnp.asarray(v, jnp.float32)
+        out[k] = v
+    return out
 
 
 def _resolve_interpret(interpret):
@@ -412,12 +453,93 @@ def _resolve_interpret(interpret):
     return jax.default_backend() != "tpu"
 
 
+def _fusion_for(program, *, fuse_updates: bool):
+    """The program's memoized FusionPlan (region formation is per-program)."""
+    plans = program.meta.setdefault("_fusion_plans", {})
+    plan = plans.get(fuse_updates)
+    if plan is None:
+        from repro.lower import fuse as fuse_mod
+
+        plan = fuse_mod.plan_fusion(program, fuse_updates=fuse_updates)
+        plans[fuse_updates] = plan
+    return plan
+
+
+def _graph_fingerprint(graph):
+    """Hashable identity of everything a step callable bakes in."""
+    return (
+        tuple(
+            (n.name, n.spec, n.param, n.in_edge, n.out_edge)
+            for n in graph.nodes
+        ),
+        graph.loss,
+        graph.batch,
+        graph.lr,
+        graph.momentum,
+        graph.input_edge,
+        graph.label_edge,
+        graph.logits_edge,
+    )
+
+
+def _step_plan(cache, graph, fusion, design, interpret, *, keep_grads):
+    """One jitted callable for the WHOLE fused train step.
+
+    The fused walk still dispatches 5-ish plans per step; at millisecond
+    step times that per-plan jit entry overhead dominates the kernels
+    themselves. Caching the entire segment walk as a single plan — keyed by
+    the graph fingerprint plus the fusion plan's segment tuple (RegionSpecs
+    are frozen) — collapses a step to one dispatch, with the region
+    pallas_calls inlined into the step executable at trace time. Only used
+    when no TraceCollector is active: traces want the per-plan host spans.
+    """
+    segs = tuple(
+        s.step if s.region is None else s.region for s in fusion.segments
+    )
+    key = (
+        "train_step",
+        _graph_fingerprint(graph),
+        segs,
+        keep_grads,
+        design,
+        bool(interpret),
+    )
+
+    def build():
+        plan = _dispatch_plan(cache, design, interpret)
+
+        def raw(j):
+            return _graph_step_local(
+                graph, j, plan, graph.batch,
+                keep_grads=keep_grads, fusion=fusion,
+            )
+
+        return raw
+
+    return cache.get_fn(key, build)
+
+
+def _record_fusion(reg, fusion) -> None:
+    """Book what the fuser covered this step under fusion/."""
+    if reg is None or not reg.enabled or fusion is None:
+        return
+    with reg.scope("fusion"):
+        reg.inc("regions", fusion.n_regions)
+        reg.inc("fallback_dispatches", len(fusion.fallback_steps))
+        reg.inc("fused_commands", fusion.fused_commands)
+        reg.inc(
+            "unfused_commands",
+            fusion.total_commands - fusion.fused_commands,
+        )
+
+
 def run_pallas(
     program: NtxProgram,
     inputs: dict,
     *,
     interpret: bool | None = None,
     cache: PlanCache | None = None,
+    fuse: bool = True,
 ):
     """Execute the lowered layer through the cached Pallas plans.
 
@@ -427,9 +549,18 @@ def run_pallas(
     are ``jax.Array``s keyed like :func:`run_reference`'s output dict.
     Repeated calls on equal specs reuse one jitted executable from
     ``cache`` (default: the process-wide :data:`PLAN_CACHE`).
-    """
-    import jax.numpy as jnp
 
+    Fused train-step programs execute as ONE cached jitted callable per
+    step (the region kernels inline into it at trace time), so the warm
+    path is a single dispatch — the executor analogue of the paper's
+    "one offload per training step" goal.
+
+    ``fuse`` (train-step programs only) routes the graph walk through the
+    :mod:`repro.lower.fuse` region plan — whole fwd/bwd chains as single
+    fused kernels — with per-node dispatch as the fallback for steps
+    without a fusion rule. ``fuse=False`` is the escape hatch: the original
+    one-plan-per-node walk, bit-for-bit the PR-4 behaviour.
+    """
     interpret = _resolve_interpret(interpret)
     if cache is None:
         cache = PLAN_CACHE
@@ -437,15 +568,18 @@ def run_pallas(
     before = _cache_stats(cache) if reg is not None else None
     if program.meta.get("pass") == "train_step":
         if "mesh" in program.meta:
-            out = _run_pallas_graph_mesh(program, inputs, interpret, cache)
+            out = _run_pallas_graph_mesh(
+                program, inputs, interpret, cache, fuse=fuse
+            )
         else:
-            out = _run_pallas_graph(program, inputs, interpret, cache)
+            out = _run_pallas_graph(
+                program, inputs, interpret, cache, fuse=fuse
+            )
     else:
         spec = program.meta.get("spec")
         pass_ = program.meta.get("pass", "fwd")
         plan = _dispatch_plan(cache, program.design.name, interpret)(spec, pass_)
-        j = {k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()}
-        out = plan(j)
+        out = plan(_as_jax_f32(inputs))
     if reg is not None:
         # The counters are the *program's* closed-form offload/DMA
         # arithmetic — what the NTX cube would execute for this step — not
@@ -455,29 +589,35 @@ def run_pallas(
     return out
 
 
-def _run_pallas_graph(program, inputs, interpret: bool, cache):
+def _run_pallas_graph(program, inputs, interpret: bool, cache, fuse=True):
     """Graph-driven Pallas execution of one whole-train-step program.
 
     Walks the :class:`repro.lower.graph.NetworkGraph` behind ``program`` in
     the same fwd → loss grad → dW/update/dX schedule the command stream
-    encodes, executing every node pass through a cached per-node plan (the
-    same :class:`PlanCache` the per-layer executor uses; per-image nodes key
-    as :class:`BatchedSpec`). Outputs carry the program's output-region
-    names — logits, ``d_<param>`` (when kept), ``<param>_new`` and
-    ``v_<param>_new`` — so callers are executor-agnostic.
+    encodes. With ``fuse`` (the default) the walk follows the program's
+    :class:`repro.lower.fuse.FusionPlan`: contiguous fusable chains run as
+    single region kernels, everything else through the cached per-node
+    plans (per-image nodes key as :class:`BatchedSpec`). Outputs carry the
+    program's output-region names — logits, ``d_<param>`` (when kept),
+    ``<param>_new`` and ``v_<param>_new`` — so callers are
+    executor-agnostic.
     """
-    import jax.numpy as jnp
-
     graph = program.meta["graph"]
     keep_grads = program.meta.get("keep_grads", True)
-    j = {k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()}
+    j = _as_jax_f32(inputs)
+    fusion = _fusion_for(program, fuse_updates=True) if fuse else None
+    _record_fusion(obs.get_active(), fusion)
+    if fusion is not None and obs_trace.get_active_trace() is None:
+        step = _step_plan(cache, graph, fusion, program.design.name,
+                          interpret, keep_grads=keep_grads)
+        return step(j)
     plan = _dispatch_plan(cache, program.design.name, interpret)
     return _graph_step_local(graph, j, plan, graph.batch,
-                             keep_grads=keep_grads)
+                             keep_grads=keep_grads, fusion=fusion)
 
 
 def _graph_step_local(graph, j, plan, B, *, keep_grads=True,
-                      grad_reduce=None, batched=None):
+                      grad_reduce=None, batched=None, fusion=None):
     """One train step over ``B``-image arrays through cached per-node plans.
 
     ``B`` is the batch the arrays actually carry — the graph's full batch
@@ -487,10 +627,16 @@ def _graph_step_local(graph, j, plan, B, *, keep_grads=True,
     the psum a batch mean). ``batched`` forces a leading batch axis on the
     activations even at ``B == 1`` — a mesh shard of one image still
     carries its axis so the out-spec concatenation works. The walk mirrors
-    the command stream's fwd → loss grad → dW/update/dX schedule exactly.
+    the command stream's fwd → loss grad → dW/update/dX schedule exactly;
+    with ``fusion`` set it follows the fusion plan's segments instead —
+    the same schedule, chains collapsed into region dispatches.
     """
     reduce = grad_reduce or (lambda g: g)
     batched = (B > 1) if batched is None else batched
+    if fusion is not None:
+        return _walk_fused(graph, j, plan, B, fusion,
+                           keep_grads=keep_grads, reduce=reduce,
+                           batched=batched)
 
     def bspec(spec):
         return BatchedSpec(spec, B) if batched else spec
@@ -568,7 +714,131 @@ def _graph_step_local(graph, j, plan, B, *, keep_grads=True,
     return outs
 
 
-def _run_pallas_graph_mesh(program, inputs, interpret: bool, cache):
+def _walk_fused(graph, j, plan, B, fusion, *, keep_grads, reduce, batched):
+    """The fused segment walk: region kernels + per-node fallback steps.
+
+    Activations and activation gradients live in ``env`` keyed by edge
+    name (gradient of edge ``e`` is ``d_<e>``) so region dispatches and
+    fallback steps compose in any interleaving the fusion plan produced.
+    Regions containing fused SGD updates require ``reduce`` to be the
+    identity — the fuser only emits them on the single-device path.
+    """
+    import dataclasses
+
+    nodes = {n.name: n for n in graph.nodes}
+    env = {graph.input_edge: j[graph.input_edge]}
+    outs: dict = {}
+
+    def bspec(spec):
+        return BatchedSpec(spec, B) if batched else spec
+
+    def exec_step(key):
+        name, pass_ = key.split(":")
+        if name == "loss":
+            env[f"d_{graph.logits_edge}"] = plan(graph.loss, "dx")(
+                {"z": env[graph.logits_edge], "onehot": j[graph.label_edge]}
+            )["dz"]
+            return
+        node = nodes[name]
+        s = node.spec
+        if pass_ == "fwd":
+            a = env[node.in_edge]
+            if isinstance(s, Conv2dSpec):
+                y = plan(bspec(s), "fwd")({"x": a, "w": j[node.param]})["y"]
+            elif isinstance(s, MatmulSpec):
+                y = plan(s, "fwd")({"a": a, "b": j[node.param]})["c"]
+            elif isinstance(s, BiasSpec):
+                y = plan(s, "fwd")(
+                    {"x": a.reshape(-1, s.c), "b": j[node.param]}
+                )["y"].reshape(a.shape)
+            elif isinstance(s, ReluSpec):
+                whole = ReluSpec((B,) + tuple(s.shape)) if batched else s
+                y = plan(whole, "fwd")({"x": a})["y"]
+            elif isinstance(s, MaxPool2dSpec):
+                y = plan(bspec(s), "fwd")({"x": a})["y"]
+            elif isinstance(s, FlattenSpec):
+                y = a.reshape((B, s.size) if batched else (s.size,))
+            else:
+                raise TypeError(f"no graph route for {type(s).__name__}")
+            env[node.out_edge] = y
+        elif pass_ == "dw":
+            g = env[f"d_{node.out_edge}"]
+            if isinstance(s, Conv2dSpec):
+                dwv = plan(bspec(s), "dw")(
+                    {"x": env[node.in_edge], "dy": g}
+                )["dw"]
+                dw = dwv.sum(axis=0) if batched else dwv
+            elif isinstance(s, MatmulSpec):
+                dw = plan(s, "dw")({"a": env[node.in_edge], "dy": g})["dw"]
+            elif isinstance(s, BiasSpec):
+                dw = plan(s, "dw")({"dy": g.reshape(-1, s.c)})["db"]
+            else:
+                raise TypeError(f"no dW route for {type(s).__name__}")
+            dw = reduce(dw)
+            env[f"d_{node.param}"] = dw
+            if keep_grads:
+                outs[f"d_{node.param}"] = dw
+        elif pass_ == "upd":
+            p = node.param
+            dw = env[f"d_{p}"]
+            u_spec = SgdUpdateSpec(
+                n=dw.size, lr=graph.lr, momentum=graph.momentum
+            )
+            u_in = {"w": j[p].reshape(-1), "dw": dw.reshape(-1)}
+            if graph.momentum:
+                u_in["v"] = j[f"v_{p}"].reshape(-1)
+            u = plan(u_spec, "upd")(u_in)
+            outs[f"{p}_new"] = u["w_new"].reshape(j[p].shape)
+            if graph.momentum:
+                outs[f"v_{p}_new"] = u["v_new"].reshape(j[p].shape)
+        else:  # dx
+            g = env[f"d_{node.out_edge}"]
+            if isinstance(s, Conv2dSpec):
+                g = plan(bspec(s), "dx")({"dy": g, "w": j[node.param]})["dx"]
+            elif isinstance(s, MatmulSpec):
+                g = plan(s, "dx")({"dy": g, "b": j[node.param]})["dx"]
+            elif isinstance(s, ReluSpec):
+                whole = ReluSpec((B,) + tuple(s.shape)) if batched else s
+                g = plan(whole, "dx")({"x": env[node.in_edge], "dy": g})["dx"]
+            elif isinstance(s, MaxPool2dSpec):
+                g = plan(bspec(s), "dx")(
+                    {"x": env[node.in_edge], "dy": g}
+                )["dx"]
+            elif isinstance(s, FlattenSpec):
+                shape = tuple(s.in_shape)
+                g = g.reshape((B,) + shape if batched else shape)
+            # BiasSpec dx: shape-preserving passthrough
+            env[f"d_{node.in_edge}"] = g
+
+    for seg in fusion.segments:
+        if seg.region is None:
+            exec_step(seg.step)
+            continue
+        region = seg.region
+        if region.batch != B:
+            region = dataclasses.replace(region, batch=B)
+        ins = {}
+        for name, is_b in region.inputs:
+            v = env[name] if name in env else j[name]
+            ins[name] = v[None] if (is_b and not batched) else v
+        ro = plan(region, "region")(ins)
+        for name, kind in region.outputs:
+            v = ro[name]
+            if kind == "batched":
+                env[name] = v if batched else v[0]
+            elif name.startswith("d_"):
+                dw = reduce(v)
+                env[name] = dw
+                if keep_grads:
+                    outs[name] = dw
+            else:  # <param>_new / v_<param>_new epilogue results
+                outs[name] = v
+    outs[graph.logits_edge] = env[graph.logits_edge]
+    return outs
+
+
+def _run_pallas_graph_mesh(program, inputs, interpret: bool, cache,
+                           fuse=True):
     """Data-parallel execution of a mesh-sharded train-step program.
 
     The batch shards over a ``(pod, data)`` jax device mesh shaped like the
@@ -594,11 +864,22 @@ def _run_pallas_graph_mesh(program, inputs, interpret: bool, cache):
     n = mesh_meta["n_hmcs"]
     B = graph.batch
     keep_grads = program.meta.get("keep_grads", True)
-    j = {k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()}
+    j = _as_jax_f32(inputs)
     plan = _dispatch_plan(cache, program.design.name, interpret)
 
     if jax.device_count() < n:
-        return _graph_step_local(graph, j, plan, B, keep_grads=keep_grads)
+        fusion = _fusion_for(program, fuse_updates=True) if fuse else None
+        _record_fusion(obs.get_active(), fusion)
+        if fusion is not None and obs_trace.get_active_trace() is None:
+            step = _step_plan(cache, graph, fusion, program.design.name,
+                              interpret, keep_grads=keep_grads)
+            return step(j)
+        return _graph_step_local(graph, j, plan, B, keep_grads=keep_grads,
+                                 fusion=fusion)
+    # inside shard_map the gradient psum must run between dW and the SGD
+    # update, so regions keep the updates as per-node fallback dispatches
+    fusion = _fusion_for(program, fuse_updates=False) if fuse else None
+    _record_fusion(obs.get_active(), fusion)
 
     dp_axes = ("pod", "data")
     mesh = compat.make_mesh((rows, cols), dp_axes)
@@ -620,6 +901,7 @@ def _run_pallas_graph_mesh(program, inputs, interpret: bool, cache):
         return _graph_step_local(
             graph, shard_j, plan, B // n, keep_grads=keep_grads,
             grad_reduce=lambda g: jax.lax.psum(g, dp_axes), batched=True,
+            fusion=fusion,
         )
 
     return compat.shard_map(

@@ -841,6 +841,7 @@ def train_graph(
     program: NtxProgram | None = None,
     registry=None,
     metrics_path=None,
+    fuse: bool = True,
 ) -> dict[str, Any]:
     """Train ``graph`` for ``steps`` through one compiled NtxProgram.
 
@@ -892,17 +893,26 @@ def train_graph(
                         outs = executors.run_reference(program, inputs)
                     elif backend == "pallas":
                         outs = executors.run_pallas(
-                            program, inputs, interpret=interpret, cache=cache
+                            program, inputs, interpret=interpret, cache=cache,
+                            fuse=fuse,
                         )
+                        import jax as _jax
+
+                        # jax dispatch is async: wait for the step's device
+                        # work so the recorded wall is the true step time
+                        _jax.block_until_ready(outs)
                     else:
                         raise ValueError(f"unknown backend {backend!r}")
                 losses.append(
                     softmax_xent_loss(np.asarray(outs[graph.logits_edge]), labels)
                 )
+                # keep updated params as whatever the backend returned (jax
+                # arrays stay on device between pallas steps — no per-step
+                # host round trip); materialized to numpy once after the loop
                 for p in graph.param_shapes():
-                    params[p] = np.asarray(outs[f"{p}_new"], np.float32)
+                    params[p] = outs[f"{p}_new"]
                     if graph.momentum:
-                        params[f"v_{p}"] = np.asarray(outs[f"v_{p}_new"], np.float32)
+                        params[f"v_{p}"] = outs[f"v_{p}_new"]
                 walls.append(_time.perf_counter() - t0)
                 if writer is not None:
                     writer.write({
@@ -914,5 +924,6 @@ def train_graph(
     finally:
         if writer is not None:
             writer.close()
+    params = {k: np.asarray(v, np.float32) for k, v in params.items()}
     return {"program": program, "params": params, "losses": losses,
             "walls": walls, "registry": reg}

@@ -1,0 +1,248 @@
+"""The region fuser: fused Pallas kernels vs the per-node walk vs jax.grad.
+
+The fusion pass must be invisible to numerics: ``run_pallas`` on a fused
+whole-step program has to reproduce ``jax.grad`` + the SGD update to the
+same tolerances as ``tests/test_graph.py``, match the per-node
+``fuse=False`` walk near bit-for-bit, and jit once — region keys included
+— across repeated steps. Tie-breaking subtleties (maxpool gradients route
+to the FIRST maximal tap, like XLA's select-and-scatter) get their own
+case because they only bite on plateaued inputs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.lower import (
+    PlanCache,
+    RegionSpec,
+    lower_training_step,
+    paper_cnn_graph,
+    plan_fusion,
+    run_pallas,
+    run_reference,
+)
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from benchmarks import workloads  # noqa: E402
+from repro.kernels import ref  # noqa: E402
+from repro.lower.rules import (  # noqa: E402
+    BiasSpec,
+    Conv2dSpec,
+    FlattenSpec,
+    MatmulSpec,
+    MaxPool2dSpec,
+    ReluSpec,
+)
+
+WORKLOADS = [
+    "paper_cnn",
+    pytest.param("googlenet", marks=pytest.mark.slow),
+]
+
+
+def _graph_for(name):
+    if name == "paper_cnn":
+        return paper_cnn_graph(batch=4, img=16, lr=0.05, momentum=0.9)
+    return workloads.network_graph(name, batch=2, lr=0.05, momentum=0.0)
+
+
+def _batch_for(graph, seed=0):
+    rng = np.random.RandomState(seed)
+    h, w, c = graph.input_shape
+    x = rng.randn(graph.batch, h, w, c).astype(np.float32)
+    labels = rng.randint(0, graph.loss.classes, graph.batch)
+    onehot = np.eye(graph.loss.classes, dtype=np.float32)[labels]
+    return x, onehot
+
+
+def _jax_forward_graph(graph, p, x):
+    """Any sequential NetworkGraph in plain jax — the autodiff oracle."""
+    h = jnp.asarray(x)
+    for node in graph.nodes:
+        s = node.spec
+        if isinstance(s, Conv2dSpec):
+            h = ref.conv2d_ref(
+                h, p[node.param], stride=s.stride, padding=s.padding
+            )
+        elif isinstance(s, ReluSpec):
+            h = jax.nn.relu(h)
+        elif isinstance(s, MaxPool2dSpec):
+            h = jax.lax.reduce_window(
+                h, -jnp.inf, jax.lax.max,
+                (1, s.window, s.window, 1), (1, s.stride, s.stride, 1),
+                "VALID",
+            )
+        elif isinstance(s, FlattenSpec):
+            h = h.reshape(h.shape[0], -1)
+        elif isinstance(s, MatmulSpec):
+            h = h @ p[node.param]
+        elif isinstance(s, BiasSpec):
+            h = h + p[node.param][None, :]
+        else:  # pragma: no cover - new layer types need an oracle rule
+            raise TypeError(type(s).__name__)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Region formation on the paper CNN
+# ---------------------------------------------------------------------------
+
+
+def test_paper_cnn_fusion_plan_shape():
+    graph = paper_cnn_graph(batch=4, img=16)
+    program = lower_training_step(graph)
+    fusion = plan_fusion(program)
+    # whole forward chain + whole backward chain; only softmax-CE falls back
+    assert fusion.n_regions == 2
+    assert fusion.fallback_steps == ["loss:dx"]
+    assert fusion.coverage >= 0.8
+    labels = [
+        seg.region.label for seg in fusion.segments if seg.region is not None
+    ]
+    assert labels[0].startswith("fused[c1:fwd..")
+    # intermediates stay in scratch: the forward region only outputs what
+    # the backward reads (relu masks / pool+flatten inputs / logits)
+    fwd = next(s.region for s in fusion.segments if s.region is not None)
+    out_names = {n for n, _ in fwd.outputs}
+    assert "a_c1" not in out_names and "a_c2" not in out_names
+
+
+def test_fusion_plan_disables_update_fusion_for_mesh_shards():
+    graph = paper_cnn_graph(batch=4, img=16)
+    program = lower_training_step(graph)
+    fusion = plan_fusion(program, fuse_updates=False)
+    # updates must stay per-node so the gradient psum can run before them
+    assert all(
+        st.pass_ != "upd"
+        for seg in fusion.segments
+        if seg.region is not None
+        for st in seg.region.stages
+    )
+    assert any(s.endswith(":upd") for s in fusion.fallback_steps)
+
+
+# ---------------------------------------------------------------------------
+# Numerics: fused == unfused == reference == jax.grad
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", WORKLOADS)
+def test_fused_step_matches_jax_grad(name):
+    graph = _graph_for(name)
+    program = lower_training_step(graph)
+    params = graph.init_params(seed=1)
+    x, onehot = _batch_for(graph)
+    inputs = {graph.input_edge: x, graph.label_edge: onehot, **params}
+
+    cache = PlanCache()
+    outs = run_pallas(program, inputs, cache=cache, fuse=True)
+
+    def loss_fn(p):
+        z = _jax_forward_graph(graph, p, x)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(z) * onehot, axis=1))
+
+    jp = {
+        k: jnp.asarray(v) for k, v in params.items() if not k.startswith("v_")
+    }
+    grads = jax.grad(loss_fn)(jp)
+    # the googlenet trunk contracts over 25k+ elements per conv tap, so
+    # summation-order noise vs the oracle gets the run_reference band
+    rtol, atol = (2e-3, 1e-4) if name == "googlenet" else (1e-3, 1e-5)
+    z = _jax_forward_graph(graph, jp, x)
+    np.testing.assert_allclose(
+        np.asarray(outs[graph.logits_edge]), np.asarray(z),
+        rtol=1e-4, atol=1e-5,
+    )
+    for p in graph.param_shapes():
+        g = np.asarray(grads[p])
+        np.testing.assert_allclose(
+            np.asarray(outs[f"d_{p}"]), g, rtol=rtol, atol=atol, err_msg=p
+        )
+        if graph.momentum:
+            v_new = graph.momentum * params[f"v_{p}"] + g
+            np.testing.assert_allclose(
+                np.asarray(outs[f"v_{p}_new"]), v_new,
+                rtol=rtol, atol=atol, err_msg=p,
+            )
+        else:
+            v_new = g
+        np.testing.assert_allclose(
+            np.asarray(outs[f"{p}_new"]), params[p] - graph.lr * v_new,
+            rtol=rtol, atol=atol, err_msg=p,
+        )
+
+
+@pytest.mark.parametrize("name", WORKLOADS)
+def test_fused_matches_unfused_and_reference(name):
+    graph = _graph_for(name)
+    program = lower_training_step(graph)
+    params = graph.init_params(seed=2)
+    x, onehot = _batch_for(graph, seed=3)
+    inputs = {graph.input_edge: x, graph.label_edge: onehot, **params}
+
+    cache = PlanCache()
+    fused = run_pallas(program, inputs, cache=cache, fuse=True)
+    unfused = run_pallas(program, inputs, cache=cache, fuse=False)
+    assert set(fused) == set(unfused)
+    for k in fused:
+        np.testing.assert_allclose(
+            np.asarray(fused[k]), np.asarray(unfused[k]),
+            rtol=1e-5, atol=1e-6, err_msg=k,
+        )
+    ref_outs = run_reference(program, inputs)
+    for k in ref_outs:
+        np.testing.assert_allclose(
+            np.asarray(fused[k]), ref_outs[k], rtol=2e-3, atol=1e-5,
+            err_msg=k,
+        )
+
+
+def test_maxpool_grad_tie_breaking_matches_xla():
+    """Plateaued windows: the gradient goes to the FIRST maximal tap."""
+    from repro.kernels.fused import _pool_dx_tile
+    from repro.lower.rules import MaxPool2dSpec as MP
+
+    spec = MP(4, 4, 2)
+    x = jnp.asarray(
+        np.ones((2, 4, 4, 2), np.float32)  # every window is all-ties
+    )
+    g = jnp.asarray(np.random.RandomState(0).randn(2, 2, 2, 2).astype(np.float32))
+
+    def pool(x):
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+
+    _, vjp = jax.vjp(pool, x)
+    want = vjp(g)[0]
+    got = _pool_dx_tile(x, g, spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Plan cache: region keys + the step-level plan jit once, retrace never
+# ---------------------------------------------------------------------------
+
+
+def test_fused_plans_zero_retrace_and_region_keys():
+    graph = paper_cnn_graph(batch=4, img=16)
+    program = lower_training_step(graph)
+    params = graph.init_params(seed=0)
+    x, onehot = _batch_for(graph)
+    inputs = {graph.input_edge: x, graph.label_edge: onehot, **params}
+
+    cache = PlanCache()
+    run_pallas(program, inputs, cache=cache, fuse=True)
+    keys = list(cache._plans)
+    assert any(isinstance(k[0], RegionSpec) for k in keys)
+    assert any(k[0] == "train_step" for k in keys)
+    traces = {k: p.traces for k, p in cache._plans.items()}
+    assert all(t == 1 for t in traces.values())
+
+    hits0 = cache.hits
+    run_pallas(program, inputs, cache=cache, fuse=True)
+    assert {k: p.traces for k, p in cache._plans.items()} == traces
+    assert len(cache._plans) == len(keys)
+    assert cache.hits > hits0
