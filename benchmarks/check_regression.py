@@ -85,6 +85,14 @@ SPECS = [
     MetricSpec("BENCH_mesh.json", "summary.shard_cycles_total", "exact"),
     MetricSpec("BENCH_mesh.json", "summary.link_hops_total", "exact"),
     MetricSpec("BENCH_mesh.json", "summary.link_bytes_total", "model"),
+    # survivability: lose 1 of N cubes (N in {4, 16, 64}) — recovery must
+    # cost at most 2 healthy steps and the survivors must keep >= 90%
+    # parallel efficiency (benchmarks.mesh_bench.recovery_sweep)
+    MetricSpec("BENCH_mesh.json", "summary.recovery_cycles_total", "exact"),
+    MetricSpec("BENCH_mesh.json", "summary.recovery_max_overhead_steps",
+               "bound", limit=2.0),
+    MetricSpec("BENCH_mesh.json", "summary.recovery_min_survivor_eff",
+               "floor", limit=0.9),
     # -- whole-train-step bench (benchmarks.trainstep_bench) ---------------
     MetricSpec("BENCH_trainstep.json", "wall_s", "wall"),
     MetricSpec("BENCH_trainstep.json", "summary.n_commands", "exact"),

@@ -37,6 +37,11 @@ CASES = ((2, 512), (4, 1024), (8, 4096), (16, 8192))
 EFF_FLOOR = 0.95  # the paper's §4.9 bar
 MODEL_TOL = 0.01  # executed vs ntx_model.mesh parallel efficiency
 
+#: Survivability cases: lose 1 of N cubes for N in {4, 16, 64}.
+RECOVERY_CASES = ((2, 512), (4, 1024), (8, 4096))
+RECOVERY_OVERHEAD_CAP = 2.0  # recovery costs <= this many healthy steps
+SURVIVOR_EFF_FLOOR = 0.90  # parallel eff of the N-1 survivors
+
 
 def mesh_executed_sweep(cases=CASES, network="googlenet", n_clusters=16,
                         f_ntx=1.5e9):
@@ -96,6 +101,64 @@ def mesh_executed_sweep(cases=CASES, network="googlenet", n_clusters=16,
     }
 
 
+def recovery_sweep(cases=RECOVERY_CASES, network="googlenet", n_clusters=16,
+                   f_ntx=1.5e9):
+    """Losing 1 of N cubes: modeled recovery cost + survivor efficiency.
+
+    For each mesh the last cube is killed via
+    :func:`repro.lower.reshard_training_step`, the whole-step program is
+    re-partitioned onto the survivors, and :func:`repro.runtime.faults.
+    time_recovery` prices the recovery (detect + restore + replay) in the
+    same event-level link-scheduler currency as the healthy sweep. Gates:
+    recovery costs at most ``RECOVERY_OVERHEAD_CAP`` healthy steps, and
+    the N-1 survivors keep parallel efficiency above
+    ``SURVIVOR_EFF_FLOOR``.
+    """
+    from types import SimpleNamespace
+
+    from repro.lower import reshard_training_step, shard_training_step
+    from repro.runtime.faults import time_recovery
+    from repro.runtime.mesh import time_mesh_step
+
+    from benchmarks.workloads import network_graph
+
+    rows = []
+    effs = []
+    overheads = []
+    cycles_total = 0
+    for side, batch in cases:
+        graph = network_graph(network, batch=batch)
+        healthy = shard_training_step(
+            graph, mesh_shape=(side, side), n_clusters=n_clusters
+        )
+        degraded = reshard_training_step(healthy, side * side - 1)
+        tm_h = time_mesh_step(healthy, n_clusters=n_clusters, f_ntx=f_ntx)
+        # the unsharded reference is the same program for both meshes —
+        # time it once and share the ScheduleResult cycles
+        single = SimpleNamespace(total_cycles=tm_h.single_cycles)
+        tm_d = time_mesh_step(degraded, n_clusters=n_clusters, f_ntx=f_ntx,
+                              single_result=single)
+        rec = time_recovery(healthy, degraded, n_clusters=n_clusters,
+                            f_ntx=f_ntx, single_result=single)
+        effs.append(tm_d.parallel_eff)
+        overheads.append(rec.overhead_steps)
+        cycles_total += rec.cycles(f_ntx)
+        rows.append((
+            f"{side}x{side}-1/b{batch}", degraded.n_alive,
+            rec.t_detect * 1e3, rec.t_restore * 1e3, rec.t_replay * 1e3,
+            rec.overhead_steps, tm_d.parallel_eff,
+        ))
+    return rows, {
+        "recovery_n_cases": len(rows),
+        "recovery_cycles_total": cycles_total,
+        "recovery_max_overhead_steps": max(overheads),
+        "recovery_min_survivor_eff": min(effs),
+        "recovery_overhead_bounded": max(overheads) <= RECOVERY_OVERHEAD_CAP,
+        "survivor_eff_above_floor": min(effs) >= SURVIVOR_EFF_FLOOR,
+        "recovery_covers_three_sizes": len(rows) >= 3,
+    }
+
+
 def write_mesh_trace(path, *, network="googlenet", side=2, batch=8,
                      n_clusters=16) -> str:
     """Merged Perfetto trace for one small mesh step (the CI artifact).
@@ -121,10 +184,11 @@ def write_mesh_trace(path, *, network="googlenet", side=2, batch=8,
 
 
 GATES = ("parallel_eff_above_95pct", "within_1pct_of_model",
-         "four_or_more_sizes")
+         "four_or_more_sizes", "recovery_overhead_bounded",
+         "survivor_eff_above_floor", "recovery_covers_three_sizes")
 
 
-def write_json(rows, summary, wall_s,
+def write_json(rows, summary, wall_s, recovery_rows=(),
                path: str = "artifacts/BENCH_mesh.json") -> str:
     from repro.obs import write_bench_json
 
@@ -135,6 +199,10 @@ def write_json(rows, summary, wall_s,
         "columns": ["mesh/batch", "n_commands", "t_shard_ms",
                     "t_update_ms", "t_ring_ms", "parallel_eff",
                     "model_parallel_eff", "rel_err"],
+        "recovery_rows": [list(r) for r in recovery_rows],
+        "recovery_columns": ["mesh-1/batch", "n_alive", "t_detect_ms",
+                             "t_restore_ms", "t_replay_ms",
+                             "overhead_steps", "survivor_parallel_eff"],
     }, path)
 
 
@@ -149,12 +217,17 @@ def main() -> None:
 
     t0 = time.perf_counter()
     rows, summary = mesh_executed_sweep(network=args.network)
+    rec_rows, rec_summary = recovery_sweep(network=args.network)
+    summary.update(rec_summary)
     wall = time.perf_counter() - t0
     for r in rows:
         print("  ", *(f"{x:.4g}" if isinstance(x, float) else x for x in r))
+    print("  -- recovery (lose 1 of N) --")
+    for r in rec_rows:
+        print("  ", *(f"{x:.4g}" if isinstance(x, float) else x for x in r))
     for k, v in summary.items():
         print(f"   -> {k}: {v}")
-    print("json:", write_json(rows, summary, wall, args.json))
+    print("json:", write_json(rows, summary, wall, rec_rows, args.json))
     if args.trace:
         print("trace:", write_mesh_trace(args.trace, network=args.network))
     failed = [g for g in GATES if not summary.get(g)]

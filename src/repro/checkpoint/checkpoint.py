@@ -6,11 +6,20 @@ Layout:  <dir>/step_<N>/
 
 Guarantees required at 1000-node scale:
   * **atomicity** — written to ``.tmp-step_<N>`` and renamed only when every
-    leaf + manifest is on disk, so a killed writer never leaves a torn
-    checkpoint; restore always picks the newest *complete* step.
-  * **async** — ``save_async`` snapshots to host memory synchronously (cheap)
-    and writes in a background thread, so the train loop is blocked only by
-    the device->host copy, not the filesystem.
+    leaf + manifest is on disk (manifest last, fsynced, directory entry
+    fsynced after the publish rename), so a killed writer never leaves a
+    torn checkpoint that ``restore``/``latest_step`` will pick up.
+  * **validation on read** — a ``step_<N>`` directory only counts as a
+    checkpoint when its manifest parses and every leaf file it names is
+    present with a real ``.npy`` header; anything else (a crash that raced
+    the rename, a truncated disk, manual vandalism) is skipped with a
+    warning and recovery falls back to the next-newest complete step
+    instead of raising mid-recovery.
+  * **async** — ``AsyncCheckpointer`` snapshots to host memory synchronously
+    (cheap) and writes in a background thread; a background failure is
+    re-raised as :class:`CheckpointError` on the next ``save()``/``wait()``
+    (never swallowed), and ``wait(timeout=...)`` bounds shutdown so a hung
+    filesystem cannot deadlock the supervisor.
   * **elastic restore** — leaves are stored as full (unsharded) arrays and
     re-placed with whatever shardings the *restoring* mesh provides, so a job
     can come back on a different device count (runtime/supervisor.py).
@@ -24,6 +33,7 @@ import os
 import re
 import shutil
 import threading
+import warnings
 from pathlib import Path
 
 import jax
@@ -31,6 +41,11 @@ import ml_dtypes
 import numpy as np
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
+_NPY_MAGIC = b"\x93NUMPY"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be written or read back."""
 
 
 def _decode_dtype(arr: np.ndarray, dtype_str: str) -> np.ndarray:
@@ -45,8 +60,30 @@ def _flatten_with_paths(tree):
     return leaves, treedef
 
 
+def _fsync(path: Path) -> None:
+    """Flush one file (or directory entry) to stable storage; best-effort."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save(ckpt_dir, step: int, state, extras: dict | None = None, keep: int = 3):
-    """Synchronous atomic save of a pytree ``state``."""
+    """Synchronous crash-atomic save of a pytree ``state``.
+
+    Everything lands in ``.tmp-step_<N>`` first — leaves, then the manifest
+    (written last and fsynced, so a manifest's presence implies every leaf
+    preceded it) — and one ``os.replace`` publishes the directory. A kill at
+    any instant leaves either the previous checkpoint set untouched plus an
+    ignorable ``.tmp-*`` orphan, or the complete new step; never a torn
+    ``step_<N>`` that :func:`latest_step`/:func:`restore` would pick up.
+    """
     ckpt_dir = Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     tmp = ckpt_dir / f".tmp-step_{step:08d}"
@@ -68,59 +105,78 @@ def save(ckpt_dir, step: int, state, extras: dict | None = None, keep: int = 3):
         "extras": extras or {},
     }
     (tmp / "manifest.json").write_text(json.dumps(manifest))
+    _fsync(tmp / "manifest.json")
+    if final.exists():  # re-saving a step: replace the whole directory
+        shutil.rmtree(final)
     os.replace(tmp, final)  # atomic publish
+    _fsync(ckpt_dir)  # the rename itself reaches stable storage
     _retain(ckpt_dir, keep)
     return final
 
 
-class AsyncCheckpointer:
-    """Snapshot synchronously, write in the background; at most one in flight."""
+def validate_step_dir(d: Path) -> str | None:
+    """Why ``d`` is NOT a complete checkpoint, or None when it is.
 
-    def __init__(self, ckpt_dir, keep: int = 3):
-        self.ckpt_dir = ckpt_dir
-        self.keep = keep
-        self._thread: threading.Thread | None = None
+    Checks the manifest parses with the expected keys and that every leaf
+    file it names exists with a genuine ``.npy`` header — cheap (no array
+    data is read), so recovery can scan a whole checkpoint directory.
+    """
+    mf = Path(d) / "manifest.json"
+    if not mf.exists():
+        return "missing manifest.json"
+    try:
+        manifest = json.loads(mf.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return f"unreadable manifest.json ({e})"
+    for key in ("step", "n_leaves", "shapes", "dtypes"):
+        if key not in manifest:
+            return f"manifest missing {key!r}"
+    try:
+        n = int(manifest["n_leaves"])
+    except (TypeError, ValueError):
+        return "manifest n_leaves is not an integer"
+    for i in range(n):
+        leaf = Path(d) / f"leaf_{i}.npy"
+        try:
+            with open(leaf, "rb") as f:
+                if f.read(len(_NPY_MAGIC)) != _NPY_MAGIC:
+                    return f"leaf_{i}.npy is not a numpy file"
+        except OSError:
+            return f"missing leaf_{i}.npy"
+    return None
 
-    def save(self, step: int, state, extras: dict | None = None):
-        self.wait()
-        # Device->host snapshot happens here (synchronously, consistent view).
-        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
-        self._thread = threading.Thread(
-            target=save, args=(self.ckpt_dir, step, host_state, extras, self.keep), daemon=True
-        )
-        self._thread.start()
 
-    def wait(self):
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+def _step_dirs(ckpt_dir: Path) -> list[tuple[int, Path]]:
+    return sorted(
+        (int(m.group(1)), p)
+        for p in ckpt_dir.iterdir()
+        if (m := _STEP_RE.match(p.name))
+    )
+
+
+def complete_steps(ckpt_dir) -> list[int]:
+    """Validated checkpoint steps, ascending; warns on torn directories."""
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return []
+    out = []
+    for step, p in _step_dirs(ckpt_dir):
+        defect = validate_step_dir(p)
+        if defect is None:
+            out.append(step)
+        else:
+            warnings.warn(
+                f"skipping torn checkpoint {p}: {defect}", stacklevel=2
+            )
+    return out
 
 
 def latest_step(ckpt_dir) -> int | None:
-    ckpt_dir = Path(ckpt_dir)
-    if not ckpt_dir.exists():
-        return None
-    steps = [
-        int(m.group(1))
-        for p in ckpt_dir.iterdir()
-        if (m := _STEP_RE.match(p.name)) and (p / "manifest.json").exists()
-    ]
-    return max(steps) if steps else None
+    steps = complete_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
-def restore(ckpt_dir, template, step: int | None = None, shardings=None):
-    """Restore into the structure of ``template``; optionally re-shard.
-
-    ``shardings``: optional tree (matching template) of NamedShardings — the
-    elastic-restore path: the restoring mesh may differ from the saving mesh.
-    Returns (state, extras).
-    """
-    ckpt_dir = Path(ckpt_dir)
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
-    d = ckpt_dir / f"step_{step:08d}"
+def _load_step(d: Path, template, shardings):
     manifest = json.loads((d / "manifest.json").read_text())
     leaves, treedef = jax.tree_util.tree_flatten(template)
     assert manifest["n_leaves"] == len(leaves), (
@@ -143,6 +199,91 @@ def restore(ckpt_dir, template, step: int | None = None, shardings=None):
     else:
         arrs = [jax.numpy.asarray(l.astype(w.dtype)) for l, w in zip(loaded, leaves)]
     return jax.tree_util.tree_unflatten(treedef, arrs), manifest["extras"]
+
+
+def restore(ckpt_dir, template, step: int | None = None, shardings=None):
+    """Restore into the structure of ``template``; optionally re-shard.
+
+    ``shardings``: optional tree (matching template) of NamedShardings — the
+    elastic-restore path: the restoring mesh may differ from the saving mesh.
+    With ``step=None`` the newest *complete* checkpoint wins; steps whose
+    manifest fails validation — or whose leaves fail to load — are skipped
+    with a warning and recovery falls back to the next-newest, so one torn
+    directory never aborts a restart. An explicit ``step`` that is torn
+    raises :class:`CheckpointError`. Returns (state, extras).
+    """
+    ckpt_dir = Path(ckpt_dir)
+    if step is not None:
+        d = ckpt_dir / f"step_{step:08d}"
+        defect = validate_step_dir(d)
+        if defect is not None:
+            raise CheckpointError(f"checkpoint {d} is torn: {defect}")
+        return _load_step(d, template, shardings)
+    for s in reversed(complete_steps(ckpt_dir)):
+        d = ckpt_dir / f"step_{s:08d}"
+        try:
+            return _load_step(d, template, shardings)
+        # Template mismatches (AssertionError) are caller bugs and propagate;
+        # only data-level corruption past the header check falls back.
+        except (OSError, ValueError, KeyError, json.JSONDecodeError) as e:
+            warnings.warn(
+                f"checkpoint {d} failed to load ({e!r}); "
+                "falling back to the previous step", stacklevel=2,
+            )
+    raise FileNotFoundError(f"no complete checkpoint in {ckpt_dir}")
+
+
+class AsyncCheckpointer:
+    """Snapshot synchronously, write in the background; at most one in flight.
+
+    A failed background save is never swallowed: the exception is captured
+    and re-raised (wrapped in :class:`CheckpointError`) from the NEXT
+    ``save()`` or ``wait()`` call, so the train loop learns its checkpoint
+    cadence is broken instead of crashing later with only stale steps on
+    disk. ``wait(timeout=...)`` returns False if the writer is still running
+    when the timeout expires — supervisor shutdown stays bounded even when
+    the filesystem hangs.
+    """
+
+    def __init__(self, ckpt_dir, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._exc: BaseException | None = None
+
+    def _write(self, step, state, extras):
+        try:
+            save(self.ckpt_dir, step, state, extras, self.keep)
+        except BaseException as e:  # noqa: BLE001 - must cross the thread
+            self._exc = e
+
+    def save(self, step: int, state, extras: dict | None = None):
+        self.wait()
+        # Device->host snapshot happens here (synchronously, consistent view).
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_state, extras), daemon=True
+        )
+        self._thread.start()
+
+    def wait(self, timeout: float | None = None) -> bool:
+        """Join the in-flight save; re-raise its failure if it had one.
+
+        Returns True when no save is left in flight; False when ``timeout``
+        expired with the writer still running (the thread is left alone — a
+        later ``wait()`` can still collect it).
+        """
+        if self._thread is not None:
+            self._thread.join(timeout)
+            if self._thread.is_alive():
+                return False
+            self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise CheckpointError(
+                f"background checkpoint save failed: {exc!r}"
+            ) from exc
+        return True
 
 
 def _retain(ckpt_dir: Path, keep: int):

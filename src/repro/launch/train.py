@@ -334,7 +334,9 @@ def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
                 mesh: str | None = None,
                 metrics: str | None = None,
                 trace: str | None = None,
-                fuse: bool = True) -> dict:
+                fuse: bool = True,
+                chaos: str | None = None,
+                ckpt_dir: str | None = None) -> dict:
     """The ``--backend ntx`` mode: train the paper's small CNN end-to-end
     with every step one compiled :class:`repro.lower.NtxProgram` executed
     through ``run_pallas`` graph execution (cached per-node plans).
@@ -357,8 +359,19 @@ def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
     kernels, one cached step-level plan per program. ``fuse=False``
     (``--no-fuse``) is the escape hatch back to per-node plan dispatch.
 
+    ``chaos`` injects faults (:class:`repro.runtime.faults.ChaosSchedule`
+    grammar, e.g. ``"kill:hmc=1@step=2"``): a killed cube's step is
+    discarded, the program elastically re-shards onto the survivors and
+    the step replays, so the run converges to the same gradients as the
+    healthy run. Any chaos run (including ``"none"``) switches to
+    step-keyed batches — ``batch_fn(i)`` depends only on ``i`` — so a
+    replayed step sees bit-identical data; ``ckpt_dir`` enables the
+    preemption-rewind path (defaults to ``artifacts/ntx_chaos_ckpt``
+    when chaos is on).
+
     Returns the :func:`repro.lower.train_graph` result dict (program,
-    params, losses, per-step walls).
+    params, losses, per-step walls) plus ``"chaos"`` (the controller's
+    report) when chaos was requested.
     """
     from contextlib import nullcontext
 
@@ -408,13 +421,46 @@ def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
                   f"update {tm.t_update*1e3:.3f} ms "
                   f"-> speedup {tm.speedup:.2f}, "
                   f"parallel eff {tm.parallel_eff:.1%}")
-        batch_fn = frequency_band_batches(np.random.RandomState(0), batch, img,
-                                          graph.loss.classes)
+        chaos_ctl = None
+        if chaos is not None:
+            from repro.runtime.faults import ChaosController
+
+            # chaos runs need replayable data: key every batch on the step
+            # alone so a replayed step sees bit-identical images
+            def batch_fn(i):
+                rng = np.random.RandomState(10_000 + i)
+                return frequency_band_batches(rng, batch, img,
+                                              graph.loss.classes)(i)
+
+            chaos_ctl = ChaosController(
+                chaos, sharded=sharded,
+                ckpt_dir=ckpt_dir or "artifacts/ntx_chaos_ckpt",
+                n_clusters=n_clusters,
+            )
+            print(f"chaos: {chaos!r} (ckpt dir "
+                  f"{chaos_ctl.ckpt_dir}, retries "
+                  f"{chaos_ctl.retry.max_retries} @ backoff "
+                  f"{chaos_ctl.retry.delays()})")
+        else:
+            batch_fn = frequency_band_batches(np.random.RandomState(0), batch,
+                                              img, graph.loss.classes)
         cache = PlanCache()
         res = train_graph(graph, steps, batch_fn, program=program,
                           backend="pallas", interpret=interpret,
                           params=graph.init_params(seed=0),
-                          metrics_path=metrics, cache=cache, fuse=fuse)
+                          metrics_path=metrics, cache=cache, fuse=fuse,
+                          chaos=chaos_ctl)
+        if chaos_ctl is not None:
+            rep = res["chaos"] = chaos_ctl.report()
+            if chaos_ctl.sharded is not None:
+                sharded = chaos_ctl.sharded  # trace the surviving mesh
+            for line in rep["events"]:
+                print(f"chaos event: {line}")
+            print(f"chaos report: {rep['remesh_events']} re-shard(s), "
+                  f"{rep['preemptions']} preemption(s), "
+                  f"{rep['straggler_events']} straggler(s), "
+                  f"{rep['recovery_cycles']} modeled recovery cycles, "
+                  f"{rep['alive_hmcs']} cube(s) alive at exit")
         if collector is not None:
             if sharded is not None:
                 collector.add_mesh_step(sharded, n_clusters=n_clusters)
@@ -480,6 +526,20 @@ def _cli():
                          "mesh of HMCs (batch must divide evenly); executes "
                          "data-parallel via shard_map when enough jax "
                          "devices exist and prints the modeled mesh timing")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="ntx backend: inject faults — 'kill:hmc=1@step=2', "
+                         "'straggle:hmc=0,slow=4@step=3', 'preempt@step=5' "
+                         "(join with ';'), or "
+                         "'random:seed=7,p_kill=0.02'. A killed cube's step "
+                         "is discarded, the program re-shards onto the "
+                         "survivors and the step replays; a preemption "
+                         "rewinds to the latest checkpoint. 'none' enables "
+                         "the (step-keyed) chaos data path without faults — "
+                         "the healthy baseline for chaos diffs")
+    ap.add_argument("--chaos-ckpt", default=None, metavar="DIR",
+                    help="ntx backend: checkpoint dir the chaos controller "
+                         "owns (wiped at start; default "
+                         "artifacts/ntx_chaos_ckpt)")
     ap.add_argument("--arch", default="qwen1_5_0_5b")
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-scale config (CPU-friendly)")
@@ -516,7 +576,8 @@ def _cli():
         res = run_ntx_cnn(args.steps, args.batch, args.img,
                           n_clusters=args.offload_clusters, mesh=args.mesh,
                           metrics=args.metrics, trace=args.trace,
-                          fuse=not args.no_fuse)
+                          fuse=not args.no_fuse, chaos=args.chaos,
+                          ckpt_dir=args.chaos_ckpt)
         if len(res["losses"]) >= 3 and not res["losses"][-1] < res["losses"][0]:
             raise SystemExit("ntx CNN training did not decrease the loss")
         return

@@ -58,6 +58,7 @@ from repro.lower.graph import (
 from repro.lower.mesh import (
     ShardedTrainStep,
     parse_mesh,
+    reshard_training_step,
     shard_training_step,
 )
 from repro.lower.ir import (
@@ -115,6 +116,7 @@ __all__ = [
     "frequency_band_batches",
     "parse_mesh",
     "plan_fusion",
+    "reshard_training_step",
     "shard_training_step",
     "lower",
     "lower_layer",

@@ -851,6 +851,13 @@ def _run_pallas_graph_mesh(program, inputs, interpret: bool, cache,
     devices than HMCs the walk runs unsharded on the full batch — the same
     numerics, minus the parallelism (the command-level program is
     unaffected; only this executor degrades).
+
+    Elastically re-sharded programs (``mesh_meta["alive"]`` set by
+    :func:`repro.lower.mesh.reshard_training_step`) re-enter ``shard_map``
+    over a SHRUNKEN ``(1, n_alive)`` jax mesh — the survivors' batch
+    shards, with the psum spanning only the shrunken mesh. When the batch
+    no longer divides the survivor count (uneven re-chunking) or too few
+    jax devices remain, the same single-device walk takes over.
     """
     import jax
     import jax.numpy as jnp
@@ -862,12 +869,14 @@ def _run_pallas_graph_mesh(program, inputs, interpret: bool, cache,
     mesh_meta = program.meta["mesh"]
     rows, cols = mesh_meta["shape"]
     n = mesh_meta["n_hmcs"]
+    alive = mesh_meta.get("alive")
+    n_alive = len(alive) if alive is not None else n
     B = graph.batch
     keep_grads = program.meta.get("keep_grads", True)
     j = _as_jax_f32(inputs)
     plan = _dispatch_plan(cache, program.design.name, interpret)
 
-    if jax.device_count() < n:
+    if jax.device_count() < n_alive or B % n_alive:
         fusion = _fusion_for(program, fuse_updates=True) if fuse else None
         _record_fusion(obs.get_active(), fusion)
         if fusion is not None and obs_trace.get_active_trace() is None:
@@ -882,7 +891,10 @@ def _run_pallas_graph_mesh(program, inputs, interpret: bool, cache,
     _record_fusion(obs.get_active(), fusion)
 
     dp_axes = ("pod", "data")
-    mesh = compat.make_mesh((rows, cols), dp_axes)
+    # a degraded mesh no longer matches the physical (rows, cols) grid:
+    # lay the survivors out along one axis of a shrunken jax mesh
+    jax_shape = (rows, cols) if n_alive == n else (1, n_alive)
+    mesh = compat.make_mesh(jax_shape, dp_axes)
     sharded_edges = {graph.input_edge, graph.label_edge}
 
     def batch_spec(name):
@@ -899,7 +911,7 @@ def _run_pallas_graph_mesh(program, inputs, interpret: bool, cache,
 
     def per_shard(shard_j):
         return _graph_step_local(
-            graph, shard_j, plan, B // n, keep_grads=keep_grads,
+            graph, shard_j, plan, B // n_alive, keep_grads=keep_grads,
             grad_reduce=lambda g: jax.lax.psum(g, dp_axes), batched=True,
             fusion=fusion,
         )

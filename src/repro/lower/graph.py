@@ -842,6 +842,7 @@ def train_graph(
     registry=None,
     metrics_path=None,
     fuse: bool = True,
+    chaos=None,
 ) -> dict[str, Any]:
     """Train ``graph`` for ``steps`` through one compiled NtxProgram.
 
@@ -856,6 +857,14 @@ def train_graph(
     totals equal the program's closed-form counts. ``metrics_path`` streams
     one JSONL record per step (loss, wall seconds, the step's counter
     totals).
+
+    ``chaos`` (a :class:`repro.runtime.faults.ChaosController`) injects
+    faults: each executed step is intercepted BEFORE its outputs commit,
+    so a cube kill discards the step, swaps in the elastically re-sharded
+    program and replays it, and a preemption rewinds to the latest
+    checkpoint — gradients match the healthy run because partial results
+    never commit. Replayed steps re-enter ``batch_fn(i)`` at the same
+    ``i`` (the (seed, step) data contract makes the stream bit-identical).
     """
     import time as _time
     from contextlib import nullcontext
@@ -880,7 +889,10 @@ def train_graph(
     )
     try:
         with install:
-            for i in range(steps):
+            if chaos is not None:
+                program = chaos.start(program, params)
+            i = 0
+            while i < steps:
                 t0 = _time.perf_counter()
                 x, labels = batch_fn(i)
                 inputs = {graph.input_edge: np.asarray(x, np.float32),
@@ -903,6 +915,19 @@ def train_graph(
                         _jax.block_until_ready(outs)
                     else:
                         raise ValueError(f"unknown backend {backend!r}")
+                if chaos is not None:
+                    action = chaos.intercept(i, outs, params)
+                    if action is not None:
+                        # the step is discarded before commit: swap in the
+                        # re-sharded program / rewound params and replay
+                        if action.program is not None:
+                            program = action.program
+                        if action.params is not None:
+                            params = dict(action.params)
+                        del losses[action.resume_step:]
+                        del walls[action.resume_step:]
+                        i = action.resume_step
+                        continue
                 losses.append(
                     softmax_xent_loss(np.asarray(outs[graph.logits_edge]), labels)
                 )
@@ -921,6 +946,9 @@ def train_graph(
                         "wall_s": walls[-1],
                         "counters": reg.totals(f"step{i}/") if reg is not None else {},
                     })
+                if chaos is not None:
+                    chaos.committed(i, params)
+                i += 1
     finally:
         if writer is not None:
             writer.close()

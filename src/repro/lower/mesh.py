@@ -205,6 +205,9 @@ class ShardedTrainStep:
     ``program`` is the combined command stream (bit-identical to the
     unsharded step under ``run_reference``); ``hmc_of_block[i]`` says which
     cube issues ``program.blocks[i]`` (:data:`ALL_HMCS` = every cube).
+    ``alive`` is the ordered tuple of surviving cube ids after an elastic
+    re-shard (:func:`reshard_training_step`); ``None`` means every cube in
+    the physical mesh is healthy.
     """
 
     graph: NetworkGraph
@@ -212,14 +215,29 @@ class ShardedTrainStep:
     program: NtxProgram
     base_program: NtxProgram
     hmc_of_block: list[int]
+    alive: tuple[int, ...] | None = None
 
     @property
     def n_hmcs(self) -> int:
+        """Cubes in the *physical* mesh (dead ones included)."""
         return self.mesh_shape[0] * self.mesh_shape[1]
 
     @property
+    def alive_hmcs(self) -> tuple[int, ...]:
+        return self.alive if self.alive is not None else tuple(range(self.n_hmcs))
+
+    @property
+    def n_alive(self) -> int:
+        return len(self.alive_hmcs)
+
+    @property
+    def failed_hmcs(self) -> tuple[int, ...]:
+        return tuple(sorted(set(range(self.n_hmcs)) - set(self.alive_hmcs)))
+
+    @property
     def shard_batch(self) -> int:
-        return self.graph.batch // self.n_hmcs
+        """Images per surviving cube (the largest shard when uneven)."""
+        return -(-self.graph.batch // self.n_alive)
 
     @property
     def allreduce_bytes(self) -> float:
@@ -237,6 +255,10 @@ class ShardedTrainStep:
         """
         if not 0 <= hmc < self.n_hmcs:
             raise ValueError(f"hmc {hmc} outside mesh {self.mesh_shape}")
+        if hmc not in self.alive_hmcs:
+            raise ValueError(
+                f"hmc {hmc} has failed; survivors are {self.alive_hmcs}"
+            )
         blocks = [
             b for b, h in zip(self.program.blocks, self.hmc_of_block)
             if h == hmc or h == ALL_HMCS
@@ -298,66 +320,7 @@ def shard_training_step(
             graph, design=design, n_clusters=n_clusters, keep_grads=keep_grads
         )
 
-    params = set(graph.param_shapes())
-    grad_regions = {f"d_{p}" for p in params}
-    new_regions = {f"{p}_new" for p in params} | {f"v_{p}_new" for p in params}
-    param_of_new = {f"{p}_new": p for p in params}
-
-    blocks: list[CommandBlock] = []
-    hmc_of: list[int] = []
-
-    def emit(piece: CommandBlock, hmc: int) -> None:
-        blocks.append(piece)
-        hmc_of.append(hmc)
-
-    def emit_split(pieces: list[CommandBlock], retag: str | None = None) -> None:
-        if len(pieces) == 1:
-            b = pieces[0]
-            tiny = b.template.total_iterations <= _TINY_ITERS and b.n_commands == 1
-            emit(b, ALL_HMCS if tiny else 0)
-            return
-        for i, b in enumerate(pieces):
-            if retag:
-                b = replace(b, tag=f"{retag}:{b.tag}[{i}]")
-            # pieces < n only when the split dim had fewer iterations than
-            # HMCs; owners then cover a prefix of the mesh.
-            emit(b, i % n)
-
-    def output_split(b: CommandBlock) -> list[CommandBlock]:
-        # Reduction/update blocks keep every reduction dim inside the
-        # template (the lowering enforces usable >= n_red), so any driver
-        # rep level is a pure output dim: rep-split and template-split are
-        # both contiguous output-chunk (reduce-scatter) splits.
-        return split_block_reps(b, n) if b.reps else split_block_template(b, n)
-
-    for block in program.blocks:
-        spillage = block.tag.startswith(("spill:", "fill:"))
-        is_reduce = not spillage and any(w in grad_regions for w in block.writes)
-        is_update = not spillage and any(w in new_regions for w in block.writes)
-        if is_reduce:
-            # cross-batch gradient reduction: output-chunk split ==
-            # reduce-scatter. (Batched conv per-image dW replica writes
-            # target the ``<node>.dwb`` staging region, not ``d_<param>``,
-            # and take the batch split below — they are shard-local.)
-            emit_split(output_split(block), retag="allreduce:reduce")
-            continue
-        if is_update:
-            emit_split(output_split(block), retag="allreduce:update")
-            # after the *parameter* update (not the momentum block), each
-            # owner broadcasts its updated chunk to the other replicas
-            wn = next((w for w in block.writes if w in param_of_new), None)
-            if wn is not None:
-                r = program.regions[wn]
-                start = 0
-                for c, sz in enumerate(_chunk_sizes(r.size, n)):
-                    if n > 1:
-                        emit(_bcast_block(r, start, sz, c, n), c)
-                    start += sz
-            continue
-        if block.reps:
-            emit_split(split_block_reps(block, n))
-        else:
-            emit_split(split_block_template(block, n))
+    blocks, hmc_of = _split_program_onto(program, graph, tuple(range(n)))
 
     combined = NtxProgram(
         name=f"{program.name}:mesh{rows}x{cols}",
@@ -390,3 +353,150 @@ def shard_training_step(
             reg.inc("epilogue_blocks", len(sharded.epilogue_blocks()))
             reg.inc("allreduce_bytes", sharded.allreduce_bytes)
     return sharded
+
+
+def _split_program_onto(
+    program: NtxProgram, graph: NetworkGraph, owners: tuple[int, ...]
+) -> tuple[list[CommandBlock], list[int]]:
+    """Partition the unsharded step program over the cubes in ``owners``.
+
+    The shared core of :func:`shard_training_step` (owners = the whole
+    mesh) and :func:`reshard_training_step` (owners = the survivors).
+    ``len(owners)`` sets the number of batch shards / reduce-scatter chunks;
+    the owner *values* are the physical cube ids the pieces land on, so a
+    degraded mesh re-partitions the exact same command stream onto fewer
+    cubes — concatenation order (and therefore ``run_reference`` output) is
+    unchanged by construction.
+    """
+    parts = len(owners)
+    params = set(graph.param_shapes())
+    grad_regions = {f"d_{p}" for p in params}
+    new_regions = {f"{p}_new" for p in params} | {f"v_{p}_new" for p in params}
+    param_of_new = {f"{p}_new": p for p in params}
+
+    blocks: list[CommandBlock] = []
+    hmc_of: list[int] = []
+
+    def emit(piece: CommandBlock, hmc: int) -> None:
+        blocks.append(piece)
+        hmc_of.append(hmc)
+
+    def emit_split(pieces: list[CommandBlock], retag: str | None = None) -> None:
+        if len(pieces) == 1:
+            b = pieces[0]
+            tiny = b.template.total_iterations <= _TINY_ITERS and b.n_commands == 1
+            emit(b, ALL_HMCS if tiny else owners[0])
+            return
+        for i, b in enumerate(pieces):
+            if retag:
+                b = replace(b, tag=f"{retag}:{b.tag}[{i}]")
+            # pieces < parts only when the split dim had fewer iterations
+            # than cubes; owners then cover a prefix of the survivors.
+            emit(b, owners[i % parts])
+
+    def output_split(b: CommandBlock) -> list[CommandBlock]:
+        # Reduction/update blocks keep every reduction dim inside the
+        # template (the lowering enforces usable >= n_red), so any driver
+        # rep level is a pure output dim: rep-split and template-split are
+        # both contiguous output-chunk (reduce-scatter) splits.
+        return (
+            split_block_reps(b, parts) if b.reps else split_block_template(b, parts)
+        )
+
+    for block in program.blocks:
+        spillage = block.tag.startswith(("spill:", "fill:"))
+        is_reduce = not spillage and any(w in grad_regions for w in block.writes)
+        is_update = not spillage and any(w in new_regions for w in block.writes)
+        if is_reduce:
+            # cross-batch gradient reduction: output-chunk split ==
+            # reduce-scatter. (Batched conv per-image dW replica writes
+            # target the ``<node>.dwb`` staging region, not ``d_<param>``,
+            # and take the batch split below — they are shard-local.)
+            emit_split(output_split(block), retag="allreduce:reduce")
+            continue
+        if is_update:
+            emit_split(output_split(block), retag="allreduce:update")
+            # after the *parameter* update (not the momentum block), each
+            # owner broadcasts its updated chunk to the other replicas
+            wn = next((w for w in block.writes if w in param_of_new), None)
+            if wn is not None:
+                r = program.regions[wn]
+                start = 0
+                for c, sz in enumerate(_chunk_sizes(r.size, parts)):
+                    if parts > 1:
+                        emit(_bcast_block(r, start, sz, owners[c], parts), owners[c])
+                    start += sz
+            continue
+        if block.reps:
+            emit_split(split_block_reps(block, parts))
+        else:
+            emit_split(split_block_template(block, parts))
+
+    return blocks, hmc_of
+
+
+def reshard_training_step(
+    sharded: ShardedTrainStep, failed: int | tuple[int, ...] | list[int]
+) -> ShardedTrainStep:
+    """Elastic re-shard after cube loss: same step, surviving cubes only.
+
+    Re-partitions the *unsharded* base program onto the cubes that are
+    still alive — batch shards, reduce-scatter chunks, ZeRO update chunks
+    and the allgather epilogue are all re-chunked for ``n_alive`` owners —
+    so ``run_reference(resharded.program)`` stays bit-identical to the
+    unsharded step (the command stream is re-grouped, never re-ordered or
+    re-rounded). An uneven batch is allowed on the degraded mesh: the
+    remainder spreads over the first survivors (:func:`_chunk_sizes`),
+    matching how ``run_pallas`` falls back to the single-device walk when
+    the shrunken jax mesh can't take an uneven split.
+
+    ``failed`` names physical cube ids; cubes already dead in ``sharded``
+    stay dead (failures accumulate across successive re-shards).
+    """
+    if isinstance(failed, int):
+        failed = (failed,)
+    dead = set(sharded.failed_hmcs) | {int(h) for h in failed}
+    bad = dead - set(range(sharded.n_hmcs))
+    if bad:
+        raise ValueError(f"failed cubes {sorted(bad)} outside mesh {sharded.mesh_shape}")
+    alive = tuple(h for h in range(sharded.n_hmcs) if h not in dead)
+    if not alive:
+        raise ValueError(f"no surviving HMCs in mesh {sharded.mesh_shape}")
+
+    program = sharded.base_program
+    rows, cols = sharded.mesh_shape
+    blocks, hmc_of = _split_program_onto(program, sharded.graph, alive)
+    combined = NtxProgram(
+        name=f"{program.name}:mesh{rows}x{cols}:alive{len(alive)}",
+        blocks=blocks,
+        regions=program.regions,
+        design=program.design,
+        meta={
+            **program.meta,
+            "mesh": {
+                "shape": (rows, cols),
+                "n_hmcs": rows * cols,
+                "alive": list(alive),
+                "failed": sorted(dead),
+                "shard_batch": -(-sharded.graph.batch // len(alive)),
+            },
+        },
+    )
+    out = ShardedTrainStep(
+        graph=sharded.graph,
+        mesh_shape=(rows, cols),
+        program=combined,
+        base_program=program,
+        hmc_of_block=hmc_of,
+        alive=alive,
+    )
+    from repro.obs import counters as obs
+
+    reg = obs.get_active()
+    if reg is not None:
+        with reg.scope("reshard"):
+            reg.inc("programs", 1)
+            reg.inc("failed_hmcs", len(dead))
+            reg.inc("alive_hmcs", len(alive))
+            reg.inc("epilogue_blocks", len(out.epilogue_blocks()))
+    return out

@@ -266,7 +266,8 @@ class TraceCollector:
         from repro.runtime import scheduler as rt_sched
         from repro.runtime.mesh import LinkSchedule, MeshInterconnect
 
-        shard = sharded.shard_program(0)
+        lead = sharded.alive_hmcs[0]
+        shard = sharded.shard_program(lead)
         if engine is None:
             engine = (
                 "event"
@@ -279,17 +280,46 @@ class TraceCollector:
         result = sched.schedule_program(shard, engine=engine)
         rows, cols = sharded.mesh_shape
         exec_events = self.add_cluster_lanes(
-            shard, result, n_clusters, pid="hmc0"
+            shard, result, n_clusters, pid=f"hmc{lead}"
         )
-        if sharded.n_hmcs > 1:
-            upd = MeshInterconnect(rows, cols).systolic_update(
-                sharded.allreduce_bytes
-            )
+        if sharded.n_alive > 1:
+            # degraded meshes exchange over the hole-routing survivor ring
+            net = MeshInterconnect(rows, cols, failed=sharded.failed_hmcs)
+            upd = (net.ring_allreduce(sharded.allreduce_bytes)
+                   if sharded.failed_hmcs
+                   else net.systolic_update(sharded.allreduce_bytes))
         else:
             upd = LinkSchedule()
         link_events = self.add_link_lanes(upd)
         self.link_flows(exec_events, link_events)
         return result, upd
+
+    def add_recovery(self, step, event, rec, degraded) -> None:
+        """Detect -> restore -> replay spans for one survived fault.
+
+        ``event`` is the :class:`repro.runtime.faults.FaultEvent`, ``rec``
+        its :class:`~repro.runtime.faults.RecoveryTiming`, ``degraded`` the
+        re-sharded step. Rendered on a dedicated ``recovery`` process so
+        the cost sits next to the steady-state lanes in the same trace.
+        """
+        t0 = 0.0
+        spans = (
+            (f"detect:{event.describe()}", rec.t_detect),
+            ("restore:params", rec.t_restore),
+            (f"replay:step{step}", rec.t_replay),
+        )
+        for name, dt in spans:
+            self.events.append({
+                "name": name, "cat": "recovery", "ph": "X",
+                "pid": "recovery", "tid": f"step{step}",
+                "ts": t0 * 1e6, "dur": max(dt * 1e6, 0.001),
+                "args": {
+                    "alive": degraded.n_alive,
+                    "failed": list(degraded.failed_hmcs),
+                    "recovery_cycles": rec.cycles(self.f_ntx),
+                },
+            })
+            t0 += dt
 
     # -- export -------------------------------------------------------------
 

@@ -11,10 +11,15 @@ The asynchronous near-memory offload subsystem (paper §2.2/§3.1):
   the analytical model in ``benchmarks/ntx_model.py``.
 - :mod:`repro.runtime.mesh`      — the inter-HMC serial-link layer (§4.9):
   per-link transfer scheduling with congestion, the 4-pass systolic weight
-  update (eqs. 14-15), and :func:`~repro.runtime.mesh.time_mesh_step` over
-  sharded train-step programs.
+  update (eqs. 14-15), failed-cube degradation (survivor-ring allreduce
+  routing around dead cubes), and :func:`~repro.runtime.mesh.time_mesh_step`
+  over sharded train-step programs.
+- :mod:`repro.runtime.faults`    — deterministic fault injection: scripted
+  and seeded chaos schedules, bounded-retry backoff, modeled recovery cost
+  (:func:`~repro.runtime.faults.time_recovery`) and the train-loop
+  :class:`~repro.runtime.faults.ChaosController`.
 - :mod:`repro.runtime.supervisor` — fault-tolerant training supervisor
   (imported lazily: it pulls in jax).
 """
 
-from repro.runtime import cmdqueue, dma, mesh, scheduler  # noqa: F401
+from repro.runtime import cmdqueue, dma, faults, mesh, scheduler  # noqa: F401

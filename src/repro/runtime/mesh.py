@@ -76,26 +76,57 @@ class LinkSchedule:
 
 
 class MeshInterconnect:
-    """An RxC mesh of HMCs joined by directed nearest-neighbour links."""
+    """An RxC mesh of HMCs joined by directed nearest-neighbour links.
+
+    ``failed`` marks dead cubes (flat row-major ids or (r, c) coords): a
+    dead cube's serial links die with it, so transfers touching it are
+    rejected, the systolic update is unavailable, and the degraded mesh
+    falls back to a survivor ring that routes *around* the holes
+    (:meth:`ring_allreduce`).
+    """
 
     def __init__(self, rows: int, cols: int, *,
-                 link_bw: float = LINK_BW, hop_latency: float = HOP_LATENCY):
+                 link_bw: float = LINK_BW, hop_latency: float = HOP_LATENCY,
+                 failed=()):
         if rows < 1 or cols < 1:
             raise ValueError(f"degenerate mesh {rows}x{cols}")
         self.rows = rows
         self.cols = cols
         self.link_bw = link_bw
         self.hop_latency = hop_latency
+        self.failed: set[tuple[int, int]] = set()
+        for node in failed:
+            self.fail(node)
 
     @property
     def n_hmcs(self) -> int:
         return self.rows * self.cols
+
+    def _coord(self, node) -> tuple[int, int]:
+        """Flat row-major cube id -> (r, c); coords pass through."""
+        if isinstance(node, tuple):
+            return node
+        return divmod(int(node), self.cols)
+
+    def fail(self, node) -> None:
+        """Mark a cube dead (flat id or (r, c)); its four links die too."""
+        r, c = self._coord(node)
+        if not (0 <= r < self.rows and 0 <= c < self.cols):
+            raise ValueError(f"node {(r, c)} outside {self.rows}x{self.cols}")
+        self.failed.add((r, c))
+
+    @property
+    def alive_nodes(self) -> list[tuple[int, int]]:
+        return [(r, c) for r in range(self.rows) for c in range(self.cols)
+                if (r, c) not in self.failed]
 
     def _check_link(self, link) -> None:
         (r0, c0), (r1, c1) = link
         for r, c in ((r0, c0), (r1, c1)):
             if not (0 <= r < self.rows and 0 <= c < self.cols):
                 raise ValueError(f"node {(r, c)} outside {self.rows}x{self.cols}")
+            if (r, c) in self.failed:
+                raise ValueError(f"link {link} touches failed cube {(r, c)}")
         if abs(r0 - r1) + abs(c0 - c1) != 1:
             raise ValueError(f"{link} is not a nearest-neighbour link")
 
@@ -165,6 +196,11 @@ class MeshInterconnect:
         :class:`LinkTransfer`s, so a different embedding (or a busy mesh)
         shows up as congestion, not as a changed formula.
         """
+        if self.failed:
+            raise ValueError(
+                "systolic update needs every line intact; a degraded mesh "
+                "allreduces over the survivor ring (ring_allreduce)"
+            )
         transfers: list[LinkTransfer] = []
         t0 = 0.0
         for axis, reverse, tag in ((0, False, "reduce_v"), (1, False, "reduce_h"),
@@ -177,9 +213,12 @@ class MeshInterconnect:
         return self.schedule(transfers)
 
     def update_time(self, weight_bytes: float) -> float:
-        """Eq. (15): the 4-pass systolic update, from the link schedule."""
-        if self.n_hmcs == 1:
+        """The weight-exchange time: eq. (15) systolic on a healthy mesh,
+        the survivor-ring allreduce once any cube has failed."""
+        if len(self.alive_nodes) <= 1:
             return 0.0
+        if self.failed:
+            return self.ring_allreduce(weight_bytes).makespan
         return self.systolic_update(weight_bytes).makespan
 
     # -- the chunked ring alternative ----------------------------------------
@@ -191,14 +230,17 @@ class MeshInterconnect:
         embedding uses every mesh link at most once per direction, so the
         steps themselves are congestion-free and the schedule time is
         ``2 (n-1) (num_bytes / (n * link_bw) + hop)``.
+
+        On a degraded mesh the ring is the *survivor* snake: dead cubes
+        drop out, and ring edges whose snake neighbours are no longer
+        adjacent route store-and-forward around the holes (BFS over alive
+        cubes) — recovery cost appears as extra hops and congestion, not a
+        changed formula.
         """
-        n = self.n_hmcs
-        if n == 1:
+        nodes = self._snake_nodes()
+        n = len(nodes)
+        if n <= 1:
             return LinkSchedule()
-        nodes = []
-        for r in range(self.rows):
-            cs = range(self.cols) if r % 2 == 0 else range(self.cols - 1, -1, -1)
-            nodes += [(r, c) for c in cs]
         chunk = num_bytes / n
         transfers = []
         t0 = 0.0
@@ -208,12 +250,13 @@ class MeshInterconnect:
             for i in range(n):
                 a, b = nodes[i], nodes[(i + 1) % n]
                 if abs(a[0] - b[0]) + abs(a[1] - b[1]) != 1:
-                    # the ring's wrap edge is not a mesh link: route it
-                    # store-and-forward through intermediate cubes (hop j
-                    # starts once hop j-1 delivered). The wrap's latency
-                    # stretches the ring past the single-hop floor, and on
-                    # a busy mesh its links queue like any other transfer.
-                    path = _route(a, b)
+                    # the ring's wrap edge (or a hole the snake skips) is
+                    # not a mesh link: route it store-and-forward through
+                    # intermediate cubes (hop j starts once hop j-1
+                    # delivered). The detour's latency stretches the ring
+                    # past the single-hop floor, and on a busy mesh its
+                    # links queue like any other transfer.
+                    path = self._route_around(a, b)
                     for hop_i, (u, v) in enumerate(zip(path, path[1:])):
                         transfers.append(LinkTransfer(
                             (u, v), chunk,
@@ -229,6 +272,49 @@ class MeshInterconnect:
 
     def ring_allreduce_time(self, num_bytes: float) -> float:
         return self.ring_allreduce(num_bytes).makespan
+
+    def _snake_nodes(self) -> list[tuple[int, int]]:
+        """The boustrophedon ring order, dead cubes skipped."""
+        nodes = []
+        for r in range(self.rows):
+            cs = range(self.cols) if r % 2 == 0 else range(self.cols - 1, -1, -1)
+            nodes += [(r, c) for c in cs if (r, c) not in self.failed]
+        return nodes
+
+    def _route_around(self, a: tuple[int, int], b: tuple[int, int]
+                      ) -> list[tuple[int, int]]:
+        """A multi-hop path from ``a`` to ``b`` avoiding failed cubes.
+
+        Dimension-ordered (row-first) when that path is clear — identical
+        to the healthy wrap route — else shortest path by BFS over the
+        survivors. Raises when the failures partition the mesh.
+        """
+        path = _route(a, b)
+        if not self.failed or all(p not in self.failed for p in path):
+            return path
+        from collections import deque
+
+        prev: dict[tuple[int, int], tuple[int, int] | None] = {a: None}
+        q = deque([a])
+        while q:
+            u = q.popleft()
+            if u == b:
+                break
+            r, c = u
+            for v in ((r + 1, c), (r - 1, c), (r, c + 1), (r, c - 1)):
+                if (0 <= v[0] < self.rows and 0 <= v[1] < self.cols
+                        and v not in self.failed and v not in prev):
+                    prev[v] = u
+                    q.append(v)
+        if b not in prev:
+            raise ValueError(
+                f"mesh partitioned: no route {a}->{b} around failed cubes "
+                f"{sorted(self.failed)}"
+            )
+        out = [b]
+        while out[-1] != a:
+            out.append(prev[out[-1]])
+        return out[::-1]
 
 
 def _route(a: tuple[int, int], b: tuple[int, int]) -> list[tuple[int, int]]:
@@ -286,11 +372,16 @@ class MeshStepTiming:
     n_hmcs: int
     batch: int
     t_shard: float  # s: one cube's shard program (compute + spill DMA)
-    t_update: float  # s: the 4-pass link exchange (eq. 15)
+    t_update: float  # s: the link exchange (eq. 15, or survivor ring)
     t_single: float  # s: the unsharded step on one cube
     shard_cycles: int
     single_cycles: int
     link_congestion: float  # s queued on busy links during the update
+    alive_hmcs: int = 0  # surviving cubes; 0 = every cube healthy
+
+    @property
+    def n_alive(self) -> int:
+        return self.alive_hmcs or self.n_hmcs
 
     @property
     def t_step(self) -> float:
@@ -302,7 +393,8 @@ class MeshStepTiming:
 
     @property
     def parallel_eff(self) -> float:
-        return self.speedup / self.n_hmcs
+        """Speedup per *surviving* cube — how well the survivors are used."""
+        return self.speedup / self.n_alive
 
     @property
     def t_image(self) -> float:
@@ -313,6 +405,7 @@ class MeshStepTiming:
         return {
             "mesh": f"{self.mesh_shape[0]}x{self.mesh_shape[1]}",
             "n_hmcs": self.n_hmcs,
+            "n_alive": self.n_alive,
             "batch": self.batch,
             "t_shard_ms": self.t_shard * 1e3,
             "t_update_ms": self.t_update * 1e3,
@@ -363,13 +456,17 @@ def time_mesh_step(
         return sched.schedule_program(program, engine=engine,
                                       exec_cycles=exec_cycles)
 
-    shard_res = timed(sharded.shard_program(0))
+    shard_res = timed(sharded.shard_program(sharded.alive_hmcs[0]))
     if single_result is None:
         single_result = timed(sharded.base_program)
     rows, cols = sharded.mesh_shape
-    net = MeshInterconnect(rows, cols)
-    if sharded.n_hmcs > 1:
-        upd = net.systolic_update(sharded.allreduce_bytes)
+    net = MeshInterconnect(rows, cols, failed=sharded.failed_hmcs)
+    if sharded.n_alive > 1:
+        # a degraded mesh can't run the systolic lines through a dead
+        # cube: the survivors fall back to the hole-routing ring
+        upd = (net.ring_allreduce(sharded.allreduce_bytes)
+               if sharded.failed_hmcs
+               else net.systolic_update(sharded.allreduce_bytes))
         t_update, congestion = upd.makespan, upd.congestion_time
         from repro.obs import counters as obs
 
@@ -386,6 +483,7 @@ def time_mesh_step(
         shard_cycles=shard_res.total_cycles,
         single_cycles=single_result.total_cycles,
         link_congestion=congestion,
+        alive_hmcs=sharded.n_alive,
     )
 
 

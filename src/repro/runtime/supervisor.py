@@ -32,6 +32,7 @@ import jax
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.core.systolic import mesh_update_time_model
+from repro.runtime.faults import RetryPolicy
 
 
 class SimulatedFailure(RuntimeError):
@@ -81,7 +82,9 @@ class SupervisorReport:
     steps_run: int = 0
     restarts: int = 0
     straggler_events: int = 0
+    redispatches: int = 0
     remesh_events: int = 0
+    backoffs: list = field(default_factory=list)  # seconds slept per retry
     log: list = field(default_factory=list)
 
 
@@ -102,6 +105,9 @@ class Supervisor:
         state_shardings_fn=None,  # (state_template, mesh) -> shardings tree
         registry=None,  # repro.obs.CounterRegistry (checkpointed with state)
         metrics_path=None,  # per-step metrics JSONL (repro.obs.report schema)
+        retry: RetryPolicy | None = None,  # bounded restart backoff schedule
+        sleep_fn=time.sleep,  # injectable for tests (no real sleeping)
+        redispatch: bool = True,  # re-dispatch straggler steps to a backup
     ):
         self.make_step = make_step
         self.init_state = init_state
@@ -116,6 +122,9 @@ class Supervisor:
         self.report = SupervisorReport()
         self.registry = registry
         self.metrics_path = metrics_path
+        self.retry = retry or RetryPolicy()
+        self.sleep_fn = sleep_fn
+        self.redispatch = redispatch
 
     def _restore_or_init(self, mesh):
         state = self.init_state(mesh)
@@ -161,8 +170,24 @@ class Supervisor:
                 if writer is not None:
                     writer.close()
 
+    def _redispatch(self, step, reg, why: str):
+        """Deadline re-dispatch: hand the straggler's step to a backup.
+
+        The backup's (deterministic) execution is the step run the loop
+        performs next — same batch, same state, so numerics are unchanged;
+        what the policy adds is the *accounting*: the event, its counter,
+        and the log line a fleet scheduler would act on.
+        """
+        self.report.redispatches += 1
+        if reg is not None:
+            reg.inc("supervisor/redispatches")
+        self.report.log.append(
+            f"step {step}: {why} — re-dispatched to backup worker"
+        )
+
     def _run(self, total_steps, metrics_cb, reg, writer) -> SupervisorReport:
         mesh_idx = 0
+        consecutive_failures = 0
         while True:
             mesh = self.meshes[mesh_idx]
             step_fn = self.make_step(mesh)
@@ -181,6 +206,8 @@ class Supervisor:
                         self.report.log.append(
                             f"straggler: {e} — continuing (drop-and-rescale)"
                         )
+                        if self.redispatch:
+                            self._redispatch(step, reg, "straggler detected")
                     batch = next(self.iterator)
                     state, metrics = step_fn(state, batch)
                     dt = time.time() - t0
@@ -193,8 +220,11 @@ class Supervisor:
                             f"step {step}: exceeded deadline ({dt:.2f}s) — "
                             "drop-and-rescale policy would engage"
                         )
+                        if self.redispatch:
+                            self._redispatch(step, reg, "deadline exceeded")
                     step += 1
                     self.report.steps_run += 1
+                    consecutive_failures = 0  # progress resets the backoff
                     if reg is not None:
                         reg.inc("supervisor/steps")
                     if writer is not None:
@@ -220,12 +250,32 @@ class Supervisor:
                 self.report.straggler_events += 1
                 self.report.log.append(f"straggler: {e} — continuing (drop-and-rescale)")
                 continue
-            except SimulatedFailure as e:
+            except (SimulatedFailure, ckpt.CheckpointError) as e:
                 self.report.restarts += 1
                 if reg is not None:
                     reg.inc("supervisor/restarts")
-                self.report.log.append(f"crash: {e} — restoring latest checkpoint")
-                self.checkpointer.wait()
+                consecutive_failures += 1
+                if consecutive_failures > self.retry.max_retries:
+                    self.report.log.append(
+                        f"crash: {e} — giving up after "
+                        f"{consecutive_failures - 1} retries"
+                    )
+                    raise
+                # bounded retry: exponential backoff before the restore
+                delay = self.retry.delay(consecutive_failures - 1)
+                self.report.backoffs.append(delay)
+                self.report.log.append(
+                    f"crash: {e} — retry {consecutive_failures}/"
+                    f"{self.retry.max_retries} after {delay:.2f}s backoff, "
+                    "restoring latest checkpoint"
+                )
+                self.sleep_fn(delay)
+                try:
+                    self.checkpointer.wait()
+                except ckpt.CheckpointError as ce:
+                    # the in-flight save is also broken: recovery proceeds
+                    # from the last checkpoint that DID land
+                    self.report.log.append(f"pending checkpoint failed: {ce}")
                 # Elastic policy: after a crash, optionally fail over to the
                 # next (smaller) mesh if one is configured.
                 if mesh_idx + 1 < len(self.meshes):

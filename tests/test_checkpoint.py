@@ -64,6 +64,77 @@ def test_async_checkpointer(tmp_path):
     assert ckpt.latest_step(tmp_path) == 7
 
 
+def test_async_failure_propagates_as_checkpoint_error(tmp_path):
+    """A failed background save is re-raised on the next save()/wait()."""
+    s = _state()
+    target = tmp_path / "ck"
+    ac = ckpt.AsyncCheckpointer(target)
+    ac.save(1, s)
+    assert ac.wait()
+    # make the directory un-writable-to: the next background save fails
+    shutil.rmtree(target)
+    target.write_text("now a file, not a directory")
+    ac.save(2, s)
+    try:
+        ac.wait()
+        raise AssertionError("expected CheckpointError")
+    except ckpt.CheckpointError as e:
+        assert "background checkpoint save failed" in str(e)
+    # the failure is raised once, then cleared: the checkpointer recovers
+    target.unlink()
+    ac.save(3, s)
+    assert ac.wait()
+    assert ckpt.latest_step(target) == 3
+
+
+def test_async_wait_timeout_bounds_shutdown(tmp_path):
+    """wait(timeout) returns False while the writer hangs, True after."""
+    import threading
+
+    gate = threading.Event()
+    orig_save = ckpt.save
+
+    def slow_save(*args, **kwargs):
+        gate.wait()
+        return orig_save(*args, **kwargs)
+
+    ac = ckpt.AsyncCheckpointer(tmp_path / "ck")
+    try:
+        ckpt.save = slow_save
+        ac.save(1, _state())
+        assert ac.wait(timeout=0.05) is False  # still hung: bounded, no raise
+    finally:
+        ckpt.save = orig_save
+        gate.set()
+    assert ac.wait() is True  # a later wait() collects the finished writer
+    assert ckpt.latest_step(tmp_path / "ck") == 1
+
+
+def test_restore_falls_back_over_corrupted_leaf(tmp_path):
+    """Corruption past the header check: restore skips to the older step."""
+    s = _state()
+    ckpt.save(tmp_path, 1, s)
+    ckpt.save(tmp_path, 2, s)
+    # step 2 passes validate_step_dir (real .npy magic) but is truncated
+    leaf = Path(tmp_path) / "step_00000002" / "leaf_0.npy"
+    leaf.write_bytes(leaf.read_bytes()[:48])
+    template = jax.tree.map(jnp.zeros_like, s)
+    import warnings as _warnings
+
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("ignore")
+        restored, extras = ckpt.restore(tmp_path, template)
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(s["params"]["w"])
+    )
+    # the torn step still fails loudly when named explicitly
+    try:
+        ckpt.restore(tmp_path, template, step=2)
+        raise AssertionError("expected a load failure for the torn step")
+    except (ckpt.CheckpointError, ValueError):
+        pass
+
+
 def test_restore_rejects_shape_mismatch(tmp_path):
     s = _state()
     ckpt.save(tmp_path, 1, s)

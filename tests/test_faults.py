@@ -1,0 +1,308 @@
+"""Survivable mesh: fault injection, elastic re-sharding, recovery.
+
+The contract under test is PR 8's survivability story:
+
+  * :class:`~repro.runtime.faults.ChaosSchedule` is strictly
+    deterministic — scripted events fire exactly once and seeded
+    schedules replay the same fault history for the same seed.
+  * :func:`~repro.lower.reshard_training_step` re-partitions the whole
+    train-step program onto the survivors **bit-identically** — the
+    reference executor on the resharded program equals the unsharded
+    step with ``assert_array_equal``, including uneven batches and
+    cumulative kills.
+  * :class:`~repro.runtime.faults.ChaosController` discards killed
+    steps BEFORE they commit, so a chaos run's losses and final
+    parameters match the healthy run exactly (reference backend), and
+    bounded retry gives up after ``RetryPolicy.max_retries``.
+  * The degraded :class:`~repro.runtime.mesh.MeshInterconnect` rejects
+    dead links, falls back to the survivor-ring allreduce, and raises
+    when failures partition the mesh.
+"""
+
+import numpy as np
+import pytest
+
+from repro.lower import (
+    lower_training_step,
+    paper_cnn_graph,
+    reshard_training_step,
+    run_reference,
+    shard_training_step,
+)
+from repro.runtime.faults import (
+    ChaosController,
+    ChaosSchedule,
+    RetryPolicy,
+    time_recovery,
+)
+from repro.runtime.mesh import MeshInterconnect, time_mesh_step
+
+
+def _inputs(graph, seed=0):
+    rng = np.random.RandomState(seed)
+    b, img = graph.batch, graph.input_shape[0]
+    x = rng.randn(b, img, img, 3).astype(np.float32)
+    labels = rng.randint(0, graph.loss.classes, b)
+    onehot = np.eye(graph.loss.classes, dtype=np.float32)[labels]
+    return {"x": x, "onehot": onehot, **graph.init_params(seed=seed + 1)}
+
+
+def _batch_fn(graph):
+    """Step-keyed batches: batch_fn(i) depends only on i (replayable)."""
+    b, img = graph.batch, graph.input_shape[0]
+
+    def fn(i):
+        rng = np.random.RandomState(100 + i)
+        x = rng.randn(b, img, img, 3).astype(np.float32)
+        labels = rng.randint(0, graph.loss.classes, b)
+        return x, labels
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# ChaosSchedule: grammar + determinism
+# ---------------------------------------------------------------------------
+
+
+def test_parse_scripted_grammar():
+    s = ChaosSchedule.parse(
+        "straggle:hmc=0,slow=2.5@step=3;kill:hmc=1@step=2;preempt@step=5"
+    )
+    assert [e.step for e in s.events] == [2, 3, 5]  # sorted by step
+    kill, strag, pre = s.events
+    assert (kill.kind, kill.hmc) == ("kill", 1)
+    assert (strag.kind, strag.hmc, strag.slow) == ("straggle", 0, 2.5)
+    assert (pre.kind, pre.hmc) == ("preempt", None)
+    assert bool(s)
+
+
+def test_parse_none_is_empty():
+    for spec in ("none", "", "  NONE  "):
+        s = ChaosSchedule.parse(spec)
+        assert not s and s.events == ()
+
+
+@pytest.mark.parametrize("bad", [
+    "kill@step=2",               # kill needs hmc=
+    "straggle@step=1",           # straggle needs hmc=
+    "explode:hmc=1@step=2",      # unknown kind
+    "kill:hmc=1",                # missing @step=
+    "kill:hmc=1,wat=3@step=2",   # unknown param
+    "random:p_kill=0.5",         # seeded spec needs seed=
+])
+def test_parse_rejects_bad_specs(bad):
+    with pytest.raises(ValueError):
+        ChaosSchedule.parse(bad)
+
+
+def test_scripted_event_fires_once():
+    s = ChaosSchedule.parse("kill:hmc=1@step=2")
+    assert [e.describe() for e in s.events_at(2, 4)] == ["kill:hmc1@step2"]
+    assert s.events_at(2, 4) == []  # replaying the step: already fired
+
+
+def test_seeded_schedule_is_deterministic():
+    spec = "random:seed=7,p_kill=0.02,p_straggle=0.05,slow=3,max_kills=2"
+
+    def history(spec):
+        s = ChaosSchedule.parse(spec)
+        return [
+            e.describe() for step in range(60) for e in s.events_at(step, 16)
+        ]
+
+    a, b = history(spec), history(spec)
+    assert a == b and a, "same seed must replay the same fault history"
+    kills = [e for e in a if e.startswith("kill")]
+    assert len(kills) <= 2, "max_kills must cap cube deaths"
+    assert history("random:seed=8,p_kill=0.02,p_straggle=0.05") != a
+
+
+def test_retry_policy_backoff_bounds():
+    p = RetryPolicy(max_retries=6, base_delay=0.5, factor=2.0, max_delay=4.0)
+    ds = p.delays()
+    assert ds == [0.5, 1.0, 2.0, 4.0, 4.0, 4.0]  # doubles, then capped
+    assert all(a <= b for a, b in zip(ds, ds[1:]))  # monotone
+    assert max(ds) <= p.max_delay
+    with pytest.raises(ValueError):
+        p.delay(-1)
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-sharding: bit-identical on the survivors
+# ---------------------------------------------------------------------------
+
+
+def test_reshard_reference_bit_identical():
+    graph = paper_cnn_graph(batch=8, img=8, momentum=0.9)
+    prog = lower_training_step(graph)
+    sh = shard_training_step(graph, mesh_shape=(2, 2), program=prog)
+    degraded = reshard_training_step(sh, 1)
+    assert degraded.alive_hmcs == (0, 2, 3)
+    assert degraded.failed_hmcs == (1,)
+    inputs = _inputs(graph)
+    want = run_reference(prog, inputs)
+    got = run_reference(degraded.program, inputs)
+    assert set(got) == set(want)
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k], err_msg=k)
+
+
+def test_reshard_cumulative_kills_bit_identical():
+    """Failures accumulate: a second kill re-splits onto the remaining 2."""
+    graph = paper_cnn_graph(batch=8, img=8)
+    sh = shard_training_step(graph, mesh_shape=(2, 2))
+    once = reshard_training_step(sh, 3)
+    twice = reshard_training_step(once, 0)
+    assert twice.alive_hmcs == (1, 2)
+    assert twice.failed_hmcs == (0, 3)
+    inputs = _inputs(graph, seed=2)
+    want = run_reference(sh.base_program, inputs)
+    got = run_reference(twice.program, inputs)
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k], err_msg=k)
+
+
+def test_reshard_rejects_dead_and_out_of_mesh():
+    graph = paper_cnn_graph(batch=8, img=8)
+    sh = shard_training_step(graph, mesh_shape=(2, 2))
+    degraded = reshard_training_step(sh, 1)
+    with pytest.raises(ValueError):
+        degraded.shard_program(1)  # dead cube has no shard
+    with pytest.raises(ValueError):
+        reshard_training_step(sh, 9)  # outside the mesh
+
+
+def test_degraded_mesh_step_timing():
+    graph = paper_cnn_graph(batch=8, img=8)
+    sh = shard_training_step(graph, mesh_shape=(2, 2))
+    degraded = reshard_training_step(sh, 2)
+    tm = time_mesh_step(degraded, n_clusters=4)
+    assert tm.n_alive == 3 and tm.n_hmcs == 4
+    assert tm.t_step > 0
+    # efficiency is measured against the SURVIVORS, not the full mesh
+    assert tm.parallel_eff == pytest.approx(tm.speedup / 3)
+    rec = time_recovery(sh, degraded, n_clusters=4)
+    assert rec.t_detect > 0 and rec.t_restore > 0 and rec.t_replay > 0
+    assert rec.cycles() == int(round(rec.t_total * 1.5e9))
+    assert rec.overhead_steps == pytest.approx(rec.t_total / rec.healthy_step)
+    for key in ("t_total_ms", "recovery_cycles", "overhead_steps"):
+        assert key in rec.summary()
+
+
+# ---------------------------------------------------------------------------
+# ChaosController through the train loop (reference backend: exact numerics)
+# ---------------------------------------------------------------------------
+
+
+def _healthy_run(graph, sh, steps=4):
+    from repro.lower.graph import train_graph
+
+    return train_graph(graph, steps, _batch_fn(graph), backend="reference",
+                       program=sh.program, params=graph.init_params(seed=0))
+
+
+def test_chaos_kill_run_matches_healthy_exactly():
+    from repro.lower.graph import train_graph
+
+    graph = paper_cnn_graph(batch=8, img=8)
+    sh = shard_training_step(graph, mesh_shape=(2, 2))
+    want = _healthy_run(graph, sh)
+
+    sh2 = shard_training_step(graph, mesh_shape=(2, 2))
+    ctl = ChaosController("kill:hmc=1@step=2", sharded=sh2)
+    got = train_graph(graph, 4, _batch_fn(graph), backend="reference",
+                      program=sh2.program, params=graph.init_params(seed=0),
+                      chaos=ctl)
+    assert ctl.sharded.alive_hmcs == (0, 2, 3)
+    assert ctl.report()["remesh_events"] == 1
+    assert ctl.report()["recovery_cycles"] > 0
+    np.testing.assert_array_equal(want["losses"], got["losses"])
+    for k in want["params"]:
+        np.testing.assert_array_equal(want["params"][k], got["params"][k],
+                                      err_msg=k)
+
+
+def test_chaos_preempt_rewinds_and_matches_healthy(tmp_path):
+    from repro.lower.graph import train_graph
+
+    graph = paper_cnn_graph(batch=8, img=8)
+    sh = shard_training_step(graph, mesh_shape=(2, 2))
+    want = _healthy_run(graph, sh)
+
+    sh2 = shard_training_step(graph, mesh_shape=(2, 2))
+    ctl = ChaosController("preempt@step=3", sharded=sh2,
+                          ckpt_dir=tmp_path / "ck", ckpt_every=1)
+    got = train_graph(graph, 4, _batch_fn(graph), backend="reference",
+                      program=sh2.program, params=graph.init_params(seed=0),
+                      chaos=ctl)
+    assert ctl.report()["preemptions"] == 1
+    assert any(e.startswith("preempt") for e in ctl.report()["events"])
+    np.testing.assert_array_equal(want["losses"], got["losses"])
+    for k in want["params"]:
+        np.testing.assert_array_equal(want["params"][k], got["params"][k],
+                                      err_msg=k)
+
+
+def test_chaos_gives_up_after_max_retries():
+    from repro.lower.graph import train_graph
+
+    graph = paper_cnn_graph(batch=8, img=8)
+    sh = shard_training_step(graph, mesh_shape=(2, 2))
+    ctl = ChaosController("kill:hmc=1@step=1;kill:hmc=2@step=1",
+                          sharded=sh, retry=RetryPolicy(max_retries=1))
+    with pytest.raises(RuntimeError, match="gave up after 1"):
+        train_graph(graph, 4, _batch_fn(graph), backend="reference",
+                    program=sh.program, params=graph.init_params(seed=0),
+                    chaos=ctl)
+    assert ctl.backoffs == [0.5]  # the schedule it slept before dying
+
+
+def test_chaos_straggler_records_without_changing_numerics():
+    from repro.lower.graph import train_graph
+
+    graph = paper_cnn_graph(batch=8, img=8)
+    sh = shard_training_step(graph, mesh_shape=(2, 2))
+    want = _healthy_run(graph, sh)
+    sh2 = shard_training_step(graph, mesh_shape=(2, 2))
+    ctl = ChaosController("straggle:hmc=0,slow=4@step=1", sharded=sh2)
+    got = train_graph(graph, 4, _batch_fn(graph), backend="reference",
+                      program=sh2.program, params=graph.init_params(seed=0),
+                      chaos=ctl)
+    assert ctl.report()["straggler_events"] == 1
+    assert ctl.sharded.n_alive == 4  # nobody died
+    np.testing.assert_array_equal(want["losses"], got["losses"])
+
+
+# ---------------------------------------------------------------------------
+# Degraded interconnect
+# ---------------------------------------------------------------------------
+
+
+def test_failed_cube_kills_its_links():
+    net = MeshInterconnect(2, 2, failed=(1,))
+    assert (0, 1) not in net.alive_nodes
+    with pytest.raises(ValueError, match="failed cube"):
+        net._check_link(((0, 0), (0, 1)))
+    with pytest.raises(ValueError, match="degraded"):
+        net.systolic_update(1e6)
+
+
+def test_degraded_update_falls_back_to_survivor_ring():
+    healthy = MeshInterconnect(4, 4)
+    degraded = MeshInterconnect(4, 4, failed=(5,))
+    assert len(degraded.alive_nodes) == 15
+    assert healthy.update_time(1e6) == healthy.systolic_update(1e6).makespan
+    assert degraded.update_time(1e6) == (
+        degraded.ring_allreduce(1e6).makespan
+    )
+    # the survivor snake skips the hole but keeps every living cube
+    snake = degraded._snake_nodes()
+    assert len(snake) == 15 and (1, 1) not in snake
+
+
+def test_partitioned_mesh_raises():
+    # killing the diagonal of a 2x2 disconnects the two survivors
+    net = MeshInterconnect(2, 2, failed=(0, 3))
+    with pytest.raises(ValueError, match="partition"):
+        net.ring_allreduce(1e6)

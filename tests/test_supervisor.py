@@ -3,8 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.data.pipeline import DataIterator, InMemoryDataset
+from repro.runtime.faults import RetryPolicy
 from repro.runtime.supervisor import FailureInjector, StragglerPolicy, Supervisor
 
 
@@ -49,7 +51,8 @@ def test_crash_restart_is_exact(tmp_path):
     # crashing run
     init_state, make_step, it2 = _toy_setup(tmp_path)
     inj = FailureInjector({7: "crash", 13: "crash"})
-    sup2 = Supervisor(make_step, init_state, it2, tmp_path / "b", ckpt_every=4, injector=inj)
+    sup2 = Supervisor(make_step, init_state, it2, tmp_path / "b", ckpt_every=4,
+                      injector=inj, sleep_fn=lambda s: None)
     report = sup2.run(16)
     assert report.restarts == 2
     got_state, _ = ckpt.restore(tmp_path / "b", init_state(None))
@@ -76,6 +79,7 @@ def test_elastic_remesh_failover(tmp_path):
     sup = Supervisor(
         make_step, init_state, it, tmp_path / "d", ckpt_every=2,
         injector=inj, meshes=["mesh-large", "mesh-small"],
+        sleep_fn=lambda s: None,
     )
     report = sup.run(9)
     assert report.remesh_events == 1
@@ -84,6 +88,81 @@ def test_elastic_remesh_failover(tmp_path):
 
     st, _ = ckpt.restore(tmp_path / "d", init_state(None))
     assert int(st["count"]) == 9
+
+
+def test_crash_backoff_follows_retry_schedule(tmp_path):
+    """Each restart sleeps the RetryPolicy's delay; progress resets it."""
+    init_state, make_step, it = _toy_setup(tmp_path)
+    inj = FailureInjector({3: "crash", 9: "crash"})
+    slept = []
+    sup = Supervisor(make_step, init_state, it, tmp_path / "bo", ckpt_every=2,
+                     injector=inj, retry=RetryPolicy(base_delay=0.25),
+                     sleep_fn=slept.append)
+    report = sup.run(12)
+    assert report.restarts == 2
+    # steps committed between the crashes reset the attempt counter, so
+    # BOTH retries back off at the first-attempt delay
+    assert report.backoffs == [0.25, 0.25]
+    assert slept == report.backoffs
+
+
+def test_consecutive_crashes_escalate_then_give_up(tmp_path):
+    """Back-to-back failures walk the exponential schedule, then re-raise."""
+    from repro.runtime.supervisor import SimulatedFailure
+
+    init_state, make_step, it = _toy_setup(tmp_path)
+
+    class AlwaysCrash:
+        def check(self, step):
+            raise SimulatedFailure(f"injected crash at step {step}")
+
+    sup = Supervisor(make_step, init_state, it, tmp_path / "gu", ckpt_every=2,
+                     injector=AlwaysCrash(),
+                     retry=RetryPolicy(max_retries=3, base_delay=0.5),
+                     sleep_fn=lambda s: None)
+    with pytest.raises(SimulatedFailure):
+        sup.run(12)
+    assert sup.report.restarts == 4  # 3 retries + the one that gave up
+    assert sup.report.backoffs == [0.5, 1.0, 2.0]  # doubling, no progress
+    assert any("giving up" in line for line in sup.report.log)
+
+
+def test_straggler_redispatches_to_backup(tmp_path):
+    init_state, make_step, it = _toy_setup(tmp_path)
+    inj = FailureInjector({3: "straggler", 6: "straggler"})
+    sup = Supervisor(make_step, init_state, it, tmp_path / "rd", ckpt_every=5,
+                     injector=inj)
+    report = sup.run(10)
+    assert report.steps_run == 10
+    assert report.redispatches == 2
+    assert sum("backup worker" in line for line in report.log) == 2
+    # the accounting is optional: redispatch=False records only the event
+    init_state, make_step, it = _toy_setup(tmp_path)
+    sup2 = Supervisor(make_step, init_state, it, tmp_path / "rd2",
+                      ckpt_every=5, injector=FailureInjector({3: "straggler"}),
+                      redispatch=False)
+    report2 = sup2.run(10)
+    assert report2.straggler_events >= 1 and report2.redispatches == 0
+
+
+def test_checkpoint_error_triggers_restart(tmp_path):
+    """A broken checkpoint cadence restarts the loop, not the process."""
+    from repro.checkpoint import checkpoint as ckpt
+
+    init_state, make_step, it = _toy_setup(tmp_path)
+    fired = []
+
+    class BadCkptOnce:
+        def check(self, step):
+            if step == 5 and not fired:
+                fired.append(step)
+                raise ckpt.CheckpointError("background checkpoint save failed")
+
+    sup = Supervisor(make_step, init_state, it, tmp_path / "ce", ckpt_every=2,
+                     injector=BadCkptOnce(), sleep_fn=lambda s: None)
+    report = sup.run(10)
+    assert report.restarts == 1
+    assert int(ckpt.restore(tmp_path / "ce", init_state(None))[0]["count"]) == 10
 
 
 def test_straggler_deadline_uses_paper_model():
@@ -128,7 +207,8 @@ def test_counters_survive_crash_restore_cycle(tmp_path):
     inj = FailureInjector({7: "crash"})
     path = tmp_path / "metrics.jsonl"
     sup = Supervisor(make_step, init_state, it, tmp_path / "cc", ckpt_every=2,
-                     injector=inj, registry=reg, metrics_path=str(path))
+                     injector=inj, registry=reg, metrics_path=str(path),
+                     sleep_fn=lambda s: None)
     report = sup.run(10)
     assert report.steps_run > 10  # steps 7..8 replayed after the crash
     assert report.restarts == 1
