@@ -93,6 +93,21 @@ SPECS = [
                "bound", limit=2.0),
     MetricSpec("BENCH_mesh.json", "summary.recovery_min_survivor_eff",
                "floor", limit=0.9),
+    # 2D sharding (pipeline rows x tensor/data columns): the acceptance
+    # gate — >= 80% parallel efficiency up to 64 cubes (including the
+    # >= 16-cube meshes), GPipe bubble fraction bounded, and the link
+    # traffic of the send/recv + tpgather + row-scoped update schedules
+    # pinned (benchmarks.mesh_bench.mesh_2d_sweep)
+    MetricSpec("BENCH_mesh.json", "summary.mesh2d_min_parallel_eff",
+               "floor", limit=0.8),
+    MetricSpec("BENCH_mesh.json", "summary.mesh2d_min_parallel_eff_16plus",
+               "floor", limit=0.8),
+    MetricSpec("BENCH_mesh.json", "summary.mesh2d_max_bubble_frac",
+               "bound", limit=0.25),
+    MetricSpec("BENCH_mesh.json", "summary.mesh2d_shard_cycles_total",
+               "exact"),
+    MetricSpec("BENCH_mesh.json", "summary.mesh2d_link_hops_total", "exact"),
+    MetricSpec("BENCH_mesh.json", "summary.mesh2d_link_bytes_total", "model"),
     # -- whole-train-step bench (benchmarks.trainstep_bench) ---------------
     MetricSpec("BENCH_trainstep.json", "wall_s", "wall"),
     MetricSpec("BENCH_trainstep.json", "summary.n_commands", "exact"),

@@ -42,6 +42,17 @@ RECOVERY_CASES = ((2, 512), (4, 1024), (8, 4096))
 RECOVERY_OVERHEAD_CAP = 2.0  # recovery costs <= this many healthy steps
 SURVIVOR_EFF_FLOOR = 0.90  # parallel eff of the N-1 survivors
 
+#: 2D (pipeline rows x tensor/data columns) weak scaling: 4 -> 64 cubes.
+#: Rows stay at 2 because GoogLeNet's trunk is conv1/conv2-heavy — two
+#: balanced stages exist, four don't (documented in docs/architecture.md);
+#: columns weak-scale the batch like Fig. 14. The biggest cases' step
+#: footprint exceeds one HMC's 4 GiB DRAM — the model-parallel wall the
+#: 2D layout exists to cross.
+CASES_2D = ((2, 2, 512), (2, 4, 1024), (2, 8, 2048), (2, 16, 4096),
+            (2, 32, 8192))
+EFF_FLOOR_2D = 0.80  # acceptance floor for pipeline+tensor efficiency
+BUBBLE_CAP_2D = 0.25  # GPipe fill/drain bubble fraction bound
+
 
 def mesh_executed_sweep(cases=CASES, network="googlenet", n_clusters=16,
                         f_ntx=1.5e9):
@@ -98,6 +109,69 @@ def mesh_executed_sweep(cases=CASES, network="googlenet", n_clusters=16,
         "parallel_eff_above_95pct": min(effs) >= EFF_FLOOR,
         "within_1pct_of_model": max(errs) < MODEL_TOL,
         "four_or_more_sizes": len(rows) >= 4,
+    }
+
+
+def mesh_2d_sweep(cases=CASES_2D, network="googlenet", n_clusters=16,
+                  f_ntx=1.5e9):
+    """Executed 2D sweep: pipeline rows + tensor/data columns, 4-64 cubes.
+
+    Every case shards the whole-step program with ``shard="2d"`` (rows =
+    GPipe stages with explicit send/recv link traffic, columns = the
+    tensor/data hybrid), times each row's representative shard plus the
+    boundary/update link schedules, and reports microbatch count, bubble
+    fraction and parallel efficiency vs the timed unsharded step. The
+    step's tensor footprint is checked against ``HMC_DRAM_BYTES`` — the
+    acceptance workload must NOT fit one cube.
+    """
+    from repro.lower import shard_training_step
+    from repro.obs import CounterRegistry, use_registry
+    from repro.runtime.mesh import HMC_DRAM_BYTES, time_mesh_step
+
+    from benchmarks.workloads import network_graph
+
+    rows = []
+    effs = []
+    bubbles = []
+    footprints = []
+    n_cubes = []
+    shard_cycles_total = 0
+    reg = CounterRegistry()
+    for r, c, batch in cases:
+        graph = network_graph(network, batch=batch)
+        with use_registry(reg), reg.scope(f"{r}x{c}"):
+            sharded = shard_training_step(
+                graph, mesh_shape=(r, c), n_clusters=n_clusters, shard="2d"
+            )
+            tm = time_mesh_step(sharded, n_clusters=n_clusters, f_ntx=f_ntx)
+        footprint = sum(
+            reg2.bytes for reg2 in sharded.base_program.regions.values()
+        )
+        effs.append(tm.parallel_eff)
+        bubbles.append(tm.bubble_frac)
+        footprints.append(footprint)
+        n_cubes.append(r * c)
+        shard_cycles_total += tm.shard_cycles
+        rows.append((
+            f"{r}x{c}/b{batch}", sharded.program.n_commands, tm.n_micro,
+            tm.t_compute * 1e3, tm.t_boundary * 1e3, tm.t_update * 1e3,
+            tm.bubble_frac, tm.parallel_eff, footprint / 2**30,
+        ))
+    big_eff = min(e for e, n in zip(effs, n_cubes) if n >= 16)
+    return rows, {
+        "mesh2d_n_cases": len(rows),
+        "mesh2d_min_parallel_eff": min(effs),
+        "mesh2d_min_parallel_eff_16plus": big_eff,
+        "mesh2d_max_bubble_frac": max(bubbles),
+        "mesh2d_shard_cycles_total": shard_cycles_total,
+        "mesh2d_link_bytes_total": reg.total("link_bytes"),
+        "mesh2d_link_hops_total": reg.total("link_hops"),
+        "mesh2d_eff_above_80pct": min(effs) >= EFF_FLOOR_2D,
+        "mesh2d_bubble_bounded": max(bubbles) <= BUBBLE_CAP_2D,
+        "mesh2d_covers_4_to_64_cubes": (min(n_cubes) <= 4
+                                        and max(n_cubes) >= 64
+                                        and any(n >= 16 for n in n_cubes)),
+        "mesh2d_big_case_exceeds_one_hmc": max(footprints) > HMC_DRAM_BYTES,
     }
 
 
@@ -185,10 +259,12 @@ def write_mesh_trace(path, *, network="googlenet", side=2, batch=8,
 
 GATES = ("parallel_eff_above_95pct", "within_1pct_of_model",
          "four_or_more_sizes", "recovery_overhead_bounded",
-         "survivor_eff_above_floor", "recovery_covers_three_sizes")
+         "survivor_eff_above_floor", "recovery_covers_three_sizes",
+         "mesh2d_eff_above_80pct", "mesh2d_bubble_bounded",
+         "mesh2d_covers_4_to_64_cubes", "mesh2d_big_case_exceeds_one_hmc")
 
 
-def write_json(rows, summary, wall_s, recovery_rows=(),
+def write_json(rows, summary, wall_s, recovery_rows=(), rows_2d=(),
                path: str = "artifacts/BENCH_mesh.json") -> str:
     from repro.obs import write_bench_json
 
@@ -203,6 +279,10 @@ def write_json(rows, summary, wall_s, recovery_rows=(),
         "recovery_columns": ["mesh-1/batch", "n_alive", "t_detect_ms",
                              "t_restore_ms", "t_replay_ms",
                              "overhead_steps", "survivor_parallel_eff"],
+        "rows_2d": [list(r) for r in rows_2d],
+        "columns_2d": ["mesh/batch", "n_commands", "n_micro",
+                       "t_compute_ms", "t_boundary_ms", "t_update_ms",
+                       "bubble_frac", "parallel_eff", "footprint_gib"],
     }, path)
 
 
@@ -219,15 +299,21 @@ def main() -> None:
     rows, summary = mesh_executed_sweep(network=args.network)
     rec_rows, rec_summary = recovery_sweep(network=args.network)
     summary.update(rec_summary)
+    rows_2d, summary_2d = mesh_2d_sweep(network=args.network)
+    summary.update(summary_2d)
     wall = time.perf_counter() - t0
     for r in rows:
         print("  ", *(f"{x:.4g}" if isinstance(x, float) else x for x in r))
     print("  -- recovery (lose 1 of N) --")
     for r in rec_rows:
         print("  ", *(f"{x:.4g}" if isinstance(x, float) else x for x in r))
+    print("  -- 2d: pipeline rows x tensor/data columns --")
+    for r in rows_2d:
+        print("  ", *(f"{x:.4g}" if isinstance(x, float) else x for x in r))
     for k, v in summary.items():
         print(f"   -> {k}: {v}")
-    print("json:", write_json(rows, summary, wall, rec_rows, args.json))
+    print("json:", write_json(rows, summary, wall, rec_rows, rows_2d,
+                              args.json))
     if args.trace:
         print("trace:", write_mesh_trace(args.trace, network=args.network))
     failed = [g for g in GATES if not summary.get(g)]

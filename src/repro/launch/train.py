@@ -328,10 +328,59 @@ def batch_shardings(batch_struct, cfg, mesh, dp_axes, seq_axis=None, batch_size=
 # ---------------------------------------------------------------------------
 
 
+def validate_mesh_args(mesh: str | None, shard: str, batch: int) -> tuple[int, int] | None:
+    """Upfront --mesh / --shard validation with actionable errors.
+
+    Checks everything that would otherwise surface as a deep shard_map or
+    splitter failure: mesh spec parses as RxC, the mesh is not degenerate,
+    the batch divides over the cubes, and ``--shard 2d`` actually has a
+    mesh to shard over. Device-count shortfall is only a warning — the
+    executor falls back to the bit-identical single-device walk.
+
+    Returns (rows, cols), or None when no mesh was requested.
+    """
+    from repro.lower.mesh import parse_mesh
+
+    if shard not in ("1d", "2d"):
+        raise SystemExit(f"--shard must be '1d' or '2d', got {shard!r}")
+    if mesh is None:
+        if shard == "2d":
+            raise SystemExit(
+                "--shard 2d needs a mesh: pass --mesh RxC (rows = pipeline "
+                "stages, columns = tensor/data shards), e.g. --mesh 2x2"
+            )
+        return None
+    try:
+        rows, cols = parse_mesh(mesh)
+    except ValueError as e:
+        raise SystemExit(
+            f"bad --mesh {mesh!r}: {e} (expected RxC, e.g. --mesh 2x4)"
+        ) from None
+    if rows < 1 or cols < 1:
+        raise SystemExit(
+            f"--mesh {mesh!r} is degenerate: both dimensions must be >= 1"
+        )
+    n = rows * cols
+    if batch % n != 0:
+        raise SystemExit(
+            f"--batch {batch} does not divide over the {rows}x{cols} mesh "
+            f"({n} cubes); pick a batch that is a multiple of {n}, e.g. "
+            f"--batch {max(n, (batch // n + 1) * n)}"
+        )
+    n_dev = jax.device_count()
+    if n_dev < n:
+        print(f"note: {n_dev} jax device(s) < {n} cubes — run_pallas will "
+              f"use the (bit-identical) single-device walk; set "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+              f"for real shard_map execution")
+    return rows, cols
+
+
 def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
                 lr: float = 0.05, momentum: float = 0.9,
                 interpret: bool | None = None,
                 mesh: str | None = None,
+                shard: str = "1d",
                 metrics: str | None = None,
                 trace: str | None = None,
                 fuse: bool = True,
@@ -346,7 +395,10 @@ def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
     data-parallel via ``shard_map`` when enough jax devices exist (e.g.
     ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` for a 2x2 mesh
     on CPU), and the modeled mesh timing (per-HMC shard program + eq. 14-15
-    link exchange) is printed alongside.
+    link exchange) is printed alongside. ``shard="2d"`` turns the mesh 2D:
+    rows become GPipe-style pipeline stages (explicit send/recv blocks on
+    the vertical links), columns tensor/data-shard each stage, and the
+    modeled timing reports microbatch count and pipeline-bubble fraction.
 
     ``metrics`` streams one JSON object per step (loss, wall seconds, the
     step's counter totals — :mod:`repro.obs.report` schema); ``trace``
@@ -406,7 +458,7 @@ def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
 
             sharded = shard_training_step(graph, mesh_shape=mesh,
                                           n_clusters=n_clusters,
-                                          program=program)
+                                          program=program, shard=shard)
             program = sharded.program
             n_dev = jax.device_count()
             how = ("shard_map data-parallel" if n_dev >= sharded.n_hmcs
@@ -416,11 +468,22 @@ def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
                   f"{sharded.n_hmcs} HMCs x {sharded.shard_batch} images, "
                   f"{len(program.blocks)} blocks incl. allreduce epilogue; "
                   f"executing via {how}")
+            if sharded.shard == "2d":
+                pmeta = program.meta["mesh"]["pipeline"]
+                stages = [">".join(s) for s in pmeta["stages"]]
+                print(f"2d pipeline: {pmeta['n_stages']} stage(s) "
+                      f"[{' | '.join(stages)}], "
+                      f"{pmeta['n_micro']} microbatch(es), "
+                      f"{len(pmeta['xfers'])} boundary transfer(s)")
             tm = time_mesh_step(sharded, n_clusters=n_clusters)
             print(f"modeled mesh step: shard {tm.t_shard*1e3:.3f} ms + "
                   f"update {tm.t_update*1e3:.3f} ms "
                   f"-> speedup {tm.speedup:.2f}, "
                   f"parallel eff {tm.parallel_eff:.1%}")
+            if sharded.shard == "2d":
+                print(f"2d timing: compute {tm.t_compute*1e3:.3f} ms "
+                      f"(bubble {tm.bubble_frac:.1%}), boundary "
+                      f"{tm.t_boundary*1e3:.3f} ms (overlapped)")
         chaos_ctl = None
         if chaos is not None:
             from repro.runtime.faults import ChaosController
@@ -526,6 +589,13 @@ def _cli():
                          "mesh of HMCs (batch must divide evenly); executes "
                          "data-parallel via shard_map when enough jax "
                          "devices exist and prints the modeled mesh timing")
+    ap.add_argument("--shard", default="1d", choices=["1d", "2d"],
+                    help="ntx backend: mesh sharding layout. 1d: pure data "
+                         "parallelism (every cube runs the whole model on a "
+                         "batch slice). 2d: mesh rows are GPipe-style "
+                         "pipeline stages with explicit send/recv link "
+                         "traffic, columns tensor/data-shard each stage — "
+                         "for models that don't fit one HMC")
     ap.add_argument("--chaos", default=None, metavar="SPEC",
                     help="ntx backend: inject faults — 'kill:hmc=1@step=2', "
                          "'straggle:hmc=0,slow=4@step=3', 'preempt@step=5' "
@@ -573,8 +643,10 @@ def _cli():
     args = ap.parse_args()
 
     if args.backend == "ntx":
+        validate_mesh_args(args.mesh, args.shard, args.batch)
         res = run_ntx_cnn(args.steps, args.batch, args.img,
                           n_clusters=args.offload_clusters, mesh=args.mesh,
+                          shard=args.shard,
                           metrics=args.metrics, trace=args.trace,
                           fuse=not args.no_fuse, chaos=args.chaos,
                           ckpt_dir=args.chaos_ckpt)

@@ -858,6 +858,21 @@ def _run_pallas_graph_mesh(program, inputs, interpret: bool, cache,
     shards, with the psum spanning only the shrunken mesh. When the batch
     no longer divides the survivor count (uneven re-chunking) or too few
     jax devices remain, the same single-device walk takes over.
+
+    2D-sharded programs (``mesh_meta["shard"] == "2d"``) run over a real
+    2D jax mesh with ``("pipe", "data")`` axes shaped like the physical
+    (pipeline rows x tensor/data columns) grid. The jax mesh computes the
+    data-parallel *numerics* — batch sharded over both axes, gradient
+    psum across the full mesh — which is exactly the arithmetic the
+    2D command stream replays (identity-copy communication, disjoint
+    output splits), so gradients match ``jax.grad`` bit-for-tolerance
+    like the 1D path; the pipeline fill/drain and tensor-shard structure
+    live in the command stream and the timing model
+    (:func:`repro.runtime.mesh.time_mesh_step_2d`), not in XLA's
+    schedule. ``fuse_updates=False`` already holds on this path: the
+    cross-mesh psum must run between dW and the SGD update whether the
+    columns are data- or tensor-sharded, so the fuser interaction is
+    identical for both layouts.
     """
     import jax
     import jax.numpy as jnp
@@ -890,7 +905,12 @@ def _run_pallas_graph_mesh(program, inputs, interpret: bool, cache,
     fusion = _fusion_for(program, fuse_updates=False) if fuse else None
     _record_fusion(obs.get_active(), fusion)
 
-    dp_axes = ("pod", "data")
+    # 2D programs name the axes after their meaning (pipeline rows x
+    # tensor/data columns); 1D keeps the (pod, data) convention of
+    # repro.parallel.sharding. Either way both axes carry batch shards.
+    dp_axes = (
+        ("pipe", "data") if mesh_meta.get("shard") == "2d" else ("pod", "data")
+    )
     # a degraded mesh no longer matches the physical (rows, cols) grid:
     # lay the survivors out along one axis of a shrunken jax mesh
     jax_shape = (rows, cols) if n_alive == n else (1, n_alive)

@@ -85,6 +85,30 @@ _RULES: dict[tuple[str, str], tuple] = {
 
 _MODULES = ("attn", "moe", "shared", "mlp", "rec", "ssm")
 
+# CNN layer specs (the repro.lower graph compiler), keyed by spec class
+# name so lower/ stays import-light. Same column-parallel convention as
+# the attention/mlp rows above: the *output-feature* axis goes on the
+# model axis — conv weights are HWIO so cout is last, matmul weights are
+# [k, n] so n is last, bias is (c,). The 2D mesh splitter
+# (repro.lower.mesh, shard="2d") consumes this to decide which layers
+# tensor-shard their output-channel rep level across a mesh row; layers
+# without a rule (pool/relu/flatten and anything future) stay data-split.
+CNN_RULES: dict[str, tuple] = {
+    "Conv2dSpec": (None, None, None, TP),
+    "MatmulSpec": (None, TP),
+    "BiasSpec": (TP,),
+}
+
+
+def cnn_param_spec(spec: Any) -> tuple | None:
+    """Layer-local partition tuple for a CNN layer spec, or None.
+
+    Returns the ``CNN_RULES`` row for the spec's class (None when the
+    layer has no tensor-sharding rule). A row containing :data:`TP`
+    means the layer's output features are split across the model axis.
+    """
+    return CNN_RULES.get(type(spec).__name__)
+
 
 def _path_names(path) -> list[str]:
     names = []

@@ -39,6 +39,11 @@ HOP_LATENCY = 20e-6  # s per cube traversal (conservative)
 CUBE_POWER_MESH = 21.0  # W assumed during mesh compute
 P_LINKS = 8.0  # W, all four serial links
 
+#: One HMC's DRAM capacity (§2: 4 GB cube) — the budget a workload's
+#: whole-step footprint is checked against to decide whether it *needs*
+#: model sharding (the 2D bench gates that its big case exceeds this).
+HMC_DRAM_BYTES = 4 * 2**30
+
 
 @dataclass(frozen=True)
 class LinkTransfer:
@@ -440,7 +445,16 @@ def time_mesh_step(
     blits — spread over all clusters x engines instead of pinning one
     cluster. ``single_result`` optionally reuses an already-timed unsharded
     ScheduleResult (callers sweeping mesh sizes at a fixed batch share it).
+
+    2D-sharded programs delegate to :func:`time_mesh_step_2d` (GPipe
+    fill/drain + per-row exchange), so callers can hand either layout to
+    this one entry point.
     """
+    if sharded.program.meta.get("mesh", {}).get("shard") == "2d":
+        return time_mesh_step_2d(
+            sharded, n_clusters=n_clusters, f_ntx=f_ntx, derate=derate,
+            engine=engine, partition=partition, single_result=single_result,
+        )
     from repro.runtime import scheduler as rt_sched
 
     eta = rt_sched.ETA_COMPUTE * rt_sched.ETA_NET
@@ -483,6 +497,239 @@ def time_mesh_step(
         shard_cycles=shard_res.total_cycles,
         single_cycles=single_result.total_cycles,
         link_congestion=congestion,
+        alive_hmcs=sharded.n_alive,
+    )
+
+
+@dataclass(frozen=True)
+class MeshStepTiming2D:
+    """Timing of one 2D-sharded (pipeline x tensor/data) mesh step.
+
+    Duck-types :class:`MeshStepTiming`'s derived metrics (``t_step`` /
+    ``speedup`` / ``parallel_eff`` / ``t_image`` / ``summary``) so the
+    training CLI and the benches consume either. ``parallel_eff`` is
+    measured against perfect scaling of the interconnect-model baseline:
+    ``t_single / (t_step * n_alive)``.
+    """
+
+    mesh_shape: tuple[int, int]
+    n_hmcs: int
+    batch: int
+    n_micro: int  # GPipe microbatches in the fill/drain schedule
+    row_times: tuple[float, ...]  # s: full-batch shard per pipeline row
+    t_compute: float  # s: pipeline makespan (fill + steady + drain)
+    t_boundary: float  # s: vertical-link send/recv schedule makespan
+    t_update: float  # s: per-row weight exchange (2 passes over row links)
+    t_single: float  # s: the unsharded step on one cube
+    bubble_frac: float  # idle fraction of total stage-time
+    shard_cycles: int  # sum of the per-row representative shard cycles
+    single_cycles: int
+    link_congestion: float  # s queued on busy links (boundary + update)
+    alive_hmcs: int = 0
+
+    @property
+    def n_alive(self) -> int:
+        return self.alive_hmcs or self.n_hmcs
+
+    @property
+    def t_shard(self) -> float:
+        """The slowest row's full-batch shard time (bottleneck stage)."""
+        return max(self.row_times)
+
+    @property
+    def t_step(self) -> float:
+        # boundary transfers overlap the fill/drain compute; the weight
+        # exchange serializes after the drain, exactly like the 1D model
+        return max(self.t_compute, self.t_boundary) + self.t_update
+
+    @property
+    def speedup(self) -> float:
+        return self.t_single / self.t_step
+
+    @property
+    def parallel_eff(self) -> float:
+        return self.speedup / self.n_alive
+
+    @property
+    def t_image(self) -> float:
+        return self.t_single / self.batch
+
+    def summary(self) -> dict:
+        return {
+            "mesh": f"{self.mesh_shape[0]}x{self.mesh_shape[1]}",
+            "n_hmcs": self.n_hmcs,
+            "n_alive": self.n_alive,
+            "batch": self.batch,
+            "n_micro": self.n_micro,
+            "row_times_ms": [t * 1e3 for t in self.row_times],
+            "t_compute_ms": self.t_compute * 1e3,
+            "t_boundary_ms": self.t_boundary * 1e3,
+            "t_update_ms": self.t_update * 1e3,
+            "t_step_ms": self.t_step * 1e3,
+            "t_single_ms": self.t_single * 1e3,
+            "bubble_frac": self.bubble_frac,
+            "speedup": self.speedup,
+            "parallel_eff": self.parallel_eff,
+            "link_congestion_ms": self.link_congestion * 1e3,
+        }
+
+
+def _row_update_transfers(
+    net: MeshInterconnect, row: int, columns: tuple[int, ...], weight_bytes: float
+) -> list[LinkTransfer]:
+    """The 2-pass (reduce + broadcast) weight exchange of one pipeline row.
+
+    The row's stage parameters never leave the row, so the exchange is
+    eq. (14) along the row's horizontal links only — cut-through down the
+    line of *surviving* columns, then back. Consecutive survivors that
+    are no longer adjacent (a dead cube inside the tensor group) route
+    store-and-forward around the hole, exactly like the degraded ring.
+    Different rows use disjoint links, so one schedule over all rows
+    overlaps them.
+    """
+    if len(columns) < 2 or weight_bytes <= 0:
+        return []
+    coords = [(row, c) for c in columns]
+    transfers: list[LinkTransfer] = []
+    t0 = 0.0
+    for reverse, tag in ((False, "rowreduce"), (True, "rowbcast")):
+        hops = list(zip(coords, coords[1:]))
+        if reverse:
+            hops = [(b, a) for a, b in reversed(hops)]
+        i = 0
+        for a, b in hops:
+            path = net._route_around(a, b)
+            for u, v in zip(path, path[1:]):
+                transfers.append(LinkTransfer(
+                    link=(u, v), num_bytes=weight_bytes,
+                    start=t0 + (i + 1) * net.hop_latency,
+                    tag=f"{tag}:row{row}",
+                ))
+                i += 1
+        t0 += net.transfer_time(weight_bytes) + (i + 1) * net.hop_latency
+    return transfers
+
+
+def time_mesh_step_2d(
+    sharded,
+    *,
+    n_clusters: int = 16,
+    f_ntx: float = 1.5e9,
+    derate: bool = True,
+    engine: str = "block",
+    partition: bool = True,
+    single_result=None,
+) -> MeshStepTiming2D:
+    """Time one 2D-sharded mesh step: GPipe rows + event-level link traffic.
+
+    Per pipeline row the representative surviving cube's shard program is
+    timed on the block engine (full batch — every column of a row is
+    structurally symmetric, like the 1D model). With per-row full-batch
+    times ``t_r`` and ``M`` microbatches, the non-interleaved GPipe
+    fill/drain makespan is::
+
+        t_compute = sum_r t_r / M  +  (M - 1) * max_r t_r / M
+
+    (each microbatch visits every stage once — the merged fwd+bwd visit —
+    and the steady state is paced by the slowest stage; at R = 1 this
+    reduces to the 1D shard time, and for balanced stages the overhead is
+    the textbook ``(R - 1) / (M + R - 1)`` bubble). Stage-boundary
+    activations/gradients become per-microbatch vertical-link transfers
+    (one chunk per column pair, timed by :meth:`MeshInterconnect.schedule`
+    — congestion shows up, fwd and bwd use opposite link directions); the
+    per-row weight exchange runs 2 passes over each row's horizontal
+    links with that *row's* parameter bytes, all rows concurrent.
+    """
+    from repro.runtime import scheduler as rt_sched
+
+    meta = sharded.program.meta["mesh"]
+    pmeta = meta["pipeline"]
+    rows, cols = sharded.mesh_shape
+    n_micro = int(pmeta["n_micro"])
+    row_owners = [tuple(ro) for ro in meta["row_owners"]]
+
+    eta = rt_sched.ETA_COMPUTE * rt_sched.ETA_NET
+    exec_cycles = (lambda c: c.busy_cycles / eta) if derate else None
+    parts = n_clusters * rt_sched.ENGINES_PER_CLUSTER
+
+    def timed(program):
+        if partition:
+            program = _partition_coarse(program, parts)
+        sched = rt_sched.MultiClusterScheduler(n_clusters=n_clusters, f_ntx=f_ntx)
+        return sched.schedule_program(program, engine=engine, exec_cycles=exec_cycles)
+
+    row_results = [timed(sharded.shard_program(ro[0])) for ro in row_owners]
+    if single_result is None:
+        single_result = timed(sharded.base_program)
+    row_times = tuple(res.total_cycles / f_ntx for res in row_results)
+    tau = [t / n_micro for t in row_times]
+    tau_max = max(tau)
+    t_compute = sum(tau) + (n_micro - 1) * tau_max
+    bubble_frac = 1.0 - sum(row_times) / (rows * t_compute) if t_compute else 0.0
+
+    net = MeshInterconnect(rows, cols, failed=sharded.failed_hmcs)
+    alive = set(sharded.alive_hmcs)
+
+    # stage-boundary traffic: one chunk per (microbatch, column pair) on
+    # the vertical links, paced by the steady-state microbatch cadence
+    boundary: list[LinkTransfer] = []
+    for x in pmeta["xfers"]:
+        src, dst = int(x["src"]), int(x["dst"])
+        pair_cols = [
+            c for c in range(cols)
+            if src * cols + c in alive and dst * cols + c in alive
+        ]
+        if pair_cols:
+            chunk = float(x["bytes"]) / (len(pair_cols) * n_micro)
+            for m in range(n_micro):
+                for c in pair_cols:
+                    boundary.append(LinkTransfer(
+                        link=((src, c), (dst, c)), num_bytes=chunk,
+                        start=m * tau_max, tag=f"pipe:{x['region']}",
+                    ))
+        else:
+            # pathological degradation: no straight column pair survives;
+            # route the whole tensor between the rows' first survivors
+            a = net._coord(row_owners[src][0])
+            b = net._coord(row_owners[dst][0])
+            path = net._route_around(a, b)
+            chunk = float(x["bytes"]) / n_micro
+            for m in range(n_micro):
+                for u, v in zip(path, path[1:]):
+                    boundary.append(LinkTransfer(
+                        link=(u, v), num_bytes=chunk,
+                        start=m * tau_max, tag=f"pipe:{x['region']}",
+                    ))
+    bsched = net.schedule(boundary)
+
+    upd_transfers: list[LinkTransfer] = []
+    for r, ro in enumerate(row_owners):
+        columns = tuple(net._coord(h)[1] for h in ro)
+        upd_transfers += _row_update_transfers(
+            net, r, columns, float(pmeta["stage_param_bytes"][r])
+        )
+    usched = net.schedule(upd_transfers)
+
+    from repro.obs import counters as obs
+
+    reg = obs.get_active()
+    obs.record_link_schedule(reg, bsched)
+    obs.record_link_schedule(reg, usched)
+
+    return MeshStepTiming2D(
+        mesh_shape=sharded.mesh_shape,
+        n_hmcs=sharded.n_hmcs,
+        batch=sharded.graph.batch,
+        n_micro=n_micro,
+        row_times=row_times,
+        t_compute=t_compute,
+        t_boundary=bsched.makespan,
+        t_update=usched.makespan,
+        t_single=single_result.total_cycles / f_ntx,
+        bubble_frac=bubble_frac,
+        shard_cycles=sum(res.total_cycles for res in row_results),
+        single_cycles=single_result.total_cycles,
+        link_congestion=bsched.congestion_time + usched.congestion_time,
         alive_hmcs=sharded.n_alive,
     )
 

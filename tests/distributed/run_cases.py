@@ -11,7 +11,7 @@ import sys
 # 4x4 HMC meshes -> 1 / 4 / 16 devices); every other case keeps the
 # historical 8. Must be decided before jax imports.
 _DEVICE_COUNTS = {"mesh_dp_grads_1": 1, "mesh_dp_grads_4": 4,
-                  "mesh_dp_grads_16": 16}
+                  "mesh_dp_grads_16": 16, "mesh_2d_grads_4": 4}
 _N_DEV = _DEVICE_COUNTS.get(sys.argv[1] if len(sys.argv) > 1 else "", 8)
 os.environ["XLA_FLAGS"] = (
     f"--xla_force_host_platform_device_count={_N_DEV}"
@@ -222,13 +222,15 @@ def case_sp_model_same_loss():
         assert abs(l - base) < 1e-4, losses
 
 
-def _mesh_dp_grads(rows: int, cols: int):
+def _mesh_dp_grads(rows: int, cols: int, shard: str = "1d"):
     """run_pallas on a mesh-sharded train step == jax.grad, data-parallel.
 
     The whole-train-step program shards over a (rows x cols) device mesh
     via shard_map; logits, per-parameter gradients, momentum, and updated
     weights must match jax autodiff + SGD on the same model to fp32
     tolerance. One jax device per HMC — the real allreduce (psum) runs.
+    ``shard="2d"`` runs the pipeline x tensor splitter's program through
+    the same oracle (the shard_map axes become ("pipe", "data")).
     """
     from repro.kernels import ref
     from repro.lower import (
@@ -244,7 +246,7 @@ def _mesh_dp_grads(rows: int, cols: int):
     graph = paper_cnn_graph(batch=16, img=8, lr=0.05, momentum=0.9)
     prog = lower_training_step(graph)
     sharded = shard_training_step(graph, mesh_shape=(rows, cols),
-                                  program=prog)
+                                  program=prog, shard=shard)
 
     rng = np.random.RandomState(0)
     x = rng.randn(16, 8, 8, 3).astype(np.float32)
@@ -297,6 +299,10 @@ def case_mesh_dp_grads_4():
 
 def case_mesh_dp_grads_16():
     _mesh_dp_grads(4, 4)
+
+
+def case_mesh_2d_grads_4():
+    _mesh_dp_grads(2, 2, shard="2d")
 
 
 CASES = {k[5:]: v for k, v in list(globals().items()) if k.startswith("case_")}

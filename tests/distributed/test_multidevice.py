@@ -16,13 +16,18 @@ pytestmark = pytest.mark.slow  # each case is a fresh 8-fake-device subprocess
 ROOT = Path(__file__).resolve().parents[2]
 
 # jax 0.4.x's shard_map cannot partially-auto over a subset of mesh axes the
-# way these two cases need (fixed in the 0.5+ sharding-in-types rework);
-# they have failed since the seed. Keep them visible-but-expected so the
-# --runslow lane runs green until the jax pin moves.
+# way these two cases need (fixed in the 0.5+ sharding-in-types rework, and
+# verified green on the CI matrix's 0.5.3 lane); they have failed since the
+# seed on 0.4.x. Gate on the parsed (major, minor) tuple rather than a
+# string prefix so e.g. "0.40.0" or a dev suffix can't dodge (or wrongly
+# trip) the guard — 0.5+ runs both cases for real.
+_JAX_MAJOR_MINOR = tuple(
+    int(p) for p in jax.__version__.split(".")[:2] if p.isdigit()
+)
 _PARTIAL_AUTO_XFAIL = pytest.mark.xfail(
-    condition=jax.__version__.startswith("0.4."),
+    condition=_JAX_MAJOR_MINOR < (0, 5),
     reason=f"jax {jax.__version__}: partial-auto shard_map over a mesh-axis "
-    "subset is unsupported on 0.4.x (needs jax>=0.5)",
+    "subset is unsupported before 0.5 (green on >=0.5.3)",
     strict=False,
 )
 
@@ -40,6 +45,8 @@ CASES = [
     "mesh_dp_grads_1",
     "mesh_dp_grads_4",
     "mesh_dp_grads_16",
+    # 2D (pipeline x tensor) sharding through the same jax.grad oracle
+    "mesh_2d_grads_4",
 ]
 
 

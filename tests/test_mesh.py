@@ -29,6 +29,7 @@ from repro.lower import (
     lower_training_step,
     paper_cnn_graph,
     parse_mesh,
+    reshard_training_step,
     run_reference,
     shard_training_step,
 )
@@ -299,3 +300,185 @@ def test_mesh_efficiency_executed_full_sweep():
     assert summary["four_or_more_sizes"]
     assert summary["parallel_eff_above_95pct"], summary
     assert summary["within_1pct_of_model"], summary
+
+
+# ---------------------------------------------------------------------------
+# 2D sharding: pipeline rows x tensor/data columns
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("design,momentum", [
+    (None, 0.9),  # NTX + momentum
+    (None, 0.0),  # NTX plain SGD
+    (NS_DESIGN, 0.9),  # NS: every block carries driver reps
+])
+@pytest.mark.parametrize("mesh", [(2, 2), (2, 4), (4, 2)])
+def test_2d_bit_identical_to_unsharded(design, momentum, mesh):
+    """The signature guarantee extends to 2D: tensor-channel splits,
+    pipeline send/recv copies and row-scoped reduce/update/gather never
+    move a flop or an accumulator rounding."""
+    graph = paper_cnn_graph(batch=8, img=8, momentum=momentum)
+    kw = {} if design is None else {"design": design}
+    prog = lower_training_step(graph, **kw)
+    sh = shard_training_step(graph, mesh_shape=mesh, program=prog,
+                             shard="2d", **kw)
+    assert sh.shard == "2d"
+    inputs = _inputs(graph)
+    want = run_reference(prog, inputs)
+    got = run_reference(sh.program, inputs)
+    assert set(got) == set(want)
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k], err_msg=k)
+
+
+def test_2d_spilled_program_bit_identical():
+    graph = paper_cnn_graph(batch=8, img=16)
+    prog = lower_training_step(graph, n_clusters=1)  # tiny budget -> spills
+    assert prog.meta["spilled"]
+    sh = shard_training_step(graph, mesh_shape=(2, 2), program=prog,
+                             n_clusters=1, shard="2d")
+    inputs = _inputs(graph, seed=3)
+    want = run_reference(prog, inputs)
+    got = run_reference(sh.program, inputs)
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k], err_msg=k)
+
+
+def test_2d_pipeline_structure():
+    """Stages partition the layer sequence in order, every stage boundary
+    gets a send/recv pair (activation down, gradient up), and the weight
+    epilogue is row-scoped (stage params live only on their row)."""
+    graph = paper_cnn_graph(batch=8, img=8, momentum=0.9)
+    sh = shard_training_step(graph, mesh_shape=(2, 2), shard="2d")
+    meta = sh.program.meta["mesh"]
+    pmeta = meta["pipeline"]
+    rows, cols = sh.mesh_shape
+    assert pmeta["n_stages"] == rows
+    # stages are a contiguous, order-preserving partition of the layers
+    flat = [nd for stage in pmeta["stages"] for nd in stage]
+    assert flat == [nd.name for nd in graph.nodes]
+    assert meta["row_owners"] == [[0, 1], [2, 3]]
+    # each of the rows-1 boundaries ships the activation down and its
+    # gradient back up as explicit identity-copy blocks
+    xfers = pmeta["xfers"]
+    assert len(xfers) == 2 * (rows - 1)
+    dirs = {(x["src"], x["dst"]) for x in xfers}
+    assert dirs == {(0, 1), (1, 0)}
+    tags = [b.tag for b in sh.program.blocks]
+    for x in xfers:
+        sends = [t for t in tags if t.startswith(f"send:{x['region']}[")]
+        recvs = [t for t in tags if t.startswith(f"recv:{x['region']}[")]
+        assert sends and len(sends) == len(recvs), x
+    # row-scoped epilogue: every reduce/update/gather block is owned by a
+    # cube on its parameter's home row
+    row_of = {h: r for r, ro in enumerate(meta["row_owners"]) for h in ro}
+    stage_of = {nd: r for r, stage in enumerate(pmeta["stages"]) for nd in stage}
+    param_rows = pmeta["param_rows"]
+    for h, b in sh.epilogue_blocks():
+        if b.tag.startswith(("allreduce:", "allgather:")):
+            assert h != ALL_HMCS
+            name = b.writes[0] if b.writes else b.reads[0]
+            base = name.removeprefix("d_").removeprefix("v_")
+            base = base.removesuffix("_new")
+            assert row_of[h] == param_rows[base], (b.tag, h)
+    # tensor-sharded layers (conv/matmul/bias) really fan across columns
+    assert any(t.startswith("tpgather:") for t in tags)
+    assert all(r in set(param_rows.values()) for r in range(rows))
+    assert stage_of  # partition non-empty
+
+
+def test_2d_traffic_conservation():
+    """Compute commands are conserved: the combined 2D stream is exactly
+    the unsharded step plus the identity-copy communication blocks
+    (tpgather/allgather/send/recv)."""
+    graph = paper_cnn_graph(batch=8, img=8, momentum=0.9)
+    sh = shard_training_step(graph, mesh_shape=(2, 2), shard="2d")
+    comm = sum(
+        b.busy_cycles for b in sh.program.blocks
+        if b.tag.startswith(("tpgather:", "allgather:", "send:", "recv:"))
+    )
+    assert comm > 0
+    assert sh.program.busy_cycles == sh.base_program.busy_cycles + comm
+
+
+def test_2d_reshard_tensor_group_bit_identical():
+    """Survivability x 2D: killing one cube of a tensor group re-chunks
+    that pipeline stage over the row's survivors, bit-identically."""
+    graph = paper_cnn_graph(batch=8, img=8, momentum=0.9)
+    prog = lower_training_step(graph)
+    sh = shard_training_step(graph, mesh_shape=(2, 2), program=prog,
+                             shard="2d")
+    degraded = reshard_training_step(sh, 1)  # row 0 keeps only cube 0
+    assert degraded.shard == "2d"
+    assert degraded.program.meta["mesh"]["row_owners"] == [[0], [2, 3]]
+    inputs = _inputs(graph, seed=7)
+    want = run_reference(prog, inputs)
+    got = run_reference(degraded.program, inputs)
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k], err_msg=k)
+    # a second loss in the other row still re-shards
+    twice = reshard_training_step(degraded, 3)
+    got2 = run_reference(twice.program, inputs)
+    for k in want:
+        np.testing.assert_array_equal(got2[k], want[k], err_msg=k)
+    # losing a whole pipeline row is unrecoverable by re-chunking
+    with pytest.raises(ValueError, match="lost every cube"):
+        reshard_training_step(twice, 0)
+
+
+def test_2d_validation_errors():
+    graph = paper_cnn_graph(batch=8, img=8)
+    with pytest.raises(ValueError, match="shard must be"):
+        shard_training_step(graph, mesh_shape=(2, 2), shard="3d")
+    # more pipeline rows than layers with compute cannot balance
+    with pytest.raises(ValueError, match="pipeline"):
+        shard_training_step(graph, mesh_shape=(8, 1), shard="2d")
+
+
+def test_run_pallas_2d_routes_match_reference():
+    from repro.lower import PlanCache, run_pallas
+
+    graph = paper_cnn_graph(batch=4, img=8, momentum=0.9)
+    prog = lower_training_step(graph)
+    inputs = _inputs(graph, seed=5)
+    want = run_reference(prog, inputs)
+    # 2x2 on one device: the graceful single-device fallback walk
+    sh = shard_training_step(graph, mesh_shape=(2, 2), program=prog,
+                             shard="2d")
+    got = run_pallas(sh.program, inputs, cache=PlanCache())
+    assert set(got) == set(want)
+    for k in want:
+        np.testing.assert_allclose(
+            np.asarray(got[k]), want[k], rtol=2e-3, atol=1e-5, err_msg=k
+        )
+
+
+def test_time_mesh_step_2d_composition():
+    graph = paper_cnn_graph(batch=8, img=8)
+    sh = shard_training_step(graph, mesh_shape=(2, 2), shard="2d")
+    tm = time_mesh_step(sh)  # dispatches to the 2D model
+    assert tm.mesh_shape == (2, 2)
+    assert len(tm.row_times) == 2 and all(t > 0 for t in tm.row_times)
+    assert tm.n_micro == sh.program.meta["mesh"]["pipeline"]["n_micro"]
+    assert tm.t_step == pytest.approx(
+        max(tm.t_compute, tm.t_boundary) + tm.t_update
+    )
+    assert 0.0 <= tm.bubble_frac < 1.0
+    assert tm.speedup == pytest.approx(tm.t_single / tm.t_step)
+    assert tm.parallel_eff == pytest.approx(tm.speedup / 4)
+    s = tm.summary()
+    for key in ("mesh", "n_micro", "bubble_frac", "parallel_eff",
+                "row_times_ms", "t_boundary_ms"):
+        assert key in s
+
+
+def test_2d_efficiency_executed_one_size():
+    """Tier-1 slice of the 2D acceptance gate: GoogLeNet (too big for one
+    HMC at bench scale) on a 2x2 must clear the 80% efficiency floor."""
+    workloads = pytest.importorskip("benchmarks.workloads")
+
+    graph = workloads.network_graph("googlenet", batch=256)
+    sh = shard_training_step(graph, mesh_shape=(2, 2), shard="2d")
+    tm = time_mesh_step(sh)
+    assert tm.parallel_eff >= 0.80
+    assert tm.bubble_frac <= 0.25
