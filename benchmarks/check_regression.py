@@ -126,6 +126,13 @@ SPECS = [
                "floor", limit=0.8),
     MetricSpec("BENCH_trainstep.json", "summary.fused_speedup",
                "floor", limit=5.0),
+    # the tiny-transformer step (workloads.lm_graph through the DAG
+    # compiler): program accounting is deterministic, so exact; the
+    # loss-decrease and TCDM-budget gates live in trainstep_bench.GATES
+    MetricSpec("BENCH_trainstep.json", "summary.lm_n_commands", "exact"),
+    MetricSpec("BENCH_trainstep.json", "summary.lm_n_offloads", "exact"),
+    MetricSpec("BENCH_trainstep.json", "summary.lm_step_cycles_ntx", "exact"),
+    MetricSpec("BENCH_trainstep.json", "summary.lm_peak_tcdm_bytes", "exact"),
 ]
 
 

@@ -11,7 +11,11 @@ compiles ONE whole-step program per design point, and reports
     perf numbers the PR-7 region fuser is gated on,
   * the liveness allocator's ``peak_tcdm_bytes`` vs the design budget,
   * command/offload counts and the block-engine modeled step cycles for
-    both the NTX and NS design points.
+    both the NTX and NS design points,
+  * the ``lm_*`` block: the same accounting for the tiny decoder-only
+    transformer step (``workloads.lm_graph`` — the DAG compiler path:
+    attention, layernorm, residual fan-out, embedding), with its own
+    loss-decrease and TCDM-budget gates.
 
 Standalone::
 
@@ -123,7 +127,60 @@ def trainstep_bench(steps: int = 3, batch: int = 4, img: int = 16,
             fusion.n_regions + len(fusion.fallback_steps),
         "dispatches_per_step_unfused": n_steps_total,
     }
+    lm = lm_trainstep_bench(steps, n_clusters=n_clusters)
+    summary.update(lm)
+    rows.append(("lm_commands_offloads_cycles", lm["lm_n_commands"],
+                 lm["lm_n_offloads"], lm["lm_step_cycles_ntx"]))
     return rows, summary
+
+
+def lm_trainstep_bench(steps: int = 3, batch: int = 2, seq: int = 8,
+                       n_clusters: int = 16) -> dict:
+    """The ``lm_*`` summary block: a tiny transformer train step, end to end.
+
+    Exercises the DAG graph-compiler path (embedding, learned positions,
+    pre-LN attention + FFN blocks with residual fan-out) through the same
+    ``run_pallas`` execution as the CNN, and reports the Table-2-style
+    program accounting: command/offload counts, block-engine modeled step
+    cycles, peak TCDM, fusion coverage (token-row graphs fuse only the
+    update epilogues), plus the loss-decrease gate on the synthetic
+    next-token task.
+    """
+    from benchmarks.workloads import lm_graph
+    from repro.lower import (
+        lm_token_batches,
+        lower_training_step,
+        run_timing,
+        train_graph,
+    )
+    from repro.lower.fuse import plan_fusion
+
+    graph = lm_graph(batch=batch, seq=seq)
+    program = lower_training_step(graph, n_clusters=n_clusters)
+    batch_fn = lm_token_batches(np.random.RandomState(0), batch, seq,
+                                graph.loss.classes)
+    res = train_graph(graph, steps, batch_fn, program=program,
+                      backend="pallas", params=graph.init_params(seed=0))
+    losses = res["losses"]
+    fusion = plan_fusion(program)
+    cycles = run_timing(program, n_clusters=n_clusters,
+                        engine="block").total_cycles
+    return {
+        "lm_n_nodes": len(graph.nodes),
+        "lm_n_commands": program.n_commands,
+        "lm_n_offloads": program.n_offloads,
+        "lm_step_cycles_ntx": cycles,
+        "lm_peak_tcdm_bytes": program.meta["peak_tcdm_bytes"],
+        "lm_within_tcdm_budget":
+            program.meta["peak_tcdm_bytes"]
+            <= program.meta["tcdm_budget_bytes"],
+        "lm_loss_first": losses[0],
+        "lm_loss_last": losses[-1],
+        "lm_loss_decreased": losses[-1] < losses[0],
+        "lm_fusion_coverage": fusion.coverage,
+        "lm_fused_regions": fusion.n_regions,
+        "lm_warm_step_wall_ms": min(res["walls"]) * 1e3,
+    }
 
 
 def _instrumentation_overhead(program, batch_fn, graph, params,
@@ -197,14 +254,20 @@ def _fused_vs_unfused(program, batch_fn, graph, params,
             walls.append(time.perf_counter() - t0)
         return min(walls) * 1e3
 
-    fused = best(dev_inputs, True)
-    unfused = best(host_inputs, False)
-    unfused_dev = best(dev_inputs, False)
+    # Two alternating passes per leg: CPU frequency scaling and scheduler
+    # noise hit sub-ms kernels hard, and a single unlucky window would skew
+    # the in-run ratio the fused_speedup floor gates on.
+    fused = unfused = unfused_dev = float("inf")
+    for _ in range(2):
+        fused = min(fused, best(dev_inputs, True))
+        unfused = min(unfused, best(host_inputs, False))
+        unfused_dev = min(unfused_dev, best(dev_inputs, False))
     return fused, unfused, unfused_dev / fused
 
 
 GATES = ("loss_decreased", "within_tcdm_budget",
-         "counters_match_closed_form")
+         "counters_match_closed_form",
+         "lm_loss_decreased", "lm_within_tcdm_budget")
 
 
 def write_json(rows, summary, wall_s,

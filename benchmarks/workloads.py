@@ -113,7 +113,7 @@ def pallas_graph(batch: int = 2) -> NetworkGraph:
     plan-cache benchmark/tests: ``lower_training_step`` turns it into one
     whole-step program, and repeated ``run_pallas`` calls must be
     retrace-free after warmup."""
-    return NetworkGraph.sequential(
+    return NetworkGraph.chain(
         "pallas_chain", batch, (16, 16, 3),
         [
             ("c1", Conv2dSpec(16, 16, 3, 3, 3, 8, padding=1)),       # 16x16x8
@@ -129,13 +129,32 @@ def pallas_graph(batch: int = 2) -> NetworkGraph:
     )
 
 
+def lm_graph(batch: int = 2, seq: int = 8, *, n_layers: int = 2,
+             d_model: int = 32, n_heads: int = 4, d_ff: int = 64,
+             vocab: int = 64, lr: float = 0.05) -> NetworkGraph:
+    """A tiny decoder-only transformer train-step graph — the LM analogue
+    of :func:`pallas_graph`. Built through
+    :meth:`NetworkGraph.from_model_config` so the benchmark exercises the
+    same DAG lowering (attention, layernorm, residual fan-out, embedding)
+    as ``launch/train.py --model`` and reports Table-2-style offload/cycle
+    counts for an LM step."""
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(
+        name="lm_bench", family="dense", n_layers=n_layers,
+        d_model=d_model, n_heads=n_heads, n_kv_heads=n_heads,
+        head_dim=d_model // n_heads, d_ff=d_ff, vocab_size=vocab,
+    )
+    return NetworkGraph.from_model_config(cfg, batch=batch, seq=seq, lr=lr)
+
+
 def _googlenet_graph(batch: int, lr: float, momentum: float) -> NetworkGraph:
     """A chained GoogLeNet trunk containing all four Table 2 rows verbatim
     (stem -> pool -> 3x3 -> pool -> 3x3 -> 1x1 -> strided 3x3 -> 1x1 ->
     pool -> fc), so whole-step programs reproduce the paper's per-layer
     offload counts block-for-block."""
     L = CONV_LAYERS["googlenet"]
-    return NetworkGraph.sequential(
+    return NetworkGraph.chain(
         "googlenet", batch, (224, 224, 3),
         [
             ("conv0", L[0]),                                  # Table 2 row 1
@@ -189,7 +208,7 @@ def network_graph(name: str, batch: int = 1, *, lr: float = 0.05,
         p += 1
     layers.append(("flat", "flatten"))
     layers.append(("fc", MatmulSpec(batch, 10, cur[0] * cur[1] * cur[2])))
-    return NetworkGraph.sequential(name, batch, in_shape, layers,
+    return NetworkGraph.chain(name, batch, in_shape, layers,
                                    lr=lr, momentum=momentum)
 
 # The paper's Table 2 GoogLeNet layers (label, spec) — the canonical rows

@@ -40,8 +40,9 @@ _OPS = (
     "mac", "vadd", "vmul", "vmax", "vmin", "relu", "copy", "memset", "argmax",
     # comparison / transcendental helpers of the PCS FPU (§2.3): the step
     # function and >= mask feed the ReLU / max-pool backward mask patterns,
-    # exp and reciprocal feed the softmax-cross-entropy gradient lowering.
-    "sign", "cmpge", "vexp", "vrecip",
+    # exp and reciprocal feed the softmax-cross-entropy gradient lowering,
+    # reciprocal-sqrt feeds the layernorm rstd lowering.
+    "sign", "cmpge", "vexp", "vrecip", "vrsqrt",
 )
 
 
@@ -199,6 +200,8 @@ def _execute_loops(cmd: NtxCommand, mem: np.ndarray, wide: bool) -> None:
                             acc = acc_dtype(np.exp(rd0))
                         elif cmd.opcode == "vrecip":
                             acc = acc_dtype(np.float32(1.0) / rd0)
+                        elif cmd.opcode == "vrsqrt":
+                            acc = acc_dtype(np.float32(1.0) / np.sqrt(rd0))
                         elif cmd.opcode == "copy":
                             acc = acc_dtype(rd0)
                         elif cmd.opcode == "memset":
@@ -293,6 +296,7 @@ _ELEMENTWISE = {
     "cmpge": lambda a, b: (a >= b).astype(np.float32),
     "vexp": lambda a, _: np.exp(a),
     "vrecip": lambda a, _: np.float32(1.0) / a,
+    "vrsqrt": lambda a, _: np.float32(1.0) / np.sqrt(a),
 }
 
 

@@ -40,6 +40,7 @@ from repro.lower.rules import (
     MatmulSpec,
     MaxPool2dSpec,
     ReluSpec,
+    SoftmaxXentSpec,
 )
 
 N_BUFFERS = 2  # double buffering, as in kernels.streaming / runtime.dma
@@ -201,6 +202,16 @@ def _stage_flow(region, env):
                 raise TypeError(f"no fused dW rule for {type(s).__name__}")
             partials[f"d_{st.param}"] = d
         elif st.pass_ == "dx":
+            if isinstance(s, SoftmaxXentSpec):
+                # softmax-CE loss gradient (softmax(z) - onehot) / B: rows
+                # are independent, so the batch-tile split is exact; the
+                # 1/B scale uses the spec's global batch, and the onehot
+                # labels arrive via the stage's param slot
+                z = env[st.in_edge]
+                env[f"d_{st.in_edge}"] = (
+                    jax.nn.softmax(z, axis=-1) - env[st.param]
+                ) / s.batch
+                continue
             g = env[f"d_{st.out_edge}"]
             if isinstance(s, Conv2dSpec):
                 dx = _conv_dx_tile(g, env[st.param], s)

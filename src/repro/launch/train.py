@@ -567,6 +567,229 @@ def run_ntx_cnn(steps: int, batch: int, img: int, *, n_clusters: int = 16,
     return res
 
 
+def _dag_oracle_loss(graph, p, x, onehot):
+    """Any DAG NetworkGraph in plain jax — the ``--check-grads`` oracle."""
+    from repro.lower import (
+        AttentionSpec,
+        EmbeddingSpec,
+        LayerNormSpec,
+        MatmulSpec,
+        PosEmbedSpec,
+        ReluSpec,
+        ResidualAddSpec,
+    )
+
+    acts = {graph.input_edge: x}
+    for node in graph.nodes:
+        s = node.spec
+        a = acts[node.in_edge]
+        if isinstance(s, (MatmulSpec, EmbeddingSpec)):
+            y = a @ p[node.param]
+        elif isinstance(s, ReluSpec):
+            y = jax.nn.relu(a)
+        elif isinstance(s, LayerNormSpec):
+            mu = jnp.mean(a, axis=-1, keepdims=True)
+            var = jnp.mean((a - mu) ** 2, axis=-1, keepdims=True)
+            w = p[node.param]
+            y = (a - mu) * jax.lax.rsqrt(var + s.eps) * w[0] + w[1]
+        elif isinstance(s, ResidualAddSpec):
+            y = a + acts[node.aux_edges[0]]
+        elif isinstance(s, PosEmbedSpec):
+            y = (a.reshape(s.batch, s.seq, s.d) + p[node.param][None])
+            y = y.reshape(-1, s.d)
+        elif isinstance(s, AttentionSpec):
+            D = s.d
+
+            def one(qkv, s=s, D=D):
+                def heads(m):
+                    return m.reshape(s.seq, s.n_heads, s.head_dim).transpose(1, 0, 2)
+
+                q, k, v = (heads(qkv[:, i * D:(i + 1) * D]) for i in range(3))
+                sc = jnp.einsum("hid,hjd->hij", q, k) * s.scale
+                mask = jnp.where(
+                    jnp.tril(jnp.ones((s.seq, s.seq), qkv.dtype)) > 0, 0.0, -1e9
+                )
+                pr = jax.nn.softmax(sc + mask[None], axis=-1)
+                ctx = jnp.einsum("hij,hjd->hid", pr, v)
+                return ctx.transpose(1, 0, 2).reshape(s.seq, D)
+
+            y = jax.vmap(one)(a.reshape(-1, s.seq, 3 * D)).reshape(-1, D)
+        else:  # pragma: no cover - new node types need an oracle rule
+            raise TypeError(type(s).__name__)
+        acts[node.out_edge] = y
+    z = acts[graph.logits_edge]
+    return -jnp.mean(jnp.sum(jax.nn.log_softmax(z) * onehot, axis=1))
+
+
+def run_ntx_lm(model: str, steps: int, batch: int, seq: int, *,
+               n_clusters: int = 16, lr: float = 0.05,
+               reduced: bool = True,
+               interpret: bool | None = None,
+               mesh: str | None = None,
+               shard: str = "1d",
+               metrics: str | None = None,
+               trace: str | None = None,
+               fuse: bool = True,
+               check_grads: bool = False) -> dict:
+    """The ``--backend ntx --model <config>`` mode: train a small
+    decoder-only transformer end-to-end, every step one compiled
+    :class:`repro.lower.NtxProgram`.
+
+    The named :class:`~repro.models.config.ModelConfig` (``repro.configs``
+    registry) is shrunk to smoke scale (``reduced``, the default) and built
+    into a DAG training graph by :meth:`NetworkGraph.from_model_config` —
+    embedding, learned positions, pre-LN attention + FFN blocks with
+    residual fan-out, final norm, tied-free head — then trained on the
+    synthetic next-token task of :func:`repro.lower.lm_token_batches`
+    through the same ``run_pallas`` plan-cache execution as the CNN path.
+    The block-engine timing run prints Table-2-style offload/command/cycle
+    counts for the LM step; with ``mesh="RxC"`` the step program shards
+    across the HMC mesh and :func:`repro.runtime.mesh.time_mesh_step`
+    reports the modeled mesh step alongside.
+
+    ``check_grads`` re-runs one step and verifies every ``d_<param>``
+    against ``jax.grad`` of the plain-jax graph oracle at fp32 tolerance —
+    the CI lm-train-smoke gate.
+    """
+    from contextlib import nullcontext
+
+    import numpy as np
+
+    from repro import obs
+    from repro.configs import get_config, reduce_config
+    from repro.lower import (
+        NetworkGraph,
+        PlanCache,
+        lm_token_batches,
+        lower_training_step,
+        run_pallas,
+        run_timing,
+        shard_training_step,
+        train_graph,
+    )
+    from repro.lower.executors import _cache_stats
+
+    cfg = get_config(model)
+    if reduced:
+        cfg = reduce_config(cfg)
+    else:
+        print(f"note: lowering the FULL {cfg.name} config — expect a very "
+              f"large program; --reduced is the smoke-scale path")
+    registry = obs.CounterRegistry() if (metrics or trace) else None
+    collector = obs.TraceCollector() if trace else None
+    reg_ctx = obs.use_registry(registry) if registry is not None else nullcontext()
+    col_ctx = obs.use_collector(collector) if collector is not None else nullcontext()
+    with reg_ctx, col_ctx:
+        graph = NetworkGraph.from_model_config(cfg, batch=batch, seq=seq, lr=lr)
+        program = lower_training_step(graph, n_clusters=n_clusters)
+        print(f"ntx LM train-step program ({graph.name}): "
+              f"{len(graph.nodes)} nodes -> {len(program.blocks)} blocks, "
+              f"{program.n_commands} commands, "
+              f"peak TCDM {program.meta['peak_tcdm_bytes']} / "
+              f"{program.meta['tcdm_budget_bytes']} B "
+              f"({len(program.meta['spilled'])} spilled)")
+        # Table-2-style step accounting from the timing engine
+        with obs.use_registry(None):
+            timed = run_timing(program, n_clusters=n_clusters, engine="block")
+        print(f"timing engine: {program.n_offloads} offloads, "
+              f"{program.n_commands} commands, "
+              f"{timed.total_cycles} cycles/step on {n_clusters} clusters")
+        sharded = None
+        if mesh is not None:
+            from repro.runtime.mesh import time_mesh_step
+
+            sharded = shard_training_step(graph, mesh_shape=mesh,
+                                          n_clusters=n_clusters,
+                                          program=program, shard=shard)
+            program = sharded.program
+            n_dev = jax.device_count()
+            how = ("shard_map data-parallel" if n_dev >= sharded.n_hmcs
+                   else f"single-device walk ({n_dev} jax device(s) "
+                        f"< {sharded.n_hmcs} HMCs)")
+            print(f"mesh {sharded.mesh_shape[0]}x{sharded.mesh_shape[1]}: "
+                  f"{sharded.n_hmcs} HMCs x {sharded.shard_batch} sequences, "
+                  f"{len(program.blocks)} blocks incl. allreduce epilogue; "
+                  f"executing via {how}")
+            tm = time_mesh_step(sharded, n_clusters=n_clusters)
+            print(f"modeled mesh step: shard {tm.t_shard*1e3:.3f} ms + "
+                  f"update {tm.t_update*1e3:.3f} ms "
+                  f"-> speedup {tm.speedup:.2f}, "
+                  f"parallel eff {tm.parallel_eff:.1%}")
+        batch_fn = lm_token_batches(np.random.RandomState(0), batch, seq,
+                                    cfg.vocab_size)
+        cache = PlanCache()
+        res = train_graph(graph, steps, batch_fn, program=program,
+                          backend="pallas", interpret=interpret,
+                          params=graph.init_params(seed=0),
+                          metrics_path=metrics, cache=cache, fuse=fuse)
+        if collector is not None:
+            if sharded is not None:
+                collector.add_mesh_step(sharded, n_clusters=n_clusters)
+            else:
+                with obs.use_registry(None):
+                    result = run_timing(program, n_clusters=n_clusters)
+                collector.add_cluster_lanes(
+                    program, result, n_clusters, pid="hmc0"
+                )
+                exec_evs = [e for e in collector.events
+                            if e.get("cat") == "exec"]
+                collector.link_flows(exec_evs, [])
+            print(f"merged Perfetto trace: {collector.save(trace)} "
+                  f"({len(collector.events)} events) — open in "
+                  "https://ui.perfetto.dev")
+    losses = res["losses"]
+    for i, (loss, w) in enumerate(zip(losses, res["walls"])):
+        print(f"step {i:5d} loss={loss:.4f} ({w*1e3:.0f} ms)", flush=True)
+    hits, misses, traces, calls = _cache_stats(cache)
+    print(f"plan cache: {len(cache)} plans, {traces} traces "
+          f"({hits} hits / {misses} misses over {calls} calls)")
+    fusion = next(
+        iter(program.meta.get("_fusion_plans", {}).values()), None
+    )
+    if fusion is not None:
+        print(f"fusion: {fusion.n_regions} regions + "
+              f"{len(fusion.fallback_steps)} fallback steps per step, "
+              f"coverage {fusion.coverage:.1%} "
+              f"({fusion.fused_commands}/{fusion.total_commands} commands) — "
+              f"token-row graphs fuse update epilogues only")
+    else:
+        print("fusion: disabled (--no-fuse) — per-node plan dispatch")
+    if check_grads:
+        x, labels = batch_fn(0)
+        eye = np.eye(cfg.vocab_size, dtype=np.float32)
+        onehot = eye[np.asarray(labels)]
+        params = graph.init_params(seed=0)
+        inputs = {graph.input_edge: x, graph.label_edge: onehot, **params}
+        outs = run_pallas(res["program"], inputs, cache=cache, fuse=fuse)
+        jp = {k: jnp.asarray(v) for k, v in params.items()}
+        grads = jax.grad(
+            lambda p: _dag_oracle_loss(graph, p, jnp.asarray(x),
+                                       jnp.asarray(onehot))
+        )(jp)
+        import numpy as _np
+
+        worst = 0.0
+        for p in graph.param_shapes():
+            got = _np.asarray(outs[f"d_{p}"])
+            want = _np.asarray(grads[p])
+            rel = float(_np.max(_np.abs(got - want))
+                        / (_np.max(_np.abs(want)) + 1e-12))
+            worst = max(worst, rel)
+            if not _np.allclose(got, want, rtol=1e-4, atol=1e-5):
+                raise SystemExit(
+                    f"gradient check FAILED for {p}: rel err {rel:.2e}"
+                )
+        print(f"gradient check vs jax.grad: {len(graph.param_shapes())} "
+              f"params OK (worst rel err {worst:.2e})")
+    if metrics:
+        print(f"per-step metrics JSONL: {metrics}")
+    if registry is not None:
+        print(obs.format_hotspots(registry))
+    print(f"done: {steps} LM ntx steps, loss "
+          f"{losses[0]:.4f} -> {losses[-1]:.4f}")
+    return res
+
+
 def _cli():
     import argparse
     import time
@@ -580,10 +803,22 @@ def _cli():
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", default="xla", choices=["xla", "ntx"],
                     help="xla: the LM training CLI below; ntx: train the "
-                         "paper's small CNN with one compiled NtxProgram "
-                         "per step (run_pallas graph execution)")
+                         "paper's small CNN — or, with --model, a small "
+                         "decoder-only transformer — with one compiled "
+                         "NtxProgram per step (run_pallas graph execution)")
     ap.add_argument("--img", type=int, default=16,
                     help="ntx backend: CNN input image size")
+    ap.add_argument("--model", default=None, metavar="ARCH",
+                    help="ntx backend: instead of the CNN, train a small "
+                         "decoder-only transformer built from this "
+                         "repro.configs ModelConfig name (e.g. "
+                         "qwen1_5_0_5b) via "
+                         "NetworkGraph.from_model_config; combine with "
+                         "--reduced for the smoke-scale config")
+    ap.add_argument("--check-grads", action="store_true",
+                    help="ntx --model: after training, re-run one step and "
+                         "verify every parameter gradient against jax.grad "
+                         "of the plain-jax graph oracle at fp32 tolerance")
     ap.add_argument("--mesh", default=None, metavar="RxC",
                     help="ntx backend: shard the train step across an RxC "
                          "mesh of HMCs (batch must divide evenly); executes "
@@ -644,6 +879,21 @@ def _cli():
 
     if args.backend == "ntx":
         validate_mesh_args(args.mesh, args.shard, args.batch)
+        if args.model is not None:
+            if args.chaos is not None:
+                raise SystemExit("--chaos is CNN-path only for now; "
+                                 "drop it or drop --model")
+            res = run_ntx_lm(args.model, args.steps, args.batch, args.seq,
+                             n_clusters=args.offload_clusters,
+                             lr=args.lr, reduced=args.reduced,
+                             mesh=args.mesh, shard=args.shard,
+                             metrics=args.metrics, trace=args.trace,
+                             fuse=not args.no_fuse,
+                             check_grads=args.check_grads)
+            if (len(res["losses"]) >= 3
+                    and not res["losses"][-1] < res["losses"][0]):
+                raise SystemExit("ntx LM training did not decrease the loss")
+            return
         res = run_ntx_cnn(args.steps, args.batch, args.img,
                           n_clusters=args.offload_clusters, mesh=args.mesh,
                           shard=args.shard,

@@ -49,7 +49,9 @@ from repro.lower.fuse import (
 from repro.lower.graph import (
     GraphNode,
     NetworkGraph,
+    edge_consumers,
     frequency_band_batches,
+    lm_token_batches,
     lower_training_step,
     paper_cnn_graph,
     softmax_xent_loss,
@@ -73,29 +75,39 @@ from repro.lower.ir import (
     TensorRegion,
 )
 from repro.lower.rules import (
+    AttentionSpec,
     BiasSpec,
     Conv2dSpec,
+    EmbeddingSpec,
     FlattenSpec,
+    LayerNormSpec,
     MatmulSpec,
     MaxPool2dSpec,
     PASSES,
+    PosEmbedSpec,
     ReluSpec,
+    ResidualAddSpec,
     SgdUpdateSpec,
     SoftmaxXentSpec,
     lower,
     lower_layer,
+    register_lowering,
+    supported_matrix,
 )
 
 __all__ = [
     "ELEM_BYTES",
+    "AttentionSpec",
     "BatchedSpec",
     "BiasSpec",
     "CommandBlock",
     "Conv2dSpec",
     "DesignPoint",
+    "EmbeddingSpec",
     "FlattenSpec",
     "FusionPlan",
     "GraphNode",
+    "LayerNormSpec",
     "LivenessAllocator",
     "MatmulSpec",
     "MaxPool2dSpec",
@@ -106,14 +118,18 @@ __all__ = [
     "PASSES",
     "PLAN_CACHE",
     "PlanCache",
+    "PosEmbedSpec",
     "RegionAllocator",
     "RegionSpec",
     "ReluSpec",
+    "ResidualAddSpec",
     "SgdUpdateSpec",
     "ShardedTrainStep",
     "SoftmaxXentSpec",
     "TensorRegion",
+    "edge_consumers",
     "frequency_band_batches",
+    "lm_token_batches",
     "parse_mesh",
     "plan_fusion",
     "reshard_training_step",
@@ -122,6 +138,8 @@ __all__ = [
     "lower_layer",
     "lower_training_step",
     "paper_cnn_graph",
+    "register_lowering",
     "softmax_xent_loss",
+    "supported_matrix",
     "train_graph",
 ]

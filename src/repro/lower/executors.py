@@ -32,12 +32,17 @@ from repro.lower.ir import NtxProgram
 from repro.obs import counters as obs
 from repro.obs import trace as obs_trace
 from repro.lower.rules import (
+    AttentionSpec,
     BiasSpec,
     Conv2dSpec,
+    EmbeddingSpec,
     FlattenSpec,
+    LayerNormSpec,
     MatmulSpec,
     MaxPool2dSpec,
+    PosEmbedSpec,
     ReluSpec,
+    ResidualAddSpec,
     SgdUpdateSpec,
     SoftmaxXentSpec,
 )
@@ -283,6 +288,89 @@ def _plan_callable(spec, pass_: str, interpret: bool):
                 return upd_mom
             return lambda j: {"w_new": j["w"] - lr * j["dw"]}
 
+    if isinstance(spec, AttentionSpec):
+        S, H, Dh = spec.seq, spec.n_heads, spec.head_dim
+        D = H * Dh
+
+        def attn_one(x):  # (S, 3D) qkv -> (S, D) context, causal
+            q = x[:, :D].reshape(S, H, Dh).transpose(1, 0, 2)
+            k = x[:, D:2 * D].reshape(S, H, Dh).transpose(1, 0, 2)
+            v = x[:, 2 * D:].reshape(S, H, Dh).transpose(1, 0, 2)
+            sc = jnp.einsum("hid,hjd->hij", q, k) * spec.scale
+            mask = jnp.where(
+                jnp.tril(jnp.ones((S, S), x.dtype)) > 0, 0.0, -1e9
+            )
+            p = jax.nn.softmax(sc + mask[None], axis=-1)
+            ctx = jnp.einsum("hij,hjd->hid", p, v)
+            return ctx.transpose(1, 0, 2).reshape(S, D)
+
+        if pass_ == "fwd":
+            return lambda j: {"y": attn_one(j["x"])}
+        if pass_ == "dx":
+
+            def attn_dx(j):
+                _, vjp = jax.vjp(attn_one, j["x"])
+                return {"dx": vjp(j["dy"])[0]}
+
+            return attn_dx
+
+    if isinstance(spec, LayerNormSpec):
+        eps = spec.eps
+
+        def ln_xhat(j):
+            mu = jnp.mean(j["x"], axis=-1, keepdims=True)
+            var = jnp.mean((j["x"] - mu) ** 2, axis=-1, keepdims=True)
+            return (j["x"] - mu) * jax.lax.rsqrt(var + eps)
+
+        if pass_ == "fwd":
+            return lambda j: {"y": ln_xhat(j) * j["w"][0] + j["w"][1]}
+        if pass_ == "dw":
+            return lambda j: {
+                "dw": jnp.stack(
+                    [(j["dy"] * ln_xhat(j)).sum(axis=0), j["dy"].sum(axis=0)]
+                )
+            }
+        if pass_ == "dx":
+
+            def ln_dx(j):
+                xhat = ln_xhat(j)
+                mu = jnp.mean(j["x"], axis=-1, keepdims=True)
+                var = jnp.mean((j["x"] - mu) ** 2, axis=-1, keepdims=True)
+                dyg = j["dy"] * j["w"][0]
+                m1 = jnp.mean(dyg, axis=-1, keepdims=True)
+                m2 = jnp.mean(dyg * xhat, axis=-1, keepdims=True)
+                return {
+                    "dx": (dyg - m1 - xhat * m2) * jax.lax.rsqrt(var + eps)
+                }
+
+            return ln_dx
+
+    if isinstance(spec, ResidualAddSpec):
+        if pass_ == "fwd":
+            return lambda j: {"y": j["x"] + j["x2"]}
+        if pass_ == "dx":
+            return lambda j: {"dx": j["dy"]}
+
+    if isinstance(spec, EmbeddingSpec):
+        if pass_ == "fwd":
+            return lambda j: {
+                "y": streaming.streaming_matmul(j["x"], j["w"],
+                                                interpret=interpret)
+            }
+        if pass_ == "dw":
+            return lambda j: {
+                "dw": streaming.streaming_matmul(j["x"].T, j["dy"],
+                                                 interpret=interpret)
+            }
+
+    if isinstance(spec, PosEmbedSpec):
+        if pass_ == "fwd":
+            return lambda j: {"y": j["x"] + j["w"][None]}
+        if pass_ == "dw":
+            return lambda j: {"dw": j["dy"].sum(axis=0)}
+        if pass_ == "dx":
+            return lambda j: {"dx": j["dy"]}
+
     if isinstance(spec, BatchedSpec):
         inner = _plan_callable(spec.spec, pass_, interpret)
 
@@ -469,7 +557,7 @@ def _graph_fingerprint(graph):
     """Hashable identity of everything a step callable bakes in."""
     return (
         tuple(
-            (n.name, n.spec, n.param, n.in_edge, n.out_edge)
+            (n.name, n.spec, n.param, n.in_edge, n.out_edge, n.aux_edges)
             for n in graph.nodes
         ),
         graph.loss,
@@ -659,6 +747,24 @@ def _graph_step_local(graph, j, plan, B, *, keep_grads=True,
             y = plan(bspec(s), "fwd")({"x": a})["y"]
         elif isinstance(s, FlattenSpec):
             y = a.reshape((B, s.size) if batched else (s.size,))
+        elif isinstance(s, AttentionSpec):
+            # per-sequence node over token-row activations (rows = B*S)
+            xb = a.reshape(-1, s.seq, 3 * s.d)
+            y = plan(BatchedSpec(s, xb.shape[0]), "fwd")({"x": xb})["y"]
+            y = y.reshape(-1, s.d)
+        elif isinstance(s, LayerNormSpec):
+            y = plan(s, "fwd")({"x": a, "w": j[node.param]})["y"]
+        elif isinstance(s, ResidualAddSpec):
+            y = plan(s, "fwd")(
+                {"x": a, "x2": acts[node.aux_edges[0]]}
+            )["y"]
+        elif isinstance(s, EmbeddingSpec):
+            y = plan(s, "fwd")({"x": a, "w": j[node.param]})["y"]
+        elif isinstance(s, PosEmbedSpec):
+            # -1, not s.batch: mesh shards walk with a local batch
+            xb = a.reshape(-1, s.seq, s.d)
+            y = plan(s, "fwd")({"x": xb, "w": j[node.param]})["y"]
+            y = y.reshape(-1, s.d)
         else:
             raise TypeError(f"no graph route for {type(s).__name__}")
         acts[node.out_edge] = y
@@ -666,14 +772,20 @@ def _graph_step_local(graph, j, plan, B, *, keep_grads=True,
     logits = acts[graph.logits_edge]
     outs = {graph.logits_edge: logits}
 
-    # loss gradient
-    g = plan(graph.loss, "dx")(
+    # loss gradient seeds the per-edge gradient map; DAG fan-out edges
+    # accumulate one contribution per consumer (matching the compiled
+    # program's partial + accumulate-step schedule)
+    grads = {graph.logits_edge: plan(graph.loss, "dx")(
         {"z": logits, "onehot": j[graph.label_edge]}
-    )["dz"]
+    )["dz"]}
+
+    def add_grad(edge, v):
+        grads[edge] = grads[edge] + v if edge in grads else v
 
     # backward: dW -> update -> dX per node, in reverse
     for node in reversed(graph.nodes):
         s, a_in = node.spec, acts[node.in_edge]
+        g = grads[node.out_edge]
         if node.param is not None:
             p = node.param
             if isinstance(s, Conv2dSpec):
@@ -683,6 +795,12 @@ def _graph_step_local(graph, j, plan, B, *, keep_grads=True,
                 dw = plan(s, "dw")({"a": a_in, "dy": g})["dw"]
             elif isinstance(s, BiasSpec):
                 dw = plan(s, "dw")({"dy": g.reshape(-1, s.c)})["db"]
+            elif isinstance(s, (LayerNormSpec, EmbeddingSpec)):
+                dw = plan(s, "dw")({"x": a_in, "dy": g})["dw"]
+            elif isinstance(s, PosEmbedSpec):
+                dw = plan(s, "dw")(
+                    {"dy": g.reshape(-1, s.seq, s.d)}
+                )["dw"]
             else:
                 raise TypeError(f"no dW route for {type(s).__name__}")
             dw = reduce(dw)
@@ -701,16 +819,35 @@ def _graph_step_local(graph, j, plan, B, *, keep_grads=True,
         if node.in_edge == graph.input_edge:
             continue
         if isinstance(s, Conv2dSpec):
-            g = plan(bspec(s), "dx")({"dy": g, "w": j[node.param]})["dx"]
+            gx = plan(bspec(s), "dx")({"dy": g, "w": j[node.param]})["dx"]
         elif isinstance(s, MatmulSpec):
-            g = plan(s, "dx")({"dy": g, "b": j[node.param]})["dx"]
+            gx = plan(s, "dx")({"dy": g, "b": j[node.param]})["dx"]
         elif isinstance(s, ReluSpec):
             whole = ReluSpec((B,) + tuple(s.shape)) if batched else s
-            g = plan(whole, "dx")({"x": a_in, "dy": g})["dx"]
+            gx = plan(whole, "dx")({"x": a_in, "dy": g})["dx"]
         elif isinstance(s, MaxPool2dSpec):
-            g = plan(bspec(s), "dx")({"x": a_in, "dy": g})["dx"]
+            gx = plan(bspec(s), "dx")({"x": a_in, "dy": g})["dx"]
+        elif isinstance(s, AttentionSpec):
+            xb = a_in.reshape(-1, s.seq, 3 * s.d)
+            gx = plan(BatchedSpec(s, xb.shape[0]), "dx")(
+                {"x": xb, "dy": g.reshape(-1, s.seq, s.d)}
+            )["dx"].reshape(a_in.shape)
+        elif isinstance(s, LayerNormSpec):
+            gx = plan(s, "dx")(
+                {"x": a_in, "w": j[node.param], "dy": g}
+            )["dx"]
+        elif isinstance(s, ResidualAddSpec):
+            gx = plan(s, "dx")({"dy": g})["dx"]
+            add_grad(node.aux_edges[0], gx)
+        elif isinstance(s, PosEmbedSpec):
+            gx = plan(s, "dx")(
+                {"dy": g.reshape(-1, s.seq, s.d)}
+            )["dx"].reshape(-1, s.d)
         elif isinstance(s, (FlattenSpec, BiasSpec)):
-            g = g.reshape(a_in.shape)
+            gx = g.reshape(a_in.shape)
+        else:
+            raise TypeError(f"no dX route for {type(s).__name__}")
+        add_grad(node.in_edge, gx)
     return outs
 
 
@@ -732,8 +869,18 @@ def _walk_fused(graph, j, plan, B, fusion, *, keep_grads, reduce, batched):
     def bspec(spec):
         return BatchedSpec(spec, B) if batched else spec
 
+    def add_grad(edge, v):
+        key = f"d_{edge}"
+        env[key] = env[key] + v if key in env else v
+
     def exec_step(key):
         name, pass_ = key.split(":")
+        if pass_ == "acc":
+            # fan-out accumulate: the jax walk sums contributions into
+            # d_<edge> as each consumer's dx lands, so by the time the
+            # compiled schedule reaches the acc step there is nothing
+            # left to do
+            return
         if name == "loss":
             env[f"d_{graph.logits_edge}"] = plan(graph.loss, "dx")(
                 {"z": env[graph.logits_edge], "onehot": j[graph.label_edge]}
@@ -758,6 +905,23 @@ def _walk_fused(graph, j, plan, B, fusion, *, keep_grads, reduce, batched):
                 y = plan(bspec(s), "fwd")({"x": a})["y"]
             elif isinstance(s, FlattenSpec):
                 y = a.reshape((B, s.size) if batched else (s.size,))
+            elif isinstance(s, AttentionSpec):
+                xb = a.reshape(-1, s.seq, 3 * s.d)
+                y = plan(BatchedSpec(s, xb.shape[0]), "fwd")({"x": xb})["y"]
+                y = y.reshape(-1, s.d)
+            elif isinstance(s, LayerNormSpec):
+                y = plan(s, "fwd")({"x": a, "w": j[node.param]})["y"]
+            elif isinstance(s, ResidualAddSpec):
+                y = plan(s, "fwd")(
+                    {"x": a, "x2": env[node.aux_edges[0]]}
+                )["y"]
+            elif isinstance(s, EmbeddingSpec):
+                y = plan(s, "fwd")({"x": a, "w": j[node.param]})["y"]
+            elif isinstance(s, PosEmbedSpec):
+                # -1, not s.batch: mesh shards walk with a local batch
+                xb = a.reshape(-1, s.seq, s.d)
+                y = plan(s, "fwd")({"x": xb, "w": j[node.param]})["y"]
+                y = y.reshape(-1, s.d)
             else:
                 raise TypeError(f"no graph route for {type(s).__name__}")
             env[node.out_edge] = y
@@ -772,6 +936,12 @@ def _walk_fused(graph, j, plan, B, fusion, *, keep_grads, reduce, batched):
                 dw = plan(s, "dw")({"a": env[node.in_edge], "dy": g})["dw"]
             elif isinstance(s, BiasSpec):
                 dw = plan(s, "dw")({"dy": g.reshape(-1, s.c)})["db"]
+            elif isinstance(s, (LayerNormSpec, EmbeddingSpec)):
+                dw = plan(s, "dw")({"x": env[node.in_edge], "dy": g})["dw"]
+            elif isinstance(s, PosEmbedSpec):
+                dw = plan(s, "dw")(
+                    {"dy": g.reshape(-1, s.seq, s.d)}
+                )["dw"]
             else:
                 raise TypeError(f"no dW route for {type(s).__name__}")
             dw = reduce(dw)
@@ -794,21 +964,41 @@ def _walk_fused(graph, j, plan, B, fusion, *, keep_grads, reduce, batched):
         else:  # dx
             g = env[f"d_{node.out_edge}"]
             if isinstance(s, Conv2dSpec):
-                g = plan(bspec(s), "dx")({"dy": g, "w": j[node.param]})["dx"]
+                gx = plan(bspec(s), "dx")({"dy": g, "w": j[node.param]})["dx"]
             elif isinstance(s, MatmulSpec):
-                g = plan(s, "dx")({"dy": g, "b": j[node.param]})["dx"]
+                gx = plan(s, "dx")({"dy": g, "b": j[node.param]})["dx"]
             elif isinstance(s, ReluSpec):
                 whole = ReluSpec((B,) + tuple(s.shape)) if batched else s
-                g = plan(whole, "dx")({"x": env[node.in_edge], "dy": g})["dx"]
-            elif isinstance(s, MaxPool2dSpec):
-                g = plan(bspec(s), "dx")(
+                gx = plan(whole, "dx")(
                     {"x": env[node.in_edge], "dy": g}
                 )["dx"]
+            elif isinstance(s, MaxPool2dSpec):
+                gx = plan(bspec(s), "dx")(
+                    {"x": env[node.in_edge], "dy": g}
+                )["dx"]
+            elif isinstance(s, AttentionSpec):
+                a_in = env[node.in_edge]
+                xb = a_in.reshape(-1, s.seq, 3 * s.d)
+                gx = plan(BatchedSpec(s, xb.shape[0]), "dx")(
+                    {"x": xb, "dy": g.reshape(-1, s.seq, s.d)}
+                )["dx"].reshape(a_in.shape)
+            elif isinstance(s, LayerNormSpec):
+                gx = plan(s, "dx")(
+                    {"x": env[node.in_edge], "w": j[node.param], "dy": g}
+                )["dx"]
+            elif isinstance(s, ResidualAddSpec):
+                gx = plan(s, "dx")({"dy": g})["dx"]
+                add_grad(node.aux_edges[0], gx)
+            elif isinstance(s, PosEmbedSpec):
+                gx = plan(s, "dx")(
+                    {"dy": g.reshape(-1, s.seq, s.d)}
+                )["dx"].reshape(-1, s.d)
             elif isinstance(s, FlattenSpec):
                 shape = tuple(s.in_shape)
-                g = g.reshape((B,) + shape if batched else shape)
-            # BiasSpec dx: shape-preserving passthrough
-            env[f"d_{node.in_edge}"] = g
+                gx = g.reshape((B,) + shape if batched else shape)
+            else:  # BiasSpec dx: shape-preserving passthrough
+                gx = g.reshape(env[node.in_edge].shape)
+            add_grad(node.in_edge, gx)
 
     for seg in fusion.segments:
         if seg.region is None:

@@ -19,10 +19,16 @@ software the same way is the hot-path fix.
     them (single-device path only — under a cross-shard gradient reduce the
     psum must run between dW and the update, so updates stay per-node).
 
-Steps with no fusion rule — the softmax-CE loss gradient, the maxpool-dX
-winner scatter, steps touching spilled regions — become per-node fallback
-:class:`Segment`s, so the fused walk stays numerically compatible with
-``run_reference`` on every graph.
+Steps with no fusion rule — the maxpool-dX winner scatter, steps touching
+spilled regions, the DAG fan-out accumulate steps — become per-node
+fallback :class:`Segment`s, so the fused walk stays numerically compatible
+with ``run_reference`` on every graph. The softmax-CE loss gradient
+``(softmax(z) - onehot) / B`` is row-independent and fuses like any other
+stage, stitching the forward head chain to the backward dW chain. LM/DAG
+graphs (attention, layernorm, residual fan-out) carry *token-row*
+activations — ``B*S`` rows, not ``B`` — which the batch-tile grid of the
+region kernel cannot stream correctly, so their activation passes all run
+as fallbacks; only the SGD update epilogues fuse there.
 
 Each region's intermediate edges stay resident in kernel scratch; only
 edges read by steps outside the region (or program outputs) escape. The
@@ -40,12 +46,17 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.lower.rules import (
+    AttentionSpec,
     BiasSpec,
     Conv2dSpec,
+    EmbeddingSpec,
     FlattenSpec,
+    LayerNormSpec,
     MatmulSpec,
     MaxPool2dSpec,
+    PosEmbedSpec,
     ReluSpec,
+    ResidualAddSpec,
 )
 
 
@@ -131,6 +142,9 @@ class FusionPlan:
 
 def step_schedule(graph, keep_grads: bool = True) -> list[str]:
     """The train-step step keys in schedule order (mirrors the lowering)."""
+    from repro.lower.graph import edge_consumers
+
+    consumers = edge_consumers(graph)
     keys = [f"{n.name}:fwd" for n in graph.nodes]
     keys.append("loss:dx")
     for node in reversed(graph.nodes):
@@ -140,6 +154,12 @@ def step_schedule(graph, keep_grads: bool = True) -> list[str]:
         if node.in_edge == graph.input_edge:
             continue
         keys.append(f"{node.name}:dx")
+        # fan-out accumulate fires once the forward-FIRST consumer (the
+        # last one visited in reverse) has produced its partial
+        for e in (node.in_edge, *node.aux_edges):
+            cs = consumers.get(e, ())
+            if len(cs) > 1 and cs[0] is node:
+                keys.append(f"{e}:acc")
     return keys
 
 
@@ -254,15 +274,37 @@ def plan_fusion(program, *, fuse_updates: bool = True) -> FusionPlan:
     for p in graph.param_shapes():
         unbatched |= {p, f"v_{p}", f"d_{p}", f"{p}_new", f"v_{p}_new"}
 
+    # LM/DAG graphs carry token-row activations (B*S rows): the region
+    # kernel's batch-tile grid would stream only the first B rows, so
+    # every activation pass falls back per-node there; SGD update
+    # epilogues carry no streamed edges and stay fusable
+    token_rows = any(
+        isinstance(
+            n.spec,
+            (AttentionSpec, LayerNormSpec, EmbeddingSpec, PosEmbedSpec,
+             ResidualAddSpec),
+        )
+        for n in graph.nodes
+    )
+
     # 1. classify every step: fusable or per-node fallback
     fusable: dict[str, bool] = {}
     for key in keys:
         name, pass_ = key.split(":")
         node = nodes.get(name)
         if name == "loss":
+            ok = not token_rows
+            if ok and _touches_spill(graph, None, "dx", spilled):
+                ok = False
+            fusable[key] = ok
+            continue
+        if node is None:
+            # fan-out accumulate steps ({edge}:acc) have no fusion rule
             fusable[key] = False
             continue
         ok = _fusable(node, pass_, fuse_updates=fuse_updates)
+        if ok and pass_ != "upd" and token_rows:
+            ok = False
         if ok and _touches_spill(graph, node, pass_, spilled):
             ok = False
         fusable[key] = ok
@@ -280,6 +322,18 @@ def plan_fusion(program, *, fuse_updates: bool = True) -> FusionPlan:
         stages = []
         for key in ks:
             name, pass_ = key.split(":")
+            if name == "loss":
+                stages.append(
+                    Stage(
+                        node="loss",
+                        pass_="dx",
+                        spec=graph.loss,
+                        in_edge=graph.logits_edge,
+                        out_edge=graph.logits_edge,
+                        param=graph.label_edge,
+                    )
+                )
+                continue
             node = nodes[name]
             stages.append(
                 Stage(
@@ -303,6 +357,11 @@ def plan_fusion(program, *, fuse_updates: bool = True) -> FusionPlan:
     io: dict[str, tuple[list[str], list[str]]] = {}
     for key in keys:
         name, pass_ = key.split(":")
+        if pass_ == "acc":
+            # no-op in the jax walk: consumers' dX steps already
+            # accumulated into d_<edge> as they landed
+            io[key] = ([], [])
+            continue
         node = nodes.get(name) if name != "loss" else None
         io[key] = _step_io(graph, node, pass_, fused=key_fused[key])
 

@@ -52,12 +52,17 @@ from repro.lower.ir import (
     TensorRegion,
 )
 from repro.lower.rules import (
+    AttentionSpec,
     BiasSpec,
     Conv2dSpec,
+    EmbeddingSpec,
     FlattenSpec,
+    LayerNormSpec,
     MatmulSpec,
     MaxPool2dSpec,
+    PosEmbedSpec,
     ReluSpec,
+    ResidualAddSpec,
     SgdUpdateSpec,
     SoftmaxXentSpec,
     lower,
@@ -70,7 +75,13 @@ from repro.lower.rules import (
 
 @dataclass(frozen=True)
 class GraphNode:
-    """One layer node: a spec plus its explicit tensor edges."""
+    """One layer node: a spec plus its explicit tensor edges.
+
+    ``aux_edges`` are extra input edges beyond ``in_edge`` — a residual-add
+    node reads its skip connection through one. Any edge consumed by more
+    than one node (fan-out in the DAG) gets its gradient accumulated from
+    per-consumer partials by the compiler.
+    """
 
     name: str
     spec: Any
@@ -79,6 +90,7 @@ class GraphNode:
     param: str | None = None  # parameter edge name (conv/matmul: w, bias: b)
     in_shape: tuple[int, ...] = ()  # per-image
     out_shape: tuple[int, ...] = ()
+    aux_edges: tuple[str, ...] = ()
 
 
 def _shape_after(spec, cur: tuple[int, ...]) -> tuple[int, ...]:
@@ -100,12 +112,40 @@ def _shape_after(spec, cur: tuple[int, ...]) -> tuple[int, ...]:
             raise ValueError(f"flatten expects {spec.in_shape}, got {cur}")
         return (spec.size,)
     if isinstance(spec, MatmulSpec):
-        if cur != (spec.k,):
-            raise ValueError(f"matmul expects ({spec.k},), got {cur}")
-        return (spec.n,)
+        # 1-D per-image (CNN head, m == batch) or 2-D per-image token rows
+        # (LM projections, m == batch * rows)
+        if cur == (spec.k,):
+            return (spec.n,)
+        if len(cur) == 2 and cur[-1] == spec.k:
+            return (cur[0], spec.n)
+        raise ValueError(f"matmul expects (.., {spec.k}), got {cur}")
     if isinstance(spec, BiasSpec):
         if cur[-1] != spec.c:
             raise ValueError(f"bias expects {spec.c} channels, got {cur}")
+        return cur
+    if isinstance(spec, AttentionSpec):
+        if cur != (spec.seq, 3 * spec.d):
+            raise ValueError(
+                f"attention expects {(spec.seq, 3 * spec.d)}, got {cur}"
+            )
+        return (spec.seq, spec.d)
+    if isinstance(spec, LayerNormSpec):
+        if not cur or cur[-1] != spec.d:
+            raise ValueError(f"layernorm expects last dim {spec.d}, got {cur}")
+        return cur
+    if isinstance(spec, ResidualAddSpec):
+        if math.prod(spec.shape) % math.prod(cur) != 0:
+            raise ValueError(f"residual shape {spec.shape} mismatches {cur}")
+        return cur
+    if isinstance(spec, EmbeddingSpec):
+        if not cur or cur[-1] != spec.vocab:
+            raise ValueError(
+                f"embedding expects one-hot last dim {spec.vocab}, got {cur}"
+            )
+        return cur[:-1] + (spec.d,)
+    if isinstance(spec, PosEmbedSpec):
+        if cur != (spec.seq, spec.d):
+            raise ValueError(f"posembed expects {(spec.seq, spec.d)}, got {cur}")
         return cur
     raise TypeError(f"no graph rule for {type(spec).__name__}")
 
@@ -117,6 +157,12 @@ def _param_shape(spec) -> tuple[int, ...] | None:
         return (spec.k, spec.n)
     if isinstance(spec, BiasSpec):
         return (spec.c,)
+    if isinstance(spec, LayerNormSpec):
+        return (2, spec.d)  # row 0 = gamma, row 1 = beta
+    if isinstance(spec, EmbeddingSpec):
+        return (spec.vocab, spec.d)
+    if isinstance(spec, PosEmbedSpec):
+        return (spec.seq, spec.d)
     return None
 
 
@@ -137,6 +183,34 @@ class NetworkGraph:
 
     @classmethod
     def sequential(
+        cls,
+        name: str,
+        batch: int,
+        input_shape: tuple[int, ...],
+        layers: Iterable[tuple[str, Any]],
+        *,
+        lr: float = 0.05,
+        momentum: float = 0.0,
+    ) -> "NetworkGraph":
+        """Deprecated alias of :meth:`chain` (the sequential-only builder).
+
+        The graph IR is a DAG now; use :meth:`chain` for linear stacks and
+        :meth:`from_model_config` for transformer LMs.
+        """
+        import warnings
+
+        warnings.warn(
+            "NetworkGraph.sequential is deprecated; use NetworkGraph.chain "
+            "(linear stacks) or NetworkGraph.from_model_config (LMs)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return cls.chain(
+            name, batch, input_shape, layers, lr=lr, momentum=momentum
+        )
+
+    @classmethod
+    def chain(
         cls,
         name: str,
         batch: int,
@@ -189,6 +263,78 @@ class NetworkGraph:
             lr=lr, momentum=momentum,
         )
 
+    @classmethod
+    def from_model_config(
+        cls,
+        cfg,
+        *,
+        batch: int = 2,
+        seq: int = 8,
+        lr: float = 0.05,
+        momentum: float = 0.0,
+    ) -> "NetworkGraph":
+        """Build a decoder-only transformer training DAG from a
+        :class:`repro.models.config.ModelConfig`.
+
+        Per token position the input is a one-hot row over the vocabulary
+        (the near-memory controller streams token indices as one-hot MAC
+        operands), so the input edge is ``(seq, vocab)`` per sequence and
+        the label edge is the next-token one-hot at ``(batch*seq, vocab)``.
+
+        The lowered family is the dense pre-LN block NTX speaks: embedding
+        + learned positions, then per layer LN → qkv matmul → causal MHA →
+        out-proj → residual, LN → FFN (relu) → residual, with a final LN
+        and vocab head. Config fields outside that family (RMS-vs-layer
+        norm, swiglu, GQA ``n_kv_heads``, MoE/SSM mixers) map onto it —
+        use :func:`repro.configs.reduce_config` plus ``cfg.with_(...)``
+        overrides for test-sized graphs.
+        """
+        V, d, F = cfg.vocab_size, cfg.d_model, cfg.d_ff
+        H = cfg.n_heads
+        Dh = cfg.head_dim or d // H
+        B, S = batch, seq
+        rows = B * S
+        eps = cfg.norm_eps
+        nodes: list[GraphNode] = []
+        edge, cur = cls.input_edge, (S, V)
+
+        def add(name, spec, *, aux: tuple[str, ...] = ()):
+            nonlocal edge, cur
+            nxt = _shape_after(spec, cur)
+            param = None
+            if _param_shape(spec) is not None:
+                param = f"w_{name}"
+            nodes.append(
+                GraphNode(
+                    name=name, spec=spec, in_edge=edge, out_edge=f"a_{name}",
+                    param=param, in_shape=cur, out_shape=nxt, aux_edges=aux,
+                )
+            )
+            edge, cur = f"a_{name}", nxt
+
+        add("emb", EmbeddingSpec(rows=rows, vocab=V, d=d))
+        add("pos", PosEmbedSpec(batch=B, seq=S, d=d))
+        for i in range(cfg.n_layers):
+            skip = edge
+            add(f"ln1_{i}", LayerNormSpec(rows, d, eps))
+            add(f"qkv_{i}", MatmulSpec(rows, 3 * H * Dh, d))
+            add(f"attn_{i}", AttentionSpec(S, H, Dh))
+            add(f"proj_{i}", MatmulSpec(rows, d, H * Dh))
+            add(f"res1_{i}", ResidualAddSpec((rows, d)), aux=(skip,))
+            skip = edge
+            add(f"ln2_{i}", LayerNormSpec(rows, d, eps))
+            add(f"fc1_{i}", MatmulSpec(rows, F, d))
+            add(f"relu_{i}", ReluSpec((S, F)))
+            add(f"fc2_{i}", MatmulSpec(rows, d, F))
+            add(f"res2_{i}", ResidualAddSpec((rows, d)), aux=(skip,))
+        add("lnf", LayerNormSpec(rows, d, eps))
+        add("head", MatmulSpec(rows, V, d))
+        return cls(
+            name=f"lm_{cfg.name}", batch=B, input_shape=(S, V), nodes=nodes,
+            loss=SoftmaxXentSpec(batch=rows, classes=V),
+            lr=lr, momentum=momentum,
+        )
+
     # -- conveniences -------------------------------------------------------
 
     @property
@@ -205,8 +351,14 @@ class NetworkGraph:
         """Parameter (and momentum-state) arrays keyed by region name."""
         rng = np.random.RandomState(seed)
         out: dict[str, np.ndarray] = {}
-        for pname, shape in self.param_shapes().items():
-            if pname.startswith("b_"):
+        for node in self.param_nodes():
+            pname = node.param
+            shape = _param_shape(node.spec)
+            if isinstance(node.spec, LayerNormSpec):
+                w = np.zeros(shape, np.float32)
+                w[0] = 1.0  # gamma row; beta row stays zero
+                out[pname] = w
+            elif pname.startswith("b_"):
                 out[pname] = np.zeros(shape, np.float32)
             else:
                 out[pname] = (rng.randn(*shape) * 0.1).astype(np.float32)
@@ -254,7 +406,11 @@ def _relocate_blocks(
             return new_r.base - old_r.base, step
 
         rd0_name = b.reads[0] if b.reads else b.writes[0]
-        rd1_name = b.reads[1] if len(b.reads) > 1 else None
+        # a single-region reads tuple with both read AGUs live means rd1
+        # streams the same region as rd0 (x*x squares, q·k within one qkv)
+        rd1_name = b.reads[1] if len(b.reads) > 1 else (
+            rd0_name if b.template.agu_rd1 is not None else None
+        )
         wr_name = b.writes[0] if b.writes else None
         d0, s0 = target(rd0_name)
         d1, s1 = target(rd1_name if b.template.agu_rd1 is not None else None)
@@ -368,6 +524,22 @@ def _grad(edge: str) -> str:
     return f"d_{edge}"
 
 
+def edge_consumers(graph: "NetworkGraph") -> dict[str, list[GraphNode]]:
+    """Forward-order consumer nodes per edge (``in_edge`` + ``aux_edges``).
+
+    Edges with more than one consumer are the DAG fan-out points: each
+    consumer's dX pass writes a private partial ``d_<edge>@<consumer>`` and
+    the compiler emits one accumulate step summing the partials into
+    ``d_<edge>`` after the last contribution (NTX blocks may not read and
+    write the same span, so in-place accumulation is not expressible).
+    """
+    out: dict[str, list[GraphNode]] = {}
+    for n in graph.nodes:
+        for e in (n.in_edge, *n.aux_edges):
+            out.setdefault(e, []).append(n)
+    return out
+
+
 def _plan_relocated(
     step: _Step,
     layer_prog: NtxProgram,
@@ -424,6 +596,25 @@ def lower_training_step(
     steps: list[_Step] = []
     param_edges = set(graph.param_shapes())
     static: set[str] = set(param_edges)
+    consumers = edge_consumers(graph)
+    producers = {n.out_edge: n for n in graph.nodes}
+
+    def grad_target(node: GraphNode, edge: str) -> str:
+        """Where this node's dX contribution to ``edge`` lands."""
+        if len(consumers.get(edge, ())) <= 1:
+            return _grad(edge)
+        return f"{_grad(edge)}@{node.name}"
+
+    def edge_size(edge: str) -> int:
+        if edge == graph.input_edge:
+            return B * math.prod(graph.input_shape)
+        return B * math.prod(producers[edge].out_shape)
+
+    def scratch_rename(prog, rename: dict[str, str], prefix: str):
+        for rn in prog.regions:
+            if rn not in rename:
+                rename[rn] = f"{prefix}.{rn}"
+        return rename
 
     kinds_base: dict[str, str] = {
         graph.input_edge: "input",
@@ -496,6 +687,38 @@ def lower_training_step(
                  kinds_base.get(node.out_edge, "scratch"))
             )
             steps.append(step)
+        elif isinstance(s, AttentionSpec):
+            prog = lower(s, "fwd", design=design)
+            rename = scratch_rename(
+                prog, {"x": node.in_edge, "y": node.out_edge},
+                f"{node.name}.fwd",
+            )
+            static.add(f"{node.name}.fwd.mask")
+            static.add(f"{node.name}.fwd.consts")
+            relocated_step(f"{node.name}:fwd", s, "fwd", rename,
+                           batched=True, prog=prog)
+        elif isinstance(s, LayerNormSpec):
+            prog = lower(s, "fwd", design=design)
+            rename = scratch_rename(
+                prog,
+                {"x": node.in_edge, "w": node.param, "y": node.out_edge},
+                f"{node.name}.fwd",
+            )
+            relocated_step(f"{node.name}:fwd", s, "fwd", rename,
+                           batched=False, prog=prog)
+        elif isinstance(s, ResidualAddSpec):
+            relocated_step(
+                f"{node.name}:fwd", s, "fwd",
+                {"x": node.in_edge, "x2": node.aux_edges[0],
+                 "y": node.out_edge},
+                batched=False,
+            )
+        elif isinstance(s, (EmbeddingSpec, PosEmbedSpec)):
+            relocated_step(
+                f"{node.name}:fwd", s, "fwd",
+                {"x": node.in_edge, "w": node.param, "y": node.out_edge},
+                batched=False,
+            )
         else:
             raise TypeError(f"no graph lowering for {type(s).__name__}")
 
@@ -511,7 +734,7 @@ def lower_training_step(
     for node in reversed(graph.nodes):
         s = node.spec
         g_out = _grad(node.out_edge)
-        g_in = _grad(node.in_edge)
+        g_in = grad_target(node, node.in_edge)
         is_first = node.in_edge == graph.input_edge
 
         # dW + the update
@@ -559,6 +782,28 @@ def lower_training_step(
                     {"dy": g_out, "one": f"{node.name}.one", "db": _grad(p)},
                     batched=False,
                 )
+            elif isinstance(s, LayerNormSpec):
+                prog = lower(s, "dw", design=design)
+                rename = scratch_rename(
+                    prog,
+                    {"x": node.in_edge, "dy": g_out, "dw": _grad(p)},
+                    f"{node.name}.dw",
+                )
+                relocated_step(f"{node.name}:dw", s, "dw", rename,
+                               batched=False, prog=prog)
+            elif isinstance(s, EmbeddingSpec):
+                relocated_step(
+                    f"{node.name}:dw", s, "dw",
+                    {"x": node.in_edge, "dy": g_out, "dw": _grad(p)},
+                    batched=False,
+                )
+            elif isinstance(s, PosEmbedSpec):
+                relocated_step(
+                    f"{node.name}:dw", s, "dw",
+                    {"dy": g_out, "one": f"{node.name}.dw.one",
+                     "dw": _grad(p)},
+                    batched=False,
+                )
 
             # the SGD(+momentum) update, right after dW so the gradient's
             # liveness ends here unless the caller keeps it as an output
@@ -595,9 +840,7 @@ def lower_training_step(
         if isinstance(s, Conv2dSpec):
             rename = {"dy": g_out, "w": node.param, "dx": g_in}
             dx_prog = lower(s, "dx", design=design)
-            for rn in dx_prog.regions:
-                if rn not in rename:
-                    rename[rn] = f"{node.name}.dx.{rn}"
+            scratch_rename(dx_prog, rename, f"{node.name}.dx")
             relocated_step(f"{node.name}:dx", s, "dx", rename, batched=True,
                            prog=dx_prog)
         elif isinstance(s, MatmulSpec):
@@ -621,17 +864,112 @@ def lower_training_step(
                  "mask": f"{node.name}.mask", "dx": g_in},
                 batched=True,
             )
-        elif isinstance(s, (FlattenSpec, BiasSpec)):
-            # pure views backward: d_in aliases d_out with the input's shape
+        elif isinstance(s, AttentionSpec):
+            dx_prog = lower(s, "dx", design=design)
+            rename = {"x": node.in_edge, "dy": g_out, "dx": g_in}
+            scratch_rename(dx_prog, rename, f"{node.name}.dx")
+            static.add(f"{node.name}.dx.mask")
+            static.add(f"{node.name}.dx.consts")
+            relocated_step(f"{node.name}:dx", s, "dx", rename, batched=True,
+                           prog=dx_prog)
+        elif isinstance(s, LayerNormSpec):
+            dx_prog = lower(s, "dx", design=design)
+            rename = {"x": node.in_edge, "w": node.param, "dy": g_out,
+                      "dx": g_in}
+            scratch_rename(dx_prog, rename, f"{node.name}.dx")
+            relocated_step(f"{node.name}:dx", s, "dx", rename, batched=False,
+                           prog=dx_prog)
+        elif isinstance(s, ResidualAddSpec):
+            # one step, two identity-copy relocations: the upstream grad
+            # flows unchanged into BOTH the main and the skip branch
+            t_main = g_in
+            t_aux = grad_target(node, node.aux_edges[0])
+            dx_prog = lower(s, "dx", design=design)
             step = _Step(key=f"{node.name}:dx")
-            step.touch(g_out)
-            in_shape = ((B,) + node.in_shape) if B > 1 else node.in_shape
-            if isinstance(s, BiasSpec):
-                in_shape = (s.rows, s.c)
-            step.aliases.append(
-                (g_in, g_out, in_shape, kinds_base.get(g_in, "scratch"))
-            )
+            step.touch(g_out, dx_prog.regions["dy"].shape,
+                       kinds_base.get(g_out, "scratch"))
+            for t in (t_main, t_aux):
+                step.touch(t, dx_prog.regions["dx"].shape,
+                           kinds_base.get(t, "scratch"))
+
+            def emit_res_dx(regions, _prog=dx_prog, _g=g_out,
+                            _targets=(t_main, t_aux),
+                            _key=f"{node.name}:dx"):
+                blocks: list[CommandBlock] = []
+                for dst in _targets:
+                    rename = {"dy": _g, "dx": dst}
+                    blocks.extend(_relocate_blocks(
+                        _prog, rename, regions, set(rename.values()), 1,
+                        _key,
+                    ))
+                return blocks
+
+            step.emit = emit_res_dx
             steps.append(step)
+        elif isinstance(s, PosEmbedSpec):
+            relocated_step(
+                f"{node.name}:dx", s, "dx",
+                {"dy": g_out, "dx": g_in},
+                batched=False,
+            )
+        elif isinstance(s, (FlattenSpec, BiasSpec)):
+            if len(consumers[node.in_edge]) > 1:
+                # the alias trick can't feed a partial sum — identity-copy
+                # the grad into this consumer's private partial instead
+                relocated_step(
+                    f"{node.name}:dx",
+                    ResidualAddSpec((edge_size(node.in_edge),)), "dx",
+                    {"dy": g_out, "dx": g_in},
+                    batched=False,
+                )
+            else:
+                # pure views backward: d_in aliases d_out, input's shape
+                step = _Step(key=f"{node.name}:dx")
+                step.touch(g_out)
+                in_shape = ((B,) + node.in_shape) if B > 1 else node.in_shape
+                if isinstance(s, BiasSpec):
+                    in_shape = (s.rows, s.c)
+                step.aliases.append(
+                    (g_in, g_out, in_shape, kinds_base.get(g_in, "scratch"))
+                )
+                steps.append(step)
+        else:
+            raise TypeError(f"no dX graph lowering for {type(s).__name__}")
+
+        # fan-out edges: once the forward-FIRST consumer (processed last
+        # here) has contributed, sum the per-consumer partials into d_<e>
+        for e in (node.in_edge, *node.aux_edges):
+            cs = consumers[e]
+            if len(cs) <= 1 or cs[0] is not node:
+                continue
+            size = edge_size(e)
+            parts = [f"{_grad(e)}@{c.name}" for c in cs]
+            acc = _Step(key=f"{e}:acc")
+            for pn in parts:
+                acc.touch(pn)
+            chain: list[tuple[str, str, str]] = []
+            cur = parts[0]
+            for i, nxt in enumerate(parts[1:]):
+                dst = (_grad(e) if i == len(parts) - 2
+                       else f"{_grad(e)}.acc{i}")
+                acc.touch(dst, (size,), kinds_base.get(dst, "scratch"))
+                chain.append((cur, nxt, dst))
+                cur = dst
+            add_prog = lower(ResidualAddSpec((size,)), "fwd", design=design)
+
+            def emit_acc(regions, _chain=tuple(chain), _prog=add_prog,
+                         _key=f"{e}:acc"):
+                blocks: list[CommandBlock] = []
+                for a, b2, dst in _chain:
+                    rename = {"x": a, "x2": b2, "y": dst}
+                    blocks.extend(_relocate_blocks(
+                        _prog, rename, regions, set(rename.values()), 1,
+                        _key,
+                    ))
+                return blocks
+
+            acc.emit = emit_acc
+            steps.append(acc)
 
     return _assemble(graph, steps, design, n_clusters, keep_grads)
 
@@ -783,7 +1121,7 @@ def paper_cnn_graph(
     h1 = (img + 2 * 2 - 5) // 2 + 1  # conv1: 5x5 stride 2 pad 2
     h2 = (h1 + 2 * 1 - 3) // 2 + 1  # conv2: 3x3 stride 2 pad 1
     h3 = h2 // 2  # maxpool 2x2
-    return NetworkGraph.sequential(
+    return NetworkGraph.chain(
         "paper_cnn", batch, (img, img, 3),
         [
             ("c1", Conv2dSpec(img, img, 3, 5, 5, 16, stride=2, padding=2)),
@@ -815,6 +1153,25 @@ def frequency_band_batches(
         ])[..., None].repeat(3, axis=-1)
         imgs += rng.randn(*imgs.shape) * 0.1
         return imgs.astype(np.float32), y
+
+    return batch_fn
+
+
+def lm_token_batches(
+    rng: np.random.RandomState, batch: int, seq: int, vocab: int
+) -> Callable[[int], tuple[np.ndarray, np.ndarray]]:
+    """Synthetic next-token task for the LM train-step drivers: every
+    position's target is a fixed affine remap of its input token, so the
+    mapping is learnable by embedding + head alone and a few SGD steps
+    visibly reduce the CE loss. Returns ``batch_fn(step) -> (one-hot
+    tokens (B*S, V) float32, target ids (B*S,) int)`` — the token-row
+    layout :meth:`NetworkGraph.from_model_config` graphs consume."""
+    eye = np.eye(vocab, dtype=np.float32)
+
+    def batch_fn(_step):
+        tok = rng.randint(0, vocab, batch * seq)
+        nxt = (tok * 3 + 1) % vocab
+        return eye[tok], nxt
 
     return batch_fn
 

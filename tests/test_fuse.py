@@ -94,19 +94,18 @@ def test_paper_cnn_fusion_plan_shape():
     graph = paper_cnn_graph(batch=4, img=16)
     program = lower_training_step(graph)
     fusion = plan_fusion(program)
-    # whole forward chain + whole backward chain; only softmax-CE falls back
-    assert fusion.n_regions == 2
-    assert fusion.fallback_steps == ["loss:dx"]
-    assert fusion.coverage >= 0.8
-    labels = [
-        seg.region.label for seg in fusion.segments if seg.region is not None
-    ]
-    assert labels[0].startswith("fused[c1:fwd..")
-    # intermediates stay in scratch: the forward region only outputs what
-    # the backward reads (relu masks / pool+flatten inputs / logits)
-    fwd = next(s.region for s in fusion.segments if s.region is not None)
-    out_names = {n for n, _ in fwd.outputs}
+    # the fused softmax-CE gradient stitches the forward chain to the
+    # backward chain: the whole train step is ONE region, zero fallbacks
+    assert fusion.n_regions == 1
+    assert fusion.fallback_steps == []
+    assert fusion.coverage >= 0.9
+    region = next(s.region for s in fusion.segments if s.region is not None)
+    assert region.label.startswith("fused[c1:fwd..")
+    assert any(st.node == "loss" and st.pass_ == "dx" for st in region.stages)
+    # intermediates stay in scratch: only program outputs escape
+    out_names = {n for n, _ in region.outputs}
     assert "a_c1" not in out_names and "a_c2" not in out_names
+    assert f"d_{graph.logits_edge}" not in out_names
 
 
 def test_fusion_plan_disables_update_fusion_for_mesh_shards():

@@ -12,8 +12,16 @@ import numpy as np
 import pytest
 
 from repro.lower import (
+    AttentionSpec,
+    EmbeddingSpec,
+    LayerNormSpec,
     LivenessAllocator,
     NS_DESIGN,
+    NetworkGraph,
+    PosEmbedSpec,
+    ResidualAddSpec,
+    edge_consumers,
+    lower,
     lower_training_step,
     paper_cnn_graph,
     run_reference,
@@ -218,6 +226,205 @@ def test_allocator_spills_over_budget_and_execution_is_identical():
     b = run_reference(tiny, inputs)
     for k in a:
         np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Transformer node lowerings: per-node oracle round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_attention_matches_jax_vjp():
+    S, H, Dh = 6, 2, 4
+    D = H * Dh
+    spec = AttentionSpec(S, H, Dh)
+    rng = np.random.RandomState(5)
+    qkv = rng.randn(S, 3 * D).astype(np.float32)
+
+    def oracle(qkv):
+        def heads(m):
+            return m.reshape(S, H, Dh).transpose(1, 0, 2)
+
+        q, k, v = (heads(qkv[:, i * D:(i + 1) * D]) for i in range(3))
+        sc = jnp.einsum("hid,hjd->hij", q, k) * (Dh ** -0.5)
+        mask = jnp.where(jnp.tril(jnp.ones((S, S))) > 0, 0.0, -1e9)
+        pr = jax.nn.softmax(sc + mask[None], axis=-1)
+        return jnp.einsum("hij,hjd->hid", pr, v).transpose(1, 0, 2).reshape(S, D)
+
+    outs = run_reference(lower(spec, "fwd"), {"x": qkv})
+    want_y, vjp = jax.vjp(oracle, jnp.asarray(qkv))
+    np.testing.assert_allclose(
+        outs["y"], np.asarray(want_y), rtol=1e-4, atol=1e-5
+    )
+    dctx = rng.randn(S, D).astype(np.float32)
+    outs = run_reference(lower(spec, "dx"), {"x": qkv, "dy": dctx})
+    np.testing.assert_allclose(
+        outs["dx"], np.asarray(vjp(jnp.asarray(dctx))[0]),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_layernorm_matches_jax_vjp():
+    rows, d, eps = 10, 8, 1e-5
+    spec = LayerNormSpec(rows, d, eps)
+    rng = np.random.RandomState(6)
+    x = rng.randn(rows, d).astype(np.float32)
+    w = rng.randn(2, d).astype(np.float32)  # row0=gamma, row1=beta
+
+    def oracle(x, w):
+        mu = jnp.mean(x, axis=1, keepdims=True)
+        var = jnp.mean((x - mu) ** 2, axis=1, keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(var + eps) * w[0] + w[1]
+
+    want_y, vjp = jax.vjp(oracle, jnp.asarray(x), jnp.asarray(w))
+    outs = run_reference(lower(spec, "fwd"), {"x": x, "w": w})
+    np.testing.assert_allclose(
+        outs["y"], np.asarray(want_y), rtol=1e-4, atol=1e-5
+    )
+    dy = rng.randn(rows, d).astype(np.float32)
+    want_dx, want_dw = vjp(jnp.asarray(dy))
+    outs = run_reference(lower(spec, "dw"), {"x": x, "dy": dy})
+    np.testing.assert_allclose(
+        outs["dw"], np.asarray(want_dw), rtol=1e-4, atol=1e-5
+    )
+    outs = run_reference(lower(spec, "dx"), {"x": x, "w": w, "dy": dy})
+    np.testing.assert_allclose(
+        outs["dx"], np.asarray(want_dx), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_residual_embedding_posembed_match_oracles():
+    rng = np.random.RandomState(7)
+    a = rng.randn(5, 7).astype(np.float32)
+    b = rng.randn(5, 7).astype(np.float32)
+    rs = ResidualAddSpec((5, 7))
+    np.testing.assert_allclose(
+        run_reference(lower(rs, "fwd"), {"x": a, "x2": b})["y"], a + b,
+        rtol=1e-6,
+    )
+    # d(x + x2)/dx is the identity on both inputs
+    np.testing.assert_allclose(
+        run_reference(lower(rs, "dx"), {"dy": a})["dx"], a, rtol=1e-6
+    )
+
+    emb = EmbeddingSpec(rows=6, vocab=11, d=5)
+    oh = np.eye(11, dtype=np.float32)[rng.randint(0, 11, 6)]
+    W = rng.randn(11, 5).astype(np.float32)
+    np.testing.assert_allclose(
+        run_reference(lower(emb, "fwd"), {"x": oh, "w": W})["y"], oh @ W,
+        rtol=1e-4, atol=1e-5,
+    )
+    dy = rng.randn(6, 5).astype(np.float32)
+    np.testing.assert_allclose(
+        run_reference(lower(emb, "dw"), {"x": oh, "dy": dy})["dw"],
+        oh.T @ dy, rtol=1e-4, atol=1e-5,
+    )
+
+    pe = PosEmbedSpec(batch=3, seq=4, d=5)
+    x3 = rng.randn(3, 4, 5).astype(np.float32)
+    P = rng.randn(4, 5).astype(np.float32)
+    np.testing.assert_allclose(
+        run_reference(lower(pe, "fwd"), {"x": x3, "w": P})["y"],
+        x3 + P[None], rtol=1e-5,
+    )
+    dy3 = rng.randn(3, 4, 5).astype(np.float32)
+    np.testing.assert_allclose(
+        run_reference(lower(pe, "dw"), {"dy": dy3})["dw"], dy3.sum(0),
+        rtol=1e-4, atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        run_reference(lower(pe, "dx"), {"dy": dy3})["dx"], dy3, rtol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# The DAG compiler: tiny transformer vs jax.grad, branching liveness
+# ---------------------------------------------------------------------------
+
+
+def _tiny_lm(batch=2, seq=6, n_layers=2):
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(
+        name="tiny", family="dense", n_layers=n_layers, d_model=16,
+        n_heads=2, n_kv_heads=2, head_dim=8, d_ff=32, vocab_size=13,
+    )
+    return NetworkGraph.from_model_config(cfg, batch=batch, seq=seq, lr=0.05)
+
+
+def test_lm_train_step_gradients_match_jax_grad():
+    from repro.launch.train import _dag_oracle_loss
+
+    graph = _tiny_lm()
+    prog = lower_training_step(graph)
+    params = graph.init_params(seed=1)
+    rng = np.random.RandomState(8)
+    V = graph.loss.classes
+    eye = np.eye(V, dtype=np.float32)
+    x = eye[rng.randint(0, V, graph.loss.batch)]
+    onehot = eye[rng.randint(0, V, graph.loss.batch)]
+    outs = run_reference(
+        prog, {graph.input_edge: x, graph.label_edge: onehot, **params}
+    )
+
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
+    grads = jax.grad(
+        lambda p: _dag_oracle_loss(graph, p, jnp.asarray(x),
+                                   jnp.asarray(onehot))
+    )(jp)
+    for p in graph.param_shapes():
+        g = np.asarray(grads[p])
+        np.testing.assert_allclose(
+            outs[f"d_{p}"], g, rtol=1e-4, atol=1e-5, err_msg=p
+        )
+        np.testing.assert_allclose(
+            outs[f"{p}_new"], params[p] - graph.lr * g,
+            rtol=1e-4, atol=1e-5, err_msg=p,
+        )
+
+
+def test_lm_dag_liveness_and_gradient_accumulation():
+    graph = _tiny_lm(n_layers=1)
+    prog = lower_training_step(graph)
+
+    # residual fan-out: the skip edges feed both a layernorm and an add
+    multi = {e: [n.name for n in ns]
+             for e, ns in edge_consumers(graph).items() if len(ns) > 1}
+    assert multi, "expected residual fan-out edges"
+    for e, names in multi.items():
+        assert len(names) == 2, (e, names)
+    # ... and each fan-out edge gets an explicit partial-accumulation step
+    acc_tags = {b.tag for b in prog.blocks if ":acc:" in b.tag}
+    assert {t.split(":")[0] for t in acc_tags} == set(multi)
+
+    # the liveness allocator invariants must survive branching lifetimes
+    assert prog.meta["peak_tcdm_bytes"] <= prog.meta["tcdm_budget_bytes"]
+    seen_bases, bump = set(), 0
+    for r in prog.regions.values():
+        if r.base not in seen_bases:
+            seen_bases.add(r.base)
+            bump += r.bytes
+    assert prog.meta["peak_tcdm_bytes"] < bump
+    intervals, regions = prog.meta["intervals"], prog.regions
+    names = list(intervals)
+    for i, a in enumerate(names):
+        ra, (sa, ea) = regions[a], intervals[a]
+        for b in names[i + 1:]:
+            rb, (sb, eb) = regions[b], intervals[b]
+            if not (ea < sb or eb < sa):  # live at the same time
+                assert (ra.end <= rb.base or rb.end <= ra.base
+                        or (ra.base == rb.base and ra.size == rb.size)), (
+                    f"{a} aliases {b}"
+                )
+
+
+def test_sequential_is_deprecated_alias_of_chain():
+    from repro.lower.rules import FlattenSpec, MatmulSpec
+
+    layers = [("flat", "flatten"), ("fc", MatmulSpec(2, 10, 12))]
+    with pytest.warns(DeprecationWarning, match="from_model_config"):
+        old = NetworkGraph.sequential("t", 2, (3, 4), layers)
+    new = NetworkGraph.chain("t", 2, (3, 4), layers)
+    assert old == new
 
 
 def test_liveness_allocator_unit():

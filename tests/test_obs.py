@@ -259,11 +259,17 @@ def test_merged_trace_has_all_lanes_and_flows(tmp_path):
 
 def test_dispatch_spans_recorded_by_pallas_executor():
     graph, prog, inputs = _graph_and_inputs()
+    # fused default: the whole step (loss gradient included) is one region,
+    # so the walk records region spans instead of per-node dispatch spans
     col = obs.TraceCollector()
     with obs.use_collector(col):
         run_pallas(prog, inputs, cache=PlanCache())
-    cats = {e.get("cat") for e in col.events}
-    assert "dispatch" in cats
+    assert "fused" in {e.get("cat") for e in col.events}
+    # the per-node escape hatch still emits one dispatch span per step
+    col = obs.TraceCollector()
+    with obs.use_collector(col):
+        run_pallas(prog, inputs, cache=PlanCache(), fuse=False)
+    assert "dispatch" in {e.get("cat") for e in col.events}
 
 
 def test_block_spans_cover_commands():

@@ -129,7 +129,7 @@ def test_graph_program_no_retrace_and_matches_reference():
 
 def test_matmul_graph_through_plan_cache():
     rng = np.random.RandomState(5)
-    graph = NetworkGraph.sequential(
+    graph = NetworkGraph.chain(
         "mlp", 6, (8,),
         [("l1", MatmulSpec(6, 10, 8)), ("r1", "relu"),
          ("l2", MatmulSpec(6, 4, 10))],
